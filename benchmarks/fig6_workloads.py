@@ -1,0 +1,56 @@
+"""Fig. 6 reproduction: DiP vs TPU-like (WS) 64x64 on transformer MHA/FFN
+GEMMs — cycle-accurate tile scheduling over the paper's nine-model workload
+grid, reporting actual latency and energy per workload plus the improvement
+envelopes the paper quotes (energy 1.25x-1.81x, latency 1.03x-1.49x).
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import energy, tilesim, workloads
+
+
+def run(csv_rows):
+    t0 = time.perf_counter()
+    print("\n== Fig. 6: transformer workloads on 64x64 arrays ==")
+    lat_ratios, en_ratios = [], []
+    examples = []
+    for model, seq, wl in workloads.paper_workload_grid():
+        d = tilesim.schedule_gemm(wl, "dip")
+        w = tilesim.schedule_gemm(wl, "ws")
+        lr = w.cycles / d.cycles
+        er = energy.workload_energy_j(w.cycles, "ws") / energy.workload_energy_j(
+            d.cycles, "dip"
+        )
+        lat_ratios.append(lr)
+        en_ratios.append(er)
+        if seq == 64 and wl.name.startswith(("mha_scores", "ffn_w1")):
+            examples.append((model, wl, d, w, lr, er))
+
+    print(f"workloads evaluated: {len(lat_ratios)} "
+          f"(9 models x {len(workloads.PAPER_SEQ_LENS)} seq lens x 6 GEMMs)")
+    print(f"latency improvement: min {min(lat_ratios):.3f}x  max {max(lat_ratios):.3f}x "
+          f"(paper: 1.03x..1.49x)")
+    print(f"energy  improvement: min {min(en_ratios):.3f}x  max {max(en_ratios):.3f}x "
+          f"(paper: 1.25x..1.81x)")
+
+    print("\nsample rows (M-N-K | DiP cycles | WS cycles | lat x | energy x | DiP util):")
+    for model, wl, d, w, lr, er in examples[:6]:
+        print(f"  {model:>14s} {wl.m}x{wl.n_inner}x{wl.k:<6} {d.cycles:>9} "
+              f"{w.cycles:>9} {lr:>6.3f} {er:>6.3f} {d.utilization:>6.3f}")
+
+    # beyond-paper: double-buffered weight loading closes part of the gap
+    big = tilesim.GemmWorkload(2048, 5120, 5120)
+    db_d = tilesim.simulate_gemm_event(big, "dip", double_buffered=True)
+    db_w = tilesim.simulate_gemm_event(big, "ws", double_buffered=True)
+    nb_d = tilesim.simulate_gemm_event(big, "dip")
+    print(f"\nbeyond-paper (event scheduler): double-buffered weight load saves "
+          f"{100*(1-db_d/nb_d):.1f}% DiP cycles on the largest workload; "
+          f"DiP/WS ratio with both double-buffered: {db_w/db_d:.3f}x")
+
+    dt = (time.perf_counter() - t0) * 1e6
+    csv_rows.append(("fig6_latency_imp_max", dt, f"{max(lat_ratios):.4f}"))
+    csv_rows.append(("fig6_latency_imp_min", dt, f"{min(lat_ratios):.4f}"))
+    csv_rows.append(("fig6_energy_imp_max", dt, f"{max(en_ratios):.4f}"))
+    csv_rows.append(("fig6_energy_imp_min", dt, f"{min(en_ratios):.4f}"))

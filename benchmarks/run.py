@@ -1,0 +1,42 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig5,fig6,...]
+
+Prints each experiment's human-readable report followed by a
+``name,us_per_call,derived`` CSV block (the harness contract).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from benchmarks import fig5_analytical, fig6_workloads, kernels_bench, table1_2_dse, table4_comparison
+
+MODULES = {
+    "fig5": fig5_analytical,
+    "table1_2": table1_2_dse,
+    "fig6": fig6_workloads,
+    "table4": table4_comparison,
+    "kernels": kernels_bench,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated subset of "
+                    + ",".join(MODULES))
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(MODULES)
+
+    csv_rows = []
+    for name in names:
+        MODULES[name].run(csv_rows)
+
+    print("\n== CSV ==")
+    print("name,us_per_call,derived")
+    for name, us, derived in csv_rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

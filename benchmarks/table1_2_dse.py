@@ -1,0 +1,50 @@
+"""Tables I & II reproduction: 22nm design-space exploration.
+
+Area/power come from the paper's published implementation points (our
+calibration data); every DERIVED quantity (saving percentages, improvement
+ratios, EE/area) is computed by repro.core.energy and compared against the
+paper's Table II values.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import energy
+
+PAPER_TABLE_II = {  # size: (thr, power, area, overall)
+    4: (1.38, 1.16, 1.06, 1.70),
+    8: (1.44, 1.18, 1.08, 1.84),
+    16: (1.47, 1.20, 1.09, 1.93),
+    32: (1.48, 1.25, 1.09, 2.02),
+    64: (1.49, 1.21, 1.07, 1.93),
+}
+
+
+def run(csv_rows):
+    t0 = time.perf_counter()
+    print("\n== Table I: area/power savings (22nm @ 1GHz) ==")
+    print(f"{'N':>4} {'WS um^2':>10} {'DiP um^2':>10} {'saved%':>7} "
+          f"{'WS mW':>8} {'DiP mW':>8} {'saved%':>7}")
+    for n in (4, 8, 16, 32, 64):
+        w = energy.hardware_point("ws", n)
+        d = energy.hardware_point("dip", n)
+        sa = 100 * (w.area_um2 - d.area_um2) / w.area_um2
+        sp = 100 * (w.power_mw - d.power_mw) / w.power_mw
+        print(f"{n:>4} {w.area_um2:>10.0f} {d.area_um2:>10.0f} {sa:>6.2f} "
+              f"{w.power_mw:>8.2f} {d.power_mw:>8.2f} {sp:>6.2f}")
+
+    print("\n== Table II: DiP-over-WS improvement ratios (computed vs paper) ==")
+    print(f"{'N':>4} {'thr':>6} {'power':>6} {'area':>6} {'overall':>8}  paper_overall")
+    worst = 0.0
+    for n, (pt, pp, pa, po) in PAPER_TABLE_II.items():
+        imp = energy.table_ii_improvements(n)
+        print(f"{n:>4} {imp.throughput:>6.2f} {imp.power:>6.2f} {imp.area:>6.2f} "
+              f"{imp.overall:>8.3f}  {po:.2f}")
+        worst = max(worst, abs(imp.overall - po))
+    print(f"max |computed - paper| overall deviation: {worst:.3f} "
+          f"(paper rounds factors before multiplying)")
+    dt = (time.perf_counter() - t0) * 1e6
+    csv_rows.append(("table2_overall_imp_32", dt,
+                     f"{energy.table_ii_improvements(32).overall:.4f}"))
+    csv_rows.append(("table2_max_dev_vs_paper", dt, f"{worst:.4f}"))

@@ -1,0 +1,53 @@
+"""Quickstart: the DiP paper in one page.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Walks the paper's core contribution end to end:
+  1. the weight permutation (Fig. 3),
+  2. the 3x3 cycle-by-cycle example (Fig. 4) on the register-level simulator,
+  3. the analytical WS-vs-DiP comparison (Fig. 5 / eqs. 1-7),
+  4. the TPU-adapted Pallas kernel computing a matmul from permutated storage.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import analytical, permute, simulator
+from repro.kernels import ops
+
+# 1. the permutation ---------------------------------------------------------
+w = np.arange(9).reshape(3, 3)
+p = permute.permute_weights_np(w)
+print("weight matrix W:\n", w)
+print("DiP-permutated P (column i rotated up by i):\n", p)
+assert np.array_equal(permute.unpermute_weights_np(p), w)
+
+# 2. the Fig. 4 walk-through on the cycle-accurate simulator -----------------
+x = np.array([[1, 2, 3], [4, 5, 6], [7, 8, 9]])
+res = simulator.simulate_dip(x, w, stages=2)
+print("\nDiP 3x3, 2-stage MAC (paper Fig. 4):")
+print("  output == X @ W:", np.array_equal(res.output, x @ w))
+print(f"  first output row at cycle {res.first_output_cycle} (paper: 3)")
+print(f"  total latency {res.latency} cycles = 2N+S-2 (paper: 6)")
+print(f"  TFPU {res.tfpu} cycles = N (paper: 3); WS needs 2N-1 = 5")
+
+# 3. analytical scaling (Fig. 5) ---------------------------------------------
+print("\nWS vs DiP at 64x64 (S=2):")
+c = analytical.compare(64, s=2)
+print(f"  latency   : WS {c.ws_latency} vs DiP {c.dip_latency}  "
+      f"({100*c.latency_saving:.1f}% saved)")
+print(f"  throughput: {c.throughput_improvement:.3f}x  (paper: 1.49x)")
+print(f"  registers : {100*c.register_saving:.1f}% saved  (paper: ~20%)")
+
+# 4. the TPU adaptation: matmul straight from permutated storage -------------
+rng = np.random.default_rng(0)
+xb = jnp.asarray(rng.normal(size=(128, 256)).astype(np.float32))
+wb = jnp.asarray(rng.normal(size=(256, 192)).astype(np.float32))
+pb = ops.to_dip_format(wb)                      # offline permutation (Fig. 3)
+out = ops.dip_matmul(xb, pb, out_features=192)  # fused de-shear + MXU matmul
+print("\nPallas dip_matmul from permutated storage: max |err| =",
+      float(jnp.max(jnp.abs(out - xb @ wb))))
+out_sys = ops.dip_matmul_systolic(xb, pb, out_features=192)
+print("wavefront-emulation kernel (diagonal input movement): max |err| =",
+      float(jnp.max(jnp.abs(out_sys - xb @ wb))))
+print("\nOK — see benchmarks/ for the full Fig.5/6 + Table I/II/IV reproduction.")

@@ -1,0 +1,6 @@
+"""Fault-tolerant checkpointing: atomic manifests, async writes, elastic
+re-mesh restore."""
+
+from repro.checkpoint.manager import CheckpointManager, restore_pytree, save_pytree
+
+__all__ = ["CheckpointManager", "save_pytree", "restore_pytree"]

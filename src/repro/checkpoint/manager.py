@@ -1,0 +1,163 @@
+"""Checkpointing built for failure: atomic, async, mesh-independent.
+
+Layout (one directory per step)::
+
+    <dir>/step_000123.tmp-<nonce>/     while writing
+        leaf_00000.npy ...             one file per pytree leaf
+        manifest.json                  tree structure + leaf index + meta
+    <dir>/step_000123/                 atomically renamed when complete
+
+Guarantees:
+  * **Atomicity** — a checkpoint directory either has a complete manifest or
+    is a ``.tmp-*`` orphan (ignored + garbage-collected); a crash mid-write
+    never corrupts the latest good step.
+  * **Async** — ``save(..., blocking=False)`` snapshots device arrays to host
+    then writes on a background thread; the train loop continues.  At most
+    one in-flight save (back-pressure via join).
+  * **Elastic re-mesh restore** — leaves are stored unsharded; ``restore``
+    accepts a ``shardings`` pytree and ``jax.device_put``s each leaf to the
+    *new* topology, so restoring a 256-chip checkpoint onto 512 chips (or a
+    differently-shaped mesh) is the same code path.  (At real multi-pod
+    scale the .npy writes would be per-shard + a gather-free format; the
+    manifest/atomic-rename/async structure is what this layer demonstrates.)
+  * **Retention** — keeps the newest ``keep`` steps, deletes the rest.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import secrets
+import shutil
+import threading
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["CheckpointManager", "save_pytree", "restore_pytree"]
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(k) for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return paths, leaves, treedef
+
+
+def save_pytree(path: str, tree: Any, *, meta: Optional[Dict] = None) -> None:
+    """Write one complete checkpoint directory atomically (blocking)."""
+    paths, leaves, _ = _flatten_with_paths(tree)
+    host_leaves = [np.asarray(jax.device_get(l)) for l in leaves]
+    tmp = f"{path}.tmp-{secrets.token_hex(4)}"
+    os.makedirs(tmp, exist_ok=True)
+    index: List[Dict] = []
+    for i, (p, arr) in enumerate(zip(paths, host_leaves)):
+        fname = f"leaf_{i:05d}.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        index.append({"path": p, "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)})
+    manifest = {"leaves": index, "meta": meta or {}}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path) if not os.path.exists(path) else shutil.rmtree(tmp)
+
+
+def restore_pytree(path: str, like: Any, *, shardings: Any = None) -> Any:
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs).  ``shardings``: matching pytree of NamedShardings for
+    elastic placement on the *current* mesh (optional)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    paths, leaves, treedef = _flatten_with_paths(like)
+    by_path = {e["path"]: e for e in manifest["leaves"]}
+    if set(paths) != set(by_path):
+        missing = set(paths) - set(by_path)
+        extra = set(by_path) - set(paths)
+        raise ValueError(f"checkpoint/tree mismatch; missing={missing} extra={extra}")
+    shard_leaves = (
+        treedef.flatten_up_to(shardings) if shardings is not None else [None] * len(paths)
+    )
+    out = []
+    for p, leaf, sh in zip(paths, leaves, shard_leaves):
+        arr = np.load(os.path.join(path, by_path[p]["file"]))
+        if sh is not None:
+            out.append(jax.device_put(arr, sh))
+        else:
+            out.append(jax.device_put(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def checkpoint_meta(path: str) -> Dict:
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f)["meta"]
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._inflight: Optional[threading.Thread] = None
+        self._gc_orphans()
+
+    # ----------------------------------------------------------- naming ----
+    def _step_path(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:08d}")
+
+    def steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and ".tmp" not in name:
+                if os.path.exists(os.path.join(self.dir, name, "manifest.json")):
+                    out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def _gc_orphans(self) -> None:
+        for name in os.listdir(self.dir):
+            if ".tmp-" in name:
+                shutil.rmtree(os.path.join(self.dir, name), ignore_errors=True)
+
+    # ------------------------------------------------------------- save ----
+    def save(self, step: int, tree: Any, *, meta: Optional[Dict] = None,
+             blocking: bool = True) -> None:
+        self.wait()  # back-pressure: one in-flight save max
+        meta = dict(meta or {}, step=step)
+        # snapshot to host synchronously (device buffers may be donated next step)
+        paths, leaves, treedef = _flatten_with_paths(tree)
+        host = [np.asarray(jax.device_get(l)) for l in leaves]
+        snapshot = jax.tree_util.tree_unflatten(treedef, host)
+
+        def work():
+            save_pytree(self._step_path(step), snapshot, meta=meta)
+            self._retain()
+
+        if blocking:
+            work()
+        else:
+            self._inflight = threading.Thread(target=work, daemon=True)
+            self._inflight.start()
+
+    def wait(self) -> None:
+        if self._inflight is not None:
+            self._inflight.join()
+            self._inflight = None
+
+    def _retain(self) -> None:
+        steps = self.steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(self._step_path(s), ignore_errors=True)
+
+    # ---------------------------------------------------------- restore ----
+    def restore(self, like: Any, *, step: Optional[int] = None, shardings: Any = None):
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            return None, None
+        path = self._step_path(step)
+        tree = restore_pytree(path, like, shardings=shardings)
+        return tree, checkpoint_meta(path)

@@ -1,0 +1,58 @@
+"""Assigned-architecture registry: ``get_config(name)`` / ``ALL_ARCHS``.
+
+One module per architecture (exact hyper-parameters from the assignment,
+sources noted per file).  ``--arch <id>`` in the launchers resolves here.
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import SHAPE_CELLS, ArchConfig, ShapeCell
+
+ALL_ARCHS: List[str] = [
+    "deepseek_v2_lite_16b",
+    "qwen3_moe_235b_a22b",
+    "mamba2_370m",
+    "llama3_8b",
+    "codeqwen15_7b",
+    "yi_9b",
+    "qwen2_72b",
+    "phi3_vision_4_2b",
+    "musicgen_medium",
+    "zamba2_2_7b",
+]
+
+# assignment ids (with dashes/dots) -> module names
+_ALIASES: Dict[str, str] = {
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "mamba2-370m": "mamba2_370m",
+    "llama3-8b": "llama3_8b",
+    "codeqwen1.5-7b": "codeqwen15_7b",
+    "yi-9b": "yi_9b",
+    "qwen2-72b": "qwen2_72b",
+    "phi-3-vision-4.2b": "phi3_vision_4_2b",
+    "musicgen-medium": "musicgen_medium",
+    "zamba2-2.7b": "zamba2_2_7b",
+}
+
+
+def get_config(name: str) -> ArchConfig:
+    mod_name = _ALIASES.get(name, name.replace("-", "_").replace(".", "_"))
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def shape_cells_for(cfg: ArchConfig) -> List[ShapeCell]:
+    """The assigned shape set, honouring the long_500k sub-quadratic gate."""
+    cells = []
+    for cell in SHAPE_CELLS:
+        if cell.name == "long_500k" and not cfg.sub_quadratic:
+            continue  # skip recorded in DESIGN.md §4 / EXPERIMENTS.md §Dry-run
+        cells.append(cell)
+    return cells
+
+
+__all__ = ["ALL_ARCHS", "ArchConfig", "ShapeCell", "SHAPE_CELLS", "get_config", "shape_cells_for"]

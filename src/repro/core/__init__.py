@@ -1,0 +1,23 @@
+"""DiP core: the paper's contribution as a composable library.
+
+Layers:
+  permute     — the DiP weight permutation (Fig. 3) and tiled variants
+  dataflow    — functional semantics (rolled-MAC identity) for DiP and WS
+  simulator   — cycle-accurate register-level array simulators
+  analytical  — eqs. (1)-(7): latency / throughput / TFPU / registers
+  tilesim     — tile-level GEMM scheduler (Fig. 6 cost model)
+  energy      — 22nm DSE model calibrated to Tables I/II/IV
+  workloads   — transformer MHA/FFN GEMM workloads (Table III)
+"""
+
+from repro.core import analytical, dataflow, energy, permute, simulator, tilesim, workloads
+
+__all__ = [
+    "analytical",
+    "dataflow",
+    "energy",
+    "permute",
+    "simulator",
+    "tilesim",
+    "workloads",
+]

@@ -1,0 +1,165 @@
+"""Analytical models for WS and DiP systolic arrays — paper eqs. (1)-(7).
+
+All models are validated cycle-for-cycle against the register-level simulators
+in :mod:`repro.core.simulator` (see tests/test_core_analytical.py), and
+extended beyond the paper to the streaming regime (M input rows through an
+NxN array) used by the tile-level scheduler.
+
+Paper equations (N = array dim, S = MAC pipeline stages):
+
+    (1) WS latency            = 3N + S - 3
+    (2) WS throughput         = 2N^3 / (3N + S - 3)
+    (3) WS register overhead  = N(N-1)           [sync-FIFO register count]
+    (4) WS TFPU               = 2N - 1
+    (5) DiP latency           = 2N + S - 2
+    (6) DiP throughput        = 2N^3 / (2N + S - 2)
+    (7) DiP TFPU              = N
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = [
+    "ws_latency",
+    "dip_latency",
+    "ws_throughput",
+    "dip_throughput",
+    "ws_tfpu",
+    "dip_tfpu",
+    "ws_fifo_registers",
+    "ws_fifo_registers_normalized",
+    "pe_internal_registers_normalized",
+    "register_savings_fraction",
+    "ws_streaming_latency",
+    "dip_streaming_latency",
+    "ArrayComparison",
+    "compare",
+]
+
+
+# ---------------------------------------------------------------- latency ---
+def ws_latency(n: int, s: int = 2) -> int:
+    """Eq. (1): cycles to push an NxN input tile through the WS array."""
+    return 3 * n + s - 3
+
+
+def dip_latency(n: int, s: int = 2) -> int:
+    """Eq. (5): cycles to push an NxN input tile through the DiP array."""
+    return 2 * n + s - 2
+
+
+def ws_streaming_latency(n: int, m: int, s: int = 2) -> int:
+    """Streaming extension: M input rows (M >= 1) through the WS array.
+
+    One extra cycle per input row beyond the first N (simulator-validated).
+    """
+    return ws_latency(n, s) + max(0, m - n)
+
+
+def dip_streaming_latency(n: int, m: int, s: int = 2) -> int:
+    return dip_latency(n, s) + max(0, m - n)
+
+
+# ------------------------------------------------------------- throughput ---
+def ws_throughput(n: int, s: int = 2) -> float:
+    """Eq. (2): ops/cycle (multiplications + additions) for one NxN tile."""
+    return 2.0 * n**3 / ws_latency(n, s)
+
+
+def dip_throughput(n: int, s: int = 2) -> float:
+    """Eq. (6)."""
+    return 2.0 * n**3 / dip_latency(n, s)
+
+
+# ------------------------------------------------------------------ TFPU ----
+def ws_tfpu(n: int) -> int:
+    """Eq. (4): cycles until every PE holds live input (diagonal wavefront)."""
+    return 2 * n - 1
+
+
+def dip_tfpu(n: int) -> int:
+    """Eq. (7): DiP fills row-by-row — N cycles."""
+    return n
+
+
+# -------------------------------------------------------------- registers ---
+def ws_fifo_registers(n: int) -> int:
+    """Eq. (3): raw count of sync-FIFO registers (input group + output group).
+
+    Each group is N-1 FIFOs of depths 1..N-1 -> N(N-1)/2 registers per group.
+    """
+    return n * (n - 1)
+
+
+def ws_fifo_registers_normalized(n: int, *, in_bits: int = 8, out_bits: int = 16) -> float:
+    """FIFO registers normalized to 8-bit units (paper Fig. 5c normalization).
+
+    Input FIFOs hold ``in_bits`` values, output FIFOs hold ``out_bits`` psums.
+    """
+    group = n * (n - 1) / 2
+    return group * (in_bits / 8.0) + group * (out_bits / 8.0)
+
+
+def pe_internal_registers_normalized(
+    n: int, *, w_bits: int = 8, x_bits: int = 8, mul_bits: int = 16, add_bits: int = 16
+) -> float:
+    """Internal PE registers (weight, input, multiplier, adder — Fig. 2b),
+    normalized to 8-bit units."""
+    per_pe = (w_bits + x_bits + mul_bits + add_bits) / 8.0
+    return n * n * per_pe
+
+
+def register_savings_fraction(n: int) -> float:
+    """Fraction of total WS registers eliminated by DiP (byte-normalized).
+
+    DiP keeps only the internal PE registers; WS adds both FIFO groups.
+    Reaches ~19.8% at N=64 (paper: "up to 20%").
+    """
+    fifo = ws_fifo_registers_normalized(n)
+    pe = pe_internal_registers_normalized(n)
+    return fifo / (fifo + pe)
+
+
+# ------------------------------------------------------------- comparison ---
+@dataclasses.dataclass(frozen=True)
+class ArrayComparison:
+    n: int
+    s: int
+    ws_latency: int
+    dip_latency: int
+    latency_saving: float          # (WS - DiP) / WS
+    ws_throughput: float
+    dip_throughput: float
+    throughput_improvement: float  # DiP / WS
+    ws_tfpu: int
+    dip_tfpu: int
+    tfpu_improvement: float        # (WS - DiP) / WS
+    ws_registers_norm: float
+    dip_registers_norm: float
+    register_saving: float
+
+
+def compare(n: int, s: int = 2) -> ArrayComparison:
+    """Full WS-vs-DiP analytical comparison at one array size (Fig. 5 row)."""
+    wl, dl = ws_latency(n, s), dip_latency(n, s)
+    wt, dt = ws_throughput(n, s), dip_throughput(n, s)
+    wf, df = ws_tfpu(n), dip_tfpu(n)
+    pe = pe_internal_registers_normalized(n)
+    fifo = ws_fifo_registers_normalized(n)
+    return ArrayComparison(
+        n=n,
+        s=s,
+        ws_latency=wl,
+        dip_latency=dl,
+        latency_saving=(wl - dl) / wl,
+        ws_throughput=wt,
+        dip_throughput=dt,
+        throughput_improvement=dt / wt,
+        ws_tfpu=wf,
+        dip_tfpu=df,
+        tfpu_improvement=(wf - df) / wf,
+        ws_registers_norm=pe + fifo,
+        dip_registers_norm=pe,
+        register_saving=fifo / (pe + fifo),
+    )

@@ -1,0 +1,90 @@
+"""Functional semantics of the DiP and WS dataflows.
+
+These are the *mathematical* specifications that every other layer (the
+cycle-accurate simulator, the Pallas kernels, the model-zoo `DipLinear`) is
+tested against.
+
+Key identity (paper Sec. III-B, proved by the Fig. 4 walk-through):
+with the weight matrix permutated as ``P[r][i] = W[(r+i) mod K][i]`` and the
+input row rotated left by ``r`` when it reaches PE row ``r``::
+
+    out[m, i] = sum_r  x[m, (i+r) mod K] * P[r, i]
+              = sum_k  x[m, k] * W[k, i]
+              = (x @ W)[m, i]
+
+so DiP computes exactly ``x @ W`` while the array consumes the *permutated*
+layout with diagonally-moving inputs and zero synchronization FIFOs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import permute
+
+__all__ = [
+    "ws_matmul",
+    "dip_matmul_from_permuted",
+    "dip_matmul_rolled",
+    "dip_matmul_rolled_np",
+]
+
+
+def ws_matmul(x: jax.Array, w: jax.Array, *, precision=None) -> jax.Array:
+    """Weight-stationary semantics: a plain matmul (the TPU-like baseline)."""
+    return jnp.matmul(x, w, precision=precision)
+
+
+def dip_matmul_from_permuted(x: jax.Array, p: jax.Array, *, precision=None) -> jax.Array:
+    """Fast-path semantics: de-shear the permutated weights, then one matmul.
+
+    This is what the TPU-native Pallas kernel does per VMEM tile: the de-shear
+    is O(K*N) gather work amortized against O(M*K*N) MXU work.
+    """
+    return jnp.matmul(x, permute.unpermute_weights(p), precision=precision)
+
+
+def dip_matmul_rolled(x: jax.Array, p: jax.Array) -> jax.Array:
+    """Systolic-faithful semantics: sum of rolled-input MACs.
+
+    Computes ``out[m, i] = sum_r x[m, (i+r) % K] * p[r, i]`` by materializing
+    the diagonal input movement: PE row ``r`` sees the input row rotated left
+    by ``r`` and multiplies it elementwise with its stationary (permutated)
+    weights.  O(K) vector MACs — exactly the work the physical array performs,
+    one PE row per term.  K (rows of p) must equal the contraction dim of x.
+    """
+    k = p.shape[0]
+    if x.shape[-1] != k:
+        raise ValueError(f"contraction mismatch: x has {x.shape[-1]}, p has {k} rows")
+
+    def body(r, acc):
+        # input rotated left by r, broadcast against PE row r's weights
+        xr = jnp.roll(x, -r, axis=-1)
+        return acc + xr * p[r][None, :]
+
+    acc0 = jnp.zeros(x.shape[:-1] + (p.shape[1],), dtype=jnp.result_type(x, p))
+    if p.shape[1] != k:
+        # Rectangular tile: rotation is modulo K (rows); weights column-count C
+        # may differ. Roll over K then take the first C lanes of each rotation.
+        def body_rect(r, acc):
+            xr = jnp.roll(x, -r, axis=-1)[..., : p.shape[1]]
+            return acc + xr * p[r][None, :]
+
+        # Rectangular DiP tiles require C == K for the wrap-around to close;
+        # the physical array is NxN so this path only supports square tiles.
+        raise ValueError("dip_matmul_rolled requires square tiles (array is NxN)")
+    return jax.lax.fori_loop(0, k, body, acc0)
+
+
+def dip_matmul_rolled_np(x: np.ndarray, p: np.ndarray) -> np.ndarray:
+    """Literal numpy transcription (oracle for the oracle)."""
+    m, k = x.shape
+    k2, n = p.shape
+    assert k == k2 == n, "square tiles only"
+    out = np.zeros((m, n), dtype=np.result_type(x, p))
+    for r in range(k):
+        xr = np.roll(x, -r, axis=1)
+        out += xr * p[r][None, :]
+    return out

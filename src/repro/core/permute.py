@@ -1,0 +1,158 @@
+"""DiP weight permutation (paper Fig. 3) and its inverse.
+
+The DiP dataflow stores the weight matrix *permutated*: each column ``i`` is
+rotated **up** by ``i`` positions (wrap-around)::
+
+    P[j][i] = W[(j + i) mod R][i]          (R = number of rows)
+
+The permutation is a pure relayout performed offline in software ("at almost
+zero cost" — paper Sec. III-B); the systolic array then consumes inputs moving
+diagonally with no synchronization FIFOs.  In this framework the permutated
+layout is a first-class storage format (`DipFormat`): checkpoints and HBM
+tensors may hold weights permutated, and the matmul kernels either de-shear in
+VMEM (fast path) or consume the layout natively (systolic-faithful path).
+
+Everything here is shape-polymorphic: the paper defines the permutation for an
+NxN array tile; we extend it to arbitrary (R, C) matrices (rotation modulo R)
+and to *tiled* application, where each (tile_r x tile_c) block of a large
+matrix is permutated independently — exactly what a 64x64 DiP array would see
+after matrix tiling (paper Sec. IV-C).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "permutation_indices",
+    "permute_weights",
+    "unpermute_weights",
+    "permute_weights_np",
+    "unpermute_weights_np",
+    "permute_tiled",
+    "unpermute_tiled",
+    "rotate_rows_left",
+]
+
+
+def permutation_indices(rows: int, cols: int) -> np.ndarray:
+    """Static gather indices implementing ``P[j][i] = W[(j+i) % rows][i]``.
+
+    Returns an int32 array ``idx`` of shape (rows, cols) such that
+    ``P = W[idx, col_iota]``.  Kept in numpy so callers can bake it into a
+    jitted computation as a compile-time constant.
+    """
+    j = np.arange(rows)[:, None]
+    i = np.arange(cols)[None, :]
+    return ((j + i) % rows).astype(np.int32)
+
+
+def inverse_permutation_indices(rows: int, cols: int) -> np.ndarray:
+    """Indices for the inverse map ``W[k][i] = P[(k - i) % rows][i]``."""
+    k = np.arange(rows)[:, None]
+    i = np.arange(cols)[None, :]
+    return ((k - i) % rows).astype(np.int32)
+
+
+def _apply_row_gather(w: jax.Array, idx: np.ndarray) -> jax.Array:
+    cols = np.broadcast_to(np.arange(w.shape[-1]), idx.shape)
+    if w.ndim == 2:
+        return w[idx, cols]
+    # Batched (leading dims untouched): vmap over leading axes.
+    flat = w.reshape((-1,) + w.shape[-2:])
+    out = jax.vmap(lambda m: m[idx, cols])(flat)
+    return out.reshape(w.shape)
+
+
+def permute_weights(w: jax.Array) -> jax.Array:
+    """DiP-permute the trailing two dims of ``w`` (paper Fig. 3 pseudocode)."""
+    rows, cols = w.shape[-2], w.shape[-1]
+    return _apply_row_gather(w, permutation_indices(rows, cols))
+
+
+def unpermute_weights(p: jax.Array) -> jax.Array:
+    """Inverse of :func:`permute_weights`."""
+    rows, cols = p.shape[-2], p.shape[-1]
+    return _apply_row_gather(p, inverse_permutation_indices(rows, cols))
+
+
+def permute_weights_np(w: np.ndarray) -> np.ndarray:
+    """Pure-numpy reference, the literal transcription of the paper's pseudocode."""
+    rows, cols = w.shape
+    out = np.empty_like(w)
+    for i in range(cols):
+        for j in range(rows):
+            out[j][i] = w[(j + i) % rows][i]
+    return out
+
+
+def unpermute_weights_np(p: np.ndarray) -> np.ndarray:
+    rows, cols = p.shape
+    out = np.empty_like(p)
+    for i in range(cols):
+        for k in range(rows):
+            out[k][i] = p[(k - i) % rows][i]
+    return out
+
+
+def _pad_to_multiple(w: jax.Array, tile_r: int, tile_c: int) -> jax.Array:
+    r, c = w.shape[-2], w.shape[-1]
+    pr = (-r) % tile_r
+    pc = (-c) % tile_c
+    if pr == 0 and pc == 0:
+        return w
+    pad = [(0, 0)] * (w.ndim - 2) + [(0, pr), (0, pc)]
+    return jnp.pad(w, pad)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_r", "tile_c", "inverse"))
+def _permute_tiled_impl(w: jax.Array, tile_r: int, tile_c: int, inverse: bool) -> jax.Array:
+    r, c = w.shape[-2], w.shape[-1]
+    wp = _pad_to_multiple(w, tile_r, tile_c)
+    rp, cp = wp.shape[-2], wp.shape[-1]
+    lead = wp.shape[:-2]
+    # (..., Rt, tile_r, Ct, tile_c) -> (..., Rt, Ct, tile_r, tile_c)
+    blk = wp.reshape(lead + (rp // tile_r, tile_r, cp // tile_c, tile_c))
+    blk = jnp.swapaxes(blk, -3, -2)
+    idx = (
+        inverse_permutation_indices(tile_r, tile_c)
+        if inverse
+        else permutation_indices(tile_r, tile_c)
+    )
+    cols = np.broadcast_to(np.arange(tile_c), idx.shape)
+    blk = blk[..., idx, cols]
+    blk = jnp.swapaxes(blk, -3, -2)
+    # NOTE: the result stays PADDED to the tile grid — cropping would drop
+    # elements the per-tile rotation moved into the padding rows, making the
+    # transform lossy for unaligned shapes (callers crop after unpermuting;
+    # see kernels/ops.from_dip_format).
+    return blk.reshape(lead + (rp, cp))
+
+
+def permute_tiled(w: jax.Array, tile: int = 64) -> jax.Array:
+    """Permute each ``tile x tile`` block independently (matrix-tiling regime).
+
+    This is the layout a 64x64 DiP array consumes when a large weight matrix
+    is processed tile-by-tile (paper Sec. IV-C).  Ragged edges are
+    zero-padded up to the tile grid and the PADDED tensor is returned (the
+    storage format); ``unpermute_tiled(permute_tiled(w))[..., :r, :c] == w``.
+    """
+    return _permute_tiled_impl(w, tile, tile, False)
+
+
+def unpermute_tiled(p: jax.Array, tile: int = 64) -> jax.Array:
+    return _permute_tiled_impl(p, tile, tile, True)
+
+
+def rotate_rows_left(x: jax.Array, shift: int) -> jax.Array:
+    """Rotate the trailing axis left by ``shift`` (diagonal input movement).
+
+    In the DiP array, an input row hops from PE row ``r`` to PE row ``r+1``
+    rotated left by one: the leftmost PE column feeds the rightmost PE column
+    of the next row (paper Fig. 2a / Fig. 4a).
+    """
+    return jnp.roll(x, -shift, axis=-1)

@@ -1,0 +1,288 @@
+"""Cycle-accurate register-level simulators for the DiP and WS systolic arrays.
+
+Both simulators are *synchronous register-transfer* models: every cycle, all
+registers update simultaneously from the previous cycle's values.  They
+produce numerically exact matmul outputs **and** per-cycle traces (inputs fed,
+outputs emitted, active PE rows), so the paper's analytical equations
+(1)-(7) are *measured*, not assumed:
+
+    WS  latency = 3N + S - 3        DiP latency = 2N + S - 2      (M = N rows)
+    WS  TFPU    = 2N - 1            DiP TFPU    = N
+    WS  sync-FIFO registers = N(N-1) (raw count; 1.5*N(N-1) byte-normalized)
+
+Pipeline-stage convention (S):
+  S=2 — the paper's PE (Fig. 2b): input/weight registers feed a multiplier
+        register and an adder register; at array level the psum advances one
+        PE row per cycle, one cycle behind the input wavefront.  Matches the
+        Fig. 4 walk-through exactly (first output row at cycle N, 0-indexed
+        from the first input load at cycle 0).
+  S=1 — single-register PE: MAC is combinational after the input register.
+
+Timing is validated against the Fig. 4 example in tests (first output cycle 3,
+last cycle 5 for N=3, S=2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core import permute
+
+__all__ = ["SimResult", "simulate_dip", "simulate_ws", "simulate_weight_load_dip"]
+
+
+@dataclasses.dataclass
+class SimResult:
+    """Trace of one systolic-array run (processing phase only).
+
+    Attributes:
+      output:        (M, N) result matrix, numerically exact.
+      latency:       total processing cycles (first input load .. last output).
+      first_output_cycle: 0-indexed cycle at which output row 0 is registered.
+      tfpu:          cycles until every PE row is simultaneously active
+                     (None when M < N — the array never fills).
+      active_rows:   per-cycle count of PE rows doing useful MACs.
+      weight_load_cycles: cycles spent loading weights (N-1 exclusive + 1
+                     overlapped with the first input row, per Fig. 4).
+      mac_count:     total useful MAC operations executed (= M*N*N).
+    """
+
+    output: np.ndarray
+    latency: int
+    first_output_cycle: int
+    tfpu: Optional[int]
+    active_rows: List[int]
+    weight_load_cycles: int
+    mac_count: int
+
+    @property
+    def throughput_ops_per_cycle(self) -> float:
+        # ops = multiplications + additions (paper counts both): 2*M*N*N
+        return 2.0 * self.mac_count / self.latency
+
+    @property
+    def mean_utilization(self) -> float:
+        n_rows = max(self.active_rows) if self.active_rows else 1
+        return float(np.mean(self.active_rows)) / n_rows if self.active_rows else 0.0
+
+
+def simulate_weight_load_dip(w: np.ndarray) -> np.ndarray:
+    """Simulate the weight-loading phase: permutated rows shift down the array.
+
+    Rows of the permutated matrix are pushed bottom-row-first through the top
+    (Fig. 4, cycles -2..0); after N shift cycles PE row r holds P[r, :].
+    Returns the resident weight array (== permute_weights_np(w)).
+    """
+    p = permute.permute_weights_np(np.asarray(w))
+    n = p.shape[0]
+    resident = np.zeros_like(p)
+    for cycle in range(n):  # one row pushed per cycle, everything shifts down
+        resident[1:] = resident[:-1]
+        resident[0] = p[n - 1 - cycle]
+    return resident
+
+
+def simulate_dip(
+    x: np.ndarray,
+    w: np.ndarray,
+    *,
+    stages: int = 2,
+    weights_prepermuted: bool = False,
+) -> SimResult:
+    """Run the DiP array on ``x @ w`` with an M-row input stream.
+
+    ``x``: (M, N) input matrix, ``w``: (N, N) weights (un-permutated unless
+    ``weights_prepermuted``).  Returns exact outputs plus the cycle trace.
+    """
+    x = np.asarray(x)
+    w = np.asarray(w)
+    m_rows, n = x.shape
+    if w.shape != (n, n):
+        raise ValueError(f"DiP array is NxN; got weights {w.shape} for N={n}")
+    if stages not in (1, 2):
+        raise ValueError("stages (S) must be 1 or 2")
+
+    p = np.asarray(w) if weights_prepermuted else permute.permute_weights_np(w)
+    acc_dtype = np.result_type(x.dtype, w.dtype, np.int64 if x.dtype.kind in "iu" else np.float64)
+
+    # Registers
+    x_reg = np.zeros((n, n), dtype=x.dtype)          # X[r]: input vector at PE row r
+    x_valid = np.zeros(n, dtype=bool)
+    ps_reg = np.zeros((n, n), dtype=acc_dtype)       # PS[r]: psum vector leaving row r
+    ps_row_id = -np.ones(n, dtype=np.int64)          # which input row each psum belongs to
+
+    outputs = np.zeros((m_rows, n), dtype=acc_dtype)
+    emitted = 0
+    first_output_cycle = -1
+    tfpu = None
+    active_rows: List[int] = []
+
+    t = 0
+    max_cycles = 2 * (m_rows + 2 * n + stages + 4)
+    while emitted < m_rows and t < max_cycles:
+        # ---- next-state computation from current registers ----
+        new_x = np.empty_like(x_reg)
+        new_xv = np.empty_like(x_valid)
+        if t < m_rows:
+            new_x[0] = x[t]
+            new_xv[0] = True
+        else:
+            new_x[0] = 0
+            new_xv[0] = False
+        # diagonal movement: row r-1's registered input, rotated left by one
+        new_x[1:] = np.roll(x_reg[:-1], -1, axis=1)
+        new_xv[1:] = x_valid[:-1]
+
+        # MAC source: S=2 uses the previous-cycle input register (pipelined);
+        # S=1 uses the freshly-written register (combinational MAC after it).
+        mac_x, mac_v = (x_reg, x_valid) if stages == 2 else (new_x, new_xv)
+
+        new_ps = np.zeros_like(ps_reg)
+        new_ps_id = -np.ones_like(ps_row_id)
+        for r in range(n):
+            if not mac_v[r]:
+                continue
+            contrib = mac_x[r].astype(acc_dtype) * p[r].astype(acc_dtype)
+            if r == 0:
+                new_ps[r] = contrib
+                # row 0 stamps the input-row index it just consumed
+                new_ps_id[r] = t if stages == 1 else t - 1
+            else:
+                new_ps[r] = contrib + ps_reg[r - 1]
+                new_ps_id[r] = ps_row_id[r - 1]
+        # Utilization is counted on input-register validity (the paper's TFPU
+        # definition: cycles until every PE holds live input), independent of S.
+        active = int(new_xv.sum())
+        active_rows.append(active)
+        if tfpu is None and active == n:
+            tfpu = t + 1  # cycles elapsed including this one
+
+        # ---- commit ----
+        x_reg, x_valid, ps_reg = new_x, new_xv, new_ps
+        old_ps_id = ps_row_id
+        ps_row_id = new_ps_id
+
+        # bottom-row psum register now holds a finished output row
+        if ps_row_id[n - 1] >= 0:
+            row_id = int(ps_row_id[n - 1])
+            outputs[row_id] = ps_reg[n - 1]
+            emitted += 1
+            if first_output_cycle < 0:
+                first_output_cycle = t
+        del old_ps_id
+        t += 1
+
+    if emitted != m_rows:
+        raise RuntimeError("simulator did not converge — timing bug")
+
+    return SimResult(
+        output=outputs,
+        latency=t,
+        first_output_cycle=first_output_cycle,
+        tfpu=tfpu if m_rows >= n else None,
+        active_rows=active_rows,
+        weight_load_cycles=n,  # N-1 exclusive + 1 overlapped with first input
+        mac_count=m_rows * n * n,
+    )
+
+
+def simulate_ws(
+    x: np.ndarray,
+    w: np.ndarray,
+    *,
+    stages: int = 2,
+) -> SimResult:
+    """Run the conventional WS array (TPU-like) with input/output sync FIFOs.
+
+    Input FIFO on row k has depth k (skew); output FIFO on column i has depth
+    N-1-i (de-skew).  PE(k, i) holds W[k, i]; inputs stream left-to-right,
+    psums accumulate top-to-bottom.
+    """
+    x = np.asarray(x)
+    w = np.asarray(w)
+    m_rows, n = x.shape
+    if w.shape != (n, n):
+        raise ValueError(f"WS array is NxN; got weights {w.shape} for N={n}")
+    if stages not in (1, 2):
+        raise ValueError("stages (S) must be 1 or 2")
+
+    acc_dtype = np.result_type(x.dtype, w.dtype, np.int64 if x.dtype.kind in "iu" else np.float64)
+
+    x_reg = np.zeros((n, n), dtype=x.dtype)        # xreg[k][i]
+    x_valid = np.zeros((n, n), dtype=bool)
+    ps_reg = np.zeros((n, n), dtype=acc_dtype)     # ps[k][i]
+    ps_id = -np.ones((n, n), dtype=np.int64)       # input-row id carried by psum
+
+    # Output de-skew FIFOs: column i delays its column-stream by (n-1-i).
+    out_fifo = [[(-1, 0)] * (n - 1 - i) for i in range(n)]
+
+    outputs = np.zeros((m_rows, n), dtype=acc_dtype)
+    out_seen = np.zeros((m_rows, n), dtype=bool)
+    emitted_rows = 0
+    first_output_cycle = -1
+    tfpu = None
+    active_rows: List[int] = []
+
+    t = 0
+    max_cycles = 2 * (m_rows + 3 * n + stages + 4)
+    while emitted_rows < m_rows and t < max_cycles:
+        new_x = np.empty_like(x_reg)
+        new_xv = np.zeros_like(x_valid)
+        for k in range(n):
+            m = t - k  # input skew FIFO of depth k on row k
+            if 0 <= m < m_rows:
+                new_x[k, 0] = x[m, k]
+                new_xv[k, 0] = True
+            else:
+                new_x[k, 0] = 0
+        new_x[:, 1:] = x_reg[:, :-1]
+        new_xv[:, 1:] = x_valid[:, :-1]
+
+        mac_x, mac_v = (x_reg, x_valid) if stages == 2 else (new_x, new_xv)
+
+        contrib = np.where(mac_v, mac_x.astype(acc_dtype) * w.astype(acc_dtype), 0)
+        new_ps = np.zeros_like(ps_reg)
+        new_ps_id = -np.ones_like(ps_id)
+        # row 0 stamps the input-row id: x[m, 0] enters PE(0, i) at cycle m + i
+        base = t if stages == 1 else t - 1
+        new_ps[0] = contrib[0]
+        new_ps_id[0] = np.where(mac_v[0], base - np.arange(n), -1)
+        new_ps[1:] = np.where(mac_v[1:], contrib[1:] + ps_reg[:-1], 0)
+        new_ps_id[1:] = np.where(mac_v[1:], ps_id[:-1], -1)
+        # active PEs this cycle, counted on input validity (paper's TFPU def.)
+        active = int(new_xv.sum())
+        active_rows.append(active)
+        if tfpu is None and active == n * n:
+            tfpu = t + 1
+
+        x_reg, x_valid, ps_reg, ps_id = new_x, new_xv, new_ps, new_ps_id
+
+        # bottom-row psums enter the per-column output FIFOs
+        for i in range(n):
+            item = (int(ps_id[n - 1, i]), ps_reg[n - 1, i]) if ps_id[n - 1, i] >= 0 else (-1, 0)
+            out_fifo[i].append(item)
+            row_id, val = out_fifo[i].pop(0)
+            if row_id >= 0:
+                outputs[row_id, i] = val
+                out_seen[row_id, i] = True
+                if out_seen[row_id].all():
+                    emitted_rows += 1
+                    if first_output_cycle < 0:
+                        first_output_cycle = t
+        t += 1
+
+    if emitted_rows != m_rows:
+        raise RuntimeError("WS simulator did not converge — timing bug")
+
+    return SimResult(
+        output=outputs,
+        latency=t,
+        first_output_cycle=first_output_cycle,
+        tfpu=tfpu if m_rows >= n else None,
+        active_rows=active_rows,
+        weight_load_cycles=n,
+        mac_count=m_rows * n * n,
+    )

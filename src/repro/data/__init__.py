@@ -1,0 +1,5 @@
+"""Deterministic synthetic data pipeline (offline container — no corpora)."""
+
+from repro.data.pipeline import DataState, SyntheticLM
+
+__all__ = ["SyntheticLM", "DataState"]

@@ -1,0 +1,14 @@
+"""Distribution layer: sharding policy (DP/FSDP/TP/EP/SP), pipeline
+parallelism, and gradient compression."""
+
+from repro.distributed.compression import compressed_psum, compression_transform
+from repro.distributed.pipeline import pipeline_apply
+from repro.distributed.sharding import ShardingPolicy, make_policy
+
+__all__ = [
+    "ShardingPolicy",
+    "make_policy",
+    "pipeline_apply",
+    "compression_transform",
+    "compressed_psum",
+]

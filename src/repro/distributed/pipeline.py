@@ -1,0 +1,95 @@
+"""Pipeline parallelism: GPipe-style microbatched execution over a "stage"
+mesh axis using shard_map + collective_permute.
+
+Opt-in feature (the 40-cell dry-run grid uses DP×TP, which compiles cleaner
+for these depths); included because 1000+-node deployments of the deepest
+assigned archs (qwen3-moe 94L) would pipeline across pods.  Tested for
+equivalence against sequential execution in tests/test_pipeline.py.
+
+Schedule: classic GPipe loop with S stages and M microbatches (M >= S).
+At tick t, stage s processes microbatch t - s (if in range); activations move
+stage s -> s+1 between ticks via jax.lax.ppermute.  Bubble fraction
+(S-1)/(M+S-1), as usual.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+__all__ = ["pipeline_apply"]
+
+
+def pipeline_apply(
+    mesh: Mesh,
+    stage_fn: Callable[[Any, jax.Array], jax.Array],
+    stage_params: Any,            # pytree, leaves with leading axis = n_stages
+    x: jax.Array,                 # (microbatches, mb_size, ...) microbatched input
+    *,
+    axis: str = "stage",
+) -> jax.Array:
+    """Run ``x`` through ``n_stages`` sequential stages, pipelined.
+
+    ``stage_fn(params_for_stage, activation) -> activation`` must be
+    shape-preserving (standard transformer-block stack semantics).
+    Returns the final activations, microbatch-major, numerically equal to
+    sequential application of all stages.
+    """
+    n_stages = mesh.shape[axis]
+    n_micro = x.shape[0]
+    perm_fwd = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+    def per_stage(params, xs):
+        # params: this stage's slice (leading axis 1) ; xs: (n_micro, mb, ...)
+        params = jax.tree_util.tree_map(lambda t: t[0], params)
+        stage_id = jax.lax.axis_index(axis)
+        n_ticks = n_micro + n_stages - 1
+
+        buf = jnp.zeros_like(xs[0])          # activation arriving this tick
+        outs = jnp.zeros_like(xs)            # only stage S-1's copy is real
+
+        def tick(t, carry):
+            buf, outs = carry
+            mb_idx = t - stage_id
+            # stage 0 ingests microbatch t from its local input copy
+            inject = jax.lax.dynamic_index_in_dim(xs, jnp.clip(t, 0, n_micro - 1), 0, keepdims=False)
+            cur = jnp.where(stage_id == 0, inject, buf)
+            active = (mb_idx >= 0) & (mb_idx < n_micro)
+            y = stage_fn(params, cur)
+            y = jnp.where(active, y, cur)
+            # last stage records its finished microbatch
+            outs = jax.lax.cond(
+                active & (stage_id == n_stages - 1),
+                lambda o: jax.lax.dynamic_update_index_in_dim(
+                    o, y, jnp.clip(mb_idx, 0, n_micro - 1), 0
+                ),
+                lambda o: o,
+                outs,
+            )
+            # rotate activations to the next stage
+            buf = jax.lax.ppermute(y, axis, perm_fwd)
+            return buf, outs
+
+        _, outs = jax.lax.fori_loop(0, n_ticks, tick, (buf, outs))
+        # broadcast the last stage's finished outputs to every stage so the
+        # out_spec can be replicated over the axis (masked psum = broadcast)
+        outs = jax.lax.psum(
+            jnp.where(stage_id == n_stages - 1, outs, jnp.zeros_like(outs)), axis
+        )
+        return outs
+
+    pspec = P(axis)
+    rep = P(*([None] * x.ndim))
+    fn = shard_map(
+        per_stage,
+        mesh=mesh,
+        in_specs=(jax.tree_util.tree_map(lambda _: pspec, stage_params), rep),
+        out_specs=rep,
+        check_rep=False,
+    )
+    return fn(stage_params, x)

@@ -1,0 +1,103 @@
+"""DiP fast-path matmul kernel: MXU matmul over permutated weight storage.
+
+The paper stores weights *permutated* (offline, software-level — Fig. 3) so
+the array consumes them without synchronization FIFOs.  On TPU the analogous
+first-class storage format keeps weights DiP-permutated in HBM; this kernel
+de-shears each weight block in VMEM (log2(64)=6 static rolls + selects, see
+kernels/common.py) and feeds the MXU, so the de-shear cost is amortized over
+the whole M dimension of the input block:
+
+    vector work  : O(bk * bn * log2 tile)   per weight block
+    MXU work     : O(bm * bk * bn)          per weight block
+
+Block layout (grid = (M/bm, N/bn, K/bk), K innermost for accumulation):
+
+    x : (bm, bk) VMEM   p : (bk, bn) VMEM   out : (bm, bn) VMEM
+    acc scratch : (bm, bn) f32/i32 VMEM
+
+All of bm/bk/bn default to MXU-aligned multiples of 128; bk and bn must be
+multiples of the permutation tile (64).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import common
+from repro.kernels.ref import acc_dtype_for
+
+__all__ = ["dip_matmul_pallas"]
+
+
+def _kernel(x_ref, p_ref, o_ref, acc_ref, *, perm_tile: int, fuse_deshear: bool):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = common.deshear_block(p_ref[...], perm_tile) if fuse_deshear else p_ref[...]
+    acc_ref[...] += jnp.dot(x_ref[...], w, preferred_element_type=acc_ref.dtype)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "perm_tile", "interpret", "out_dtype", "fuse_deshear"),
+)
+def dip_matmul_pallas(
+    x: jax.Array,
+    p: jax.Array,
+    *,
+    block_m: int = 256,
+    block_n: int = 256,
+    block_k: int = 256,
+    perm_tile: int = 64,
+    interpret: bool = False,
+    out_dtype=None,
+    fuse_deshear: bool = True,
+):
+    """``x @ unpermute_tiled(p)`` with the de-shear fused into the MXU loop.
+
+    Shapes must already be padded to block multiples (ops.py handles padding);
+    ``p`` is the DiP-permutated weight (K, N).  With ``fuse_deshear=False``
+    the kernel is a plain WS tiled matmul (used as the baseline and for
+    pre-desheared weights).
+    """
+    m, kdim = x.shape
+    k2, n = p.shape
+    if kdim != k2:
+        raise ValueError(f"contraction mismatch {x.shape} @ {p.shape}")
+    if m % block_m or kdim % block_k or n % block_n:
+        raise ValueError(f"unpadded shapes {x.shape} @ {p.shape} for blocks "
+                         f"({block_m},{block_k},{block_n})")
+    if block_k % perm_tile or block_n % perm_tile:
+        raise ValueError("block_k/block_n must be multiples of the permutation tile")
+
+    acc_dtype = acc_dtype_for(x, p)
+    out_dtype = out_dtype or (x.dtype if acc_dtype == jnp.float32 else acc_dtype)
+    grid = (m // block_m, n // block_n, kdim // block_k)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, perm_tile=perm_tile, fuse_deshear=fuse_deshear),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.MemorySpace.VMEM((block_m, block_n), acc_dtype)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x, p)

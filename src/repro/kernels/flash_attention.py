@@ -1,0 +1,112 @@
+"""Fused flash-attention kernel (forward) — the §Perf pair-3 lever.
+
+The 32k-prefill cells are memory-bound because the unfused online-softmax
+streams (b, h, Sq, chunk) score tensors through HBM ~10x per layer
+(EXPERIMENTS.md §Perf).  This kernel keeps the running max / denominator /
+accumulator in VMEM scratch across the KV-block grid dimension, so scores
+never leave VMEM — the canonical flash-attention structure, and the same
+lesson as DiP one level down: keep the hot tile resident in the fast tier.
+
+Grid: (batch*heads, Sq/block_q, Sk/block_k), KV innermost ("arbitrary").
+Blocks: q (block_q, d), k/v (block_k, d), out (block_q, d);
+scratch: m/l (block_q, 1) f32, acc (block_q, d) f32 — all VMEM.
+
+Causal masking via absolute positions (q_offset lets a decode/cache caller
+place the query block anywhere in the sequence).  Serving-oriented:
+forward-only (prefill/decode have no backward); training attention keeps the
+XLA online-softmax path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas"]
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, block_q: int, block_k: int, causal: bool):
+    kv_idx = pl.program_id(2)
+    q_idx = pl.program_id(1)
+
+    @pl.when(kv_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale              # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                      # (bk, d)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+
+    if causal:
+        q_pos = q_idx * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        k_pos = kv_idx * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_new = l_prev * alpha + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v_ref[0].astype(jnp.float32), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(kv_idx == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_q", "block_k", "causal", "interpret")
+)
+def flash_attention_pallas(
+    q: jax.Array,    # (BH, Sq, D) — batch*heads flattened
+    k: jax.Array,    # (BH, Sk, D)
+    v: jax.Array,    # (BH, Sk, D)
+    *,
+    block_q: int = 512,
+    block_k: int = 512,
+    causal: bool = True,
+    interpret: bool = False,
+):
+    bh, sq, d = q.shape
+    _, sk, _ = k.shape
+    if sq % block_q or sk % block_k:
+        raise ValueError(f"pad seq dims to blocks: {q.shape} {k.shape}")
+    scale = d ** -0.5
+    grid = (bh, sq // block_q, sk // block_k)
+
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, scale=scale, block_q=block_q, block_k=block_k, causal=causal
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.MemorySpace.VMEM((block_q, 1), jnp.float32),
+            pltpu.MemorySpace.VMEM((block_q, 1), jnp.float32),
+            pltpu.MemorySpace.VMEM((block_q, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(q, k, v)

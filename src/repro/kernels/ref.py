@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``*_ref`` computes the same mathematical function as its kernel with
+plain jax.numpy ops (no Pallas), in float32/int32 accumulation, so the
+kernels can be asserted allclose against them across shape/dtype sweeps.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import permute
+
+__all__ = ["acc_dtype_for", "ws_matmul_ref", "dip_matmul_ref", "dip_systolic_ref"]
+
+
+def acc_dtype_for(*args: jax.Array) -> jnp.dtype:
+    """MXU accumulation dtype: int32 for integer operands, else float32."""
+    if all(jnp.issubdtype(a.dtype, jnp.integer) for a in args):
+        return jnp.int32
+    return jnp.float32
+
+
+def ws_matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Plain matmul — the weight-stationary (TPU-like) semantics."""
+    return jnp.matmul(x, w, preferred_element_type=acc_dtype_for(x, w))
+
+
+def dip_matmul_ref(x: jax.Array, p: jax.Array, *, perm_tile: int = 64) -> jax.Array:
+    """DiP fast-path semantics: x @ unpermute_tiled(p).
+
+    ``p`` holds the weights in DiP-permutated storage (per ``perm_tile`` x
+    ``perm_tile`` block, paper Fig. 3 applied tile-wise).
+    """
+    w = permute.unpermute_tiled(p, perm_tile)
+    return jnp.matmul(x, w, preferred_element_type=acc_dtype_for(x, p))
+
+
+def dip_systolic_ref(x: jax.Array, p: jax.Array, *, perm_tile: int = 64) -> jax.Array:
+    """Wavefront-emulation semantics — mathematically identical to the fast
+    path; kept separate so both kernels are pinned to an explicit oracle."""
+    return dip_matmul_ref(x, p, perm_tile=perm_tile)

@@ -1,0 +1,25 @@
+"""Weight-stationary baseline matmul kernel (TPU-like reference).
+
+Identical block structure to kernels/dip_matmul.py minus the de-shear: this
+is the conventional WS tiled matmul the paper compares against.  Kept as a
+separate entry point so benchmarks can ablate the de-shear cost precisely
+(dip_matmul_pallas(fuse_deshear=False) and ws_matmul_pallas must generate
+identical HLO modulo the input tensor).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.dip_matmul import dip_matmul_pallas
+
+__all__ = ["ws_matmul_pallas"]
+
+
+@functools.wraps(dip_matmul_pallas)
+def ws_matmul_pallas(x: jax.Array, w: jax.Array, **kwargs):
+    """Plain tiled matmul ``x @ w`` (weights in natural layout)."""
+    kwargs.setdefault("fuse_deshear", False)
+    return dip_matmul_pallas(x, w, **kwargs)

@@ -1,0 +1,9 @@
+"""Launchers: mesh construction, dry-run, training and serving drivers.
+
+NOTE: repro.launch.dryrun sets XLA_FLAGS at import — never import it from
+library code; it is an entry point only (python -m repro.launch.dryrun).
+"""
+
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+
+__all__ = ["make_production_mesh", "make_local_mesh"]

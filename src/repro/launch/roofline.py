@@ -1,0 +1,188 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Per (arch x shape x mesh) the three terms (EXPERIMENTS.md §Roofline):
+
+    compute_s    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+    memory_s     = HLO_bytes_per_device / HBM_bandwidth_per_chip
+    collective_s = collective_bytes_per_device / ICI_link_bandwidth
+
+``cost_analysis()`` on the partitioned executable reports the *per-device*
+program, so per-chip constants apply directly.  Collective bytes are not in
+cost_analysis — they are summed from the optimized HLO text (the compiled
+module, after SPMD partitioning inserted the collectives), using each
+collective op's result shapes.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (assignment-provided).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+__all__ = ["HW", "RooflineReport", "analyze_compiled", "collective_bytes"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12          # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9               # B/s per chip
+    ici_bw: float = 50e9                # B/s per link
+    hbm_bytes: float = 16e9             # v5e capacity
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+# e.g.  f32[128,1024]{1,0}   bf16[4]   pred[]
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result bytes of every collective op in optimized HLO, by kind."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.lstrip()
+        # result-op lines look like:  %name = TYPE all-reduce(...)
+        m = re.match(r"%?[\w\.\-]+\s*=\s*(.*)", stripped)
+        if not m:
+            continue
+        rest = m.group(1)
+        kind = None
+        for k in _COLLECTIVES:
+            if re.search(rf"\b{k}(-start|-done)?\(", rest):
+                kind = k
+                break
+        if kind is None:
+            continue
+        if f"{kind}-done(" in rest:
+            continue  # avoid double counting start/done pairs
+        # result type is everything before the op name: may be a tuple
+        type_part = rest.split(kind)[0]
+        total = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(type_part))
+        out[kind] += total
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    coll_by_kind: Dict[str, int]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops_global: float           # 6*N*D (dense) / 6*N_active*D (MoE)
+    useful_flops_ratio: float           # MODEL_FLOPS / (HLO_FLOPs * chips)
+    peak_memory_bytes: Optional[float]  # from memory_analysis when available
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step-time lower bound (perfect overlap: max of terms)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute time / bound step time (the §Perf score)."""
+        if self.step_time_s <= 0:
+            return 0.0
+        useful_s = self.model_flops_global / (self.chips * HW().peak_flops)
+        return useful_s / self.step_time_s
+
+    def row(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "hlo_flops_per_dev": self.flops_per_device,
+            "hlo_bytes_per_dev": self.bytes_per_device,
+            "coll_bytes_per_dev": self.coll_bytes_per_device,
+            "model_flops": self.model_flops_global,
+            "useful_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "peak_memory_bytes": self.peak_memory_bytes,
+        }
+
+
+def model_flops(cfg, cell, tokens: Optional[int] = None) -> float:
+    """6*N*D with N = active params; decode counts one token per sequence."""
+    n = cfg.active_param_count()
+    if cell.kind == "train":
+        d = cell.global_batch * cell.seq_len
+        return 6.0 * n * d
+    if cell.kind == "prefill":
+        d = cell.global_batch * cell.seq_len
+        return 2.0 * n * d           # forward only
+    # decode: one token per slot
+    return 2.0 * n * cell.global_batch
+
+
+def analyze_compiled(
+    compiled, *, arch: str, shape: str, mesh_name: str, chips: int,
+    cfg=None, cell=None, hw: HW = HW(),
+) -> RooflineReport:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    try:
+        mem = compiled.memory_analysis()
+        peak = float(
+            getattr(mem, "temp_size_in_bytes", 0)
+            + getattr(mem, "argument_size_in_bytes", 0)
+            + getattr(mem, "output_size_in_bytes", 0)
+            - getattr(mem, "alias_size_in_bytes", 0)
+        )
+    except Exception:
+        peak = None
+    coll = collective_bytes(compiled.as_text())
+    mf = model_flops(cfg, cell) if (cfg is not None and cell is not None) else 0.0
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_device=flops,
+        bytes_per_device=byts,
+        coll_bytes_per_device=float(coll["total"]),
+        coll_by_kind=coll,
+        compute_s=flops / hw.peak_flops,
+        memory_s=byts / hw.hbm_bw,
+        collective_s=coll["total"] / hw.ici_bw,
+        model_flops_global=mf,
+        useful_flops_ratio=(mf / (flops * chips)) if flops else 0.0,
+        peak_memory_bytes=peak,
+    )

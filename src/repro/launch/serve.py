@@ -1,0 +1,55 @@
+"""Serving driver: batched requests through the slot-pool server.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --reduced \
+        --requests 8 --max-new 32
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import transformer as tf_model
+from repro.runtime import Server, ServerConfig
+from repro.runtime.server import Request
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--max-seq", type=int, default=256)
+    ap.add_argument("--dip", action="store_true",
+                    help="store weights DiP-permutated + use the Pallas kernel")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if args.dip:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, weight_format="dip", matmul_impl="pallas_dip",
+                                  compute_dtype="float32")
+
+    params = tf_model.init_params(jax.random.PRNGKey(0), cfg)
+    server = Server(cfg, ServerConfig(batch_slots=args.slots, max_seq=args.max_seq,
+                                      max_new_tokens=args.max_new), params)
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(rid=i, prompt=rng.integers(2, cfg.vocab_size, size=rng.integers(4, 16)))
+        for i in range(args.requests)
+    ]
+    results = server.serve(reqs)
+    for rid in sorted(results):
+        print(f"req {rid}: {len(results[rid])} tokens -> {results[rid][:8]}...")
+    print(f"[serve] {server.last_stats}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,141 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run currency.
+
+``input_specs(cfg, cell, policy)`` returns (fn, args) where ``fn`` is the
+step to lower (train_step / prefill_step / serve_step) and ``args`` is a
+pytree of sharding-annotated ShapeDtypeStructs.  Nothing here allocates.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.distributed.sharding import ShardingPolicy
+from repro.models import transformer as tf_model
+from repro.optim import AdamW
+
+__all__ = ["input_specs", "train_state_specs"]
+
+
+def _with_sharding(specs: Any, shardings: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        specs,
+        shardings,
+    )
+
+
+def train_state_specs(cfg: ArchConfig, policy: ShardingPolicy) -> Dict:
+    """Specs for {params, opt_state, step} with FSDP/TP shardings attached."""
+    pspecs = tf_model.param_specs(cfg)
+    pshard = policy.param_shardings(tf_model.param_template(cfg))
+    params = _with_sharding(pspecs, pshard)
+    # Adam moments mirror the parameter pytree (and sharding) in f32
+    moments = jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, jnp.float32, sharding=sh),
+        pspecs,
+        pshard,
+    )
+    scalar = jax.ShapeDtypeStruct((), jnp.int32)
+    f32 = jax.ShapeDtypeStruct((), jnp.float32)
+    return {
+        "params": params,
+        "opt_state": {"mu": moments, "nu": moments, "count": scalar, "grad_norm": f32},
+        "step": scalar,
+    }
+
+
+def _batch_specs(cfg: ArchConfig, cell: ShapeCell, policy: ShardingPolicy) -> Dict:
+    b, s = cell.global_batch, cell.seq_len
+    mesh = policy.mesh
+    dp = policy.dp_for(b) or None
+    tok_shard = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec(dp, None))
+    emb_shard = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec(dp, None, None))
+    if cfg.frontend != "none" and cell.kind != "decode":
+        return {
+            "embeddings": jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.dtype(cfg.compute_dtype), sharding=emb_shard),
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32, sharding=tok_shard),
+        }
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32, sharding=tok_shard),
+        "labels": jax.ShapeDtypeStruct((b, s), jnp.int32, sharding=tok_shard),
+    }
+
+
+def _cache_specs(cfg: ArchConfig, cell: ShapeCell, policy: ShardingPolicy) -> Any:
+    shapes = jax.eval_shape(
+        lambda: tf_model.init_cache(cfg, cell.global_batch, cell.seq_len)
+    )
+    return _with_sharding(shapes, _cache_shardings(shapes, policy))
+
+
+def _cache_shardings(shapes: Any, policy: ShardingPolicy) -> Any:
+    def walk(t, name=None):
+        if isinstance(t, dict):
+            return {k: walk(v, k) for k, v in t.items()}
+        if len(t.shape) == 0:  # pos scalar
+            return jax.sharding.NamedSharding(policy.mesh, jax.sharding.PartitionSpec())
+        return policy.named(policy.cache_pspec(name, tuple(t.shape)))
+
+    return walk(shapes)
+
+
+def input_specs(
+    cfg: ArchConfig, cell: ShapeCell, policy: ShardingPolicy, *,
+    kv_chunk: int = 1024, unroll: bool = False, microbatch: int = 1,
+) -> Tuple[Any, Tuple]:
+    """(fn_to_lower, arg_specs) for one (arch x shape) cell.
+
+    ``unroll=True`` unrolls the layer scans — used by the dry-run's cost
+    probes (XLA cost analysis counts a while body once; see launch/dryrun).
+    """
+    constrain = policy.constrain
+
+    if cell.kind == "train":
+        opt = AdamW(lr=3e-4)
+        # online-softmax attention for any long-ish context: bounds live
+        # scores to (b, heads, s_q, kv_chunk) by construction
+        kc = kv_chunk if cell.seq_len >= 4096 else 0
+        fn = tf_model.train_step_fn(cfg, opt, constrain=constrain, unroll=unroll,
+                                    kv_chunk=kc, microbatch=microbatch)
+        return fn, (train_state_specs(cfg, policy), _batch_specs(cfg, cell, policy))
+
+    # inference serves bf16 weights (no f32 masters): halves every
+    # param-touching byte — HBM reads, FSDP gathers, and the f32 relayout
+    # traffic that f32 storage drags into the graph (§Perf pair 3)
+    cd = jnp.dtype(cfg.compute_dtype)
+    pspecs = _with_sharding(
+        jax.tree_util.tree_map(
+            lambda t: jax.ShapeDtypeStruct(t.shape, cd), tf_model.param_specs(cfg)
+        ),
+        policy.param_shardings(tf_model.param_template(cfg)),
+    )
+
+    if cell.kind == "prefill":
+        def prefill(params, batch):
+            logits, _, _ = tf_model.forward(
+                params, cfg,
+                tokens=batch.get("tokens"), embeddings=batch.get("embeddings"),
+                kv_chunk=kv_chunk, constrain=constrain, unroll=unroll,
+                logits_positions="last",
+            )
+            return logits
+        batch = _batch_specs(cfg, cell, policy)
+        batch.pop("labels")
+        return prefill, (pspecs, batch)
+
+    # decode: one new token against a cache of cell.seq_len
+    fn = tf_model.decode_step_fn(cfg, constrain=constrain, unroll=unroll)
+    cache = _cache_specs(cfg, cell, policy)
+    mesh = policy.mesh
+    tok = jax.ShapeDtypeStruct(
+        (cell.global_batch, 1), jnp.int32,
+        sharding=jax.sharding.NamedSharding(
+            mesh,
+            jax.sharding.PartitionSpec(policy.dp_for(cell.global_batch) or None, None),
+        ),
+    )
+    return fn, (pspecs, cache, tok)

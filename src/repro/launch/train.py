@@ -1,0 +1,81 @@
+"""Training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch mamba2-370m --reduced \
+        --steps 50 --batch 8 --seq 256 --ckpt-dir /tmp/run1
+
+On the CPU container this trains reduced configs end-to-end (the ~100M-scale
+example lives in examples/train_lm.py); on a real slice the same driver jits
+the full config against the production mesh (--mesh single|multi).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config
+from repro.distributed.sharding import make_policy
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.optim import AdamW, cosine_schedule
+from repro.runtime import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--mesh", default="none", choices=["none", "local", "single", "multi"])
+    ap.add_argument("--compress-grads", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+
+    mesh = policy = None
+    if args.mesh == "local":
+        mesh = make_local_mesh(data=jax.device_count())
+        policy = make_policy(mesh, cfg, "train")
+    elif args.mesh in ("single", "multi"):
+        mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+        policy = make_policy(mesh, cfg, "train")
+
+    gt = None
+    if args.compress_grads:
+        from repro.distributed import compression
+        gt = compression.compression_transform()
+    opt = AdamW(lr=cosine_schedule(args.lr, 10, args.steps), grad_transform=gt)
+
+    trainer = Trainer(
+        cfg,
+        TrainerConfig(steps=args.steps, ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir),
+        optimizer=opt,
+        mesh=mesh,
+        policy=policy,
+        seq_len=args.seq,
+        global_batch=args.batch,
+    )
+    ctx = mesh if mesh is not None else _null()
+    with ctx:
+        out = trainer.run()
+    print(f"[train] done: {len(out['metrics'])} steps in {out['wall_s']:.1f}s, "
+          f"final loss {out['metrics'][-1]['loss']:.4f}")
+
+
+class _null:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Architecture zoo: one scan-based assembly covering all ten assigned archs."""
+
+from repro.models import attention, layers, moe, ssm, transformer
+
+__all__ = ["attention", "layers", "moe", "ssm", "transformer"]

@@ -1,0 +1,196 @@
+"""Mamba2 SSD (state-space duality) block — chunked scan + O(1) decode.
+
+Implements the SSD algorithm of Mamba2 (arXiv:2405.21060): the selective SSM
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * (B_t ⊗ x_t)
+    y_t = C_t · h_t + D * x_t
+computed chunk-parallel: within a chunk of Q tokens the contribution is a
+masked attention-like quadratic form (MXU-friendly — this is where the DiP
+matmul applies); across chunks a sequential scan passes the (H, P, N) state.
+
+Conventions (single B/C group, scalar A per head, as in Mamba2 defaults):
+    d_inner = expand * d_model,  H = d_inner / headdim (P), state N
+    in_proj -> [z (d_inner) | x (d_inner) | B (N) | C (N) | dt (H)]
+    causal depthwise conv (width ssm_conv) over [x | B | C]
+    gated RMSNorm then out_proj
+
+DiP applicability note (DESIGN.md §4): in_proj / out_proj / the chunked
+quadratic forms are matmuls (DiP tiles apply); the elementwise state decay
+has no systolic analogue and is executed on the VPU.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+Constrain = Callable[[jax.Array, str], jax.Array]
+_id: Constrain = lambda x, tag: x
+
+__all__ = ["ssd_block", "init_ssm_cache", "ssm_dims"]
+
+
+def ssm_dims(cfg) -> Dict[str, int]:
+    di = cfg.d_inner
+    h = cfg.n_ssm_heads
+    n = cfg.ssm_state
+    return dict(
+        d_inner=di,
+        heads=h,
+        headdim=cfg.ssm_headdim,
+        state=n,
+        conv_dim=di + 2 * n,
+        in_dim=2 * di + 2 * n + h,
+    )
+
+
+def init_ssm_cache(batch: int, cfg, dtype) -> Dict:
+    dims = ssm_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, dims["conv_dim"]), dtype),
+        "state": jnp.zeros((batch, dims["heads"], cfg.ssm_headdim, dims["state"]), jnp.float32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                 history: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv, width K.  xbc: (B, L, C), w: (K, C), b: (C,)."""
+    k = w.shape[0]
+    if history is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = history.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)              # (B, L+K-1, C)
+    out = sum(xp[:, i : i + xbc.shape[1], :] * w[i][None, None, :] for i in range(k))
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def ssd_block(
+    x: jax.Array,
+    p: Dict,
+    cfg,
+    *,
+    cache: Optional[Dict] = None,
+    constrain: Constrain = _id,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    """One Mamba2 block.  Prefill/train: chunked SSD; decode: O(1) update."""
+    bsz, seqlen, _ = x.shape
+    dims = ssm_dims(cfg)
+    di, h, pdim, n = dims["d_inner"], dims["heads"], dims["headdim"], dims["state"]
+    lk = dict(weight_format=cfg.weight_format, matmul_impl=cfg.matmul_impl,
+              compute_dtype=x.dtype)
+
+    zxbcdt = layers.linear(x, p["in_proj"], d_out=dims["in_dim"], **lk)
+    z, xin, bmat, cmat, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1
+    )
+
+    xbc = jnp.concatenate([xin, bmat, cmat], axis=-1)     # (B, L, conv_dim)
+    if cache is not None:
+        conv_hist = cache["conv"]
+        new_conv = jnp.concatenate([conv_hist, xbc], axis=1)[:, -(cfg.ssm_conv - 1):, :]
+        xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"], history=conv_hist)
+    else:
+        new_conv = None
+        xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xin, bmat, cmat = jnp.split(xbc, [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))  # (B,L,H)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))                                     # (H,) < 0
+    xh = xin.reshape(bsz, seqlen, h, pdim)
+
+    if cache is not None and seqlen == 1:
+        # ---- O(1) decode ----
+        state = cache["state"]                                      # (B,H,P,N) f32
+        da = jnp.exp(dt[:, 0] * a[None, :])                         # (B,H)
+        dbx = jnp.einsum(
+            "bh,bn,bhp->bhpn", dt[:, 0], bmat[:, 0].astype(jnp.float32),
+            xh[:, 0].astype(jnp.float32),
+        )
+        state = state * da[:, :, None, None] + dbx
+        y = jnp.einsum("bhpn,bn->bhp", state, cmat[:, 0].astype(jnp.float32))
+        y = y + p["D"].astype(jnp.float32)[None, :, None] * xh[:, 0].astype(jnp.float32)
+        y = y.reshape(bsz, 1, di)
+        new_cache = {"conv": new_conv, "state": state, "pos": cache["pos"] + 1}
+    else:
+        # ---- chunked SSD ----
+        q = min(cfg.ssm_chunk, seqlen)
+        pad = (-seqlen) % q
+        if pad:
+            # Pad to a chunk multiple with inert steps: dt=0 makes the state
+            # update an exact identity (exp(0*A)=1, dB*x=0), so the carried
+            # state and the real positions' outputs are unaffected.
+            zpad = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+            dt, bmat, cmat, xh = zpad(dt), zpad(bmat), zpad(cmat), zpad(xh)
+        padded_len = seqlen + pad
+        nc = padded_len // q
+
+        def r(t, shape):  # reshape (B, Lp, ...) -> (B, nc, Q, ...)
+            return t.reshape((bsz, nc, q) + shape)
+
+        dt_c = r(dt, (h,))
+        b_c = r(bmat.astype(jnp.float32), (n,))
+        c_c = r(cmat.astype(jnp.float32), (n,))
+        x_c = r(xh.astype(jnp.float32), (h, pdim))
+
+        da_c = dt_c * a[None, None, None, :]                        # (B,nc,Q,H) ≤ 0
+        cum = jnp.cumsum(da_c, axis=2)                              # within-chunk decay
+        total = cum[:, :, -1, :]                                    # (B,nc,H)
+
+        # intra-chunk (masked quadratic form — MXU work)
+        # L[t,s] = exp(cum[t] - cum[s]) for s <= t.  The mask must select
+        # BEFORE the exp: for s > t the difference is positive and exp
+        # overflows to inf, and where(mask, inf, 0) back-propagates
+        # 0 * d(inf) = NaN (the standard where-grad trap).
+        diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]        # (B,nc,Q,Q,H)
+        mask = jnp.tril(jnp.ones((q, q), bool))[None, None, :, :, None]
+        decay = jnp.exp(jnp.where(mask, diff, -jnp.inf))
+        cb = jnp.einsum("bcqn,bcsn->bcqs", c_c, b_c)                # (B,nc,Q,Q)
+        att = cb[..., None] * decay * dt_c[:, :, None, :, :]        # (B,nc,Q,Q,H)
+        y_intra = jnp.einsum("bcqsh,bcshp->bcqhp", att, x_c)
+
+        # per-chunk outgoing state: sum_s exp(total - cum[s]) dt_s B_s x_s
+        state_decay = jnp.exp(total[:, :, None, :] - cum)           # (B,nc,Q,H)
+        dbx = jnp.einsum("bcqh,bcqn,bcqhp->bchpn",
+                         dt_c * state_decay, b_c, x_c)              # (B,nc,H,P,N)
+
+        # sequential scan across chunks (the only serial dependency)
+        init = (
+            cache["state"] if cache is not None
+            else jnp.zeros((bsz, h, pdim, n), jnp.float32)
+        )
+
+        def chunk_step(hprev, xs):
+            dbx_c, tot_c = xs                                       # (B,H,P,N), (B,H)
+            hnew = hprev * jnp.exp(tot_c)[:, :, None, None] + dbx_c
+            return hnew, hprev
+
+        hlast, hprevs = jax.lax.scan(
+            chunk_step,
+            init,
+            (jnp.moveaxis(dbx, 1, 0), jnp.moveaxis(total, 1, 0)),
+        )
+        hprevs = jnp.moveaxis(hprevs, 0, 1)                         # (B,nc,H,P,N)
+
+        # inter-chunk contribution: C_t · exp(cum[t]) h_prev
+        in_decay = jnp.exp(cum)                                     # (B,nc,Q,H)
+        y_inter = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", c_c, hprevs, in_decay)
+
+        y = (y_intra + y_inter).reshape(bsz, padded_len, h, pdim)
+        y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+        y = y.reshape(bsz, padded_len, di)[:, :seqlen]
+        if cache is not None:
+            new_cache = {"conv": new_conv, "state": hlast, "pos": cache["pos"] + seqlen}
+        else:
+            new_cache = None
+
+    # gated RMSNorm + out projection
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    y = layers.rms_norm(y, p["norm"], cfg.norm_eps)
+    y = constrain(y, "ssm_inner")
+    out = layers.linear(y, p["out_proj"], d_out=cfg.d_model, **lk)
+    return constrain(out, "act_btd"), new_cache

@@ -1,0 +1,522 @@
+"""Model assembly: parameter templates, scan-based stacks, train/decode steps.
+
+One code path covers all ten assigned architectures:
+
+  dense / vlm / audio   — GQA attention + SwiGLU FFN blocks
+  moe                   — GQA or MLA attention + routed expert FFN
+  ssm                   — Mamba2 SSD blocks (attention-free)
+  hybrid                — Mamba2 blocks + a single *shared* attention+FFN
+                          block applied every ``attn_every`` layers (Zamba2)
+
+Parameters are layer-stacked pytrees (leading axis = n_layers) consumed by
+``jax.lax.scan`` — constant compile time in depth, which is what makes the
+512-device dry-run of a 94-layer MoE tractable.  ``param_specs`` builds the
+same pytree as ShapeDtypeStructs (no allocation) for the dry-run;
+``init_params`` materializes it for real runs.
+
+[vlm]/[audio] frontends are stubs per the assignment: ``forward`` accepts
+precomputed ``embeddings`` in place of token ids.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention, layers, moe, ssm
+
+Constrain = Callable[[jax.Array, str], jax.Array]
+_id: Constrain = lambda x, tag: x
+
+__all__ = [
+    "param_template",
+    "init_params",
+    "param_specs",
+    "forward",
+    "init_cache",
+    "loss_fn",
+    "train_step_fn",
+    "decode_step_fn",
+]
+
+
+# ------------------------------------------------------------ param layout --
+def _lin(cfg, d_in, d_out):
+    """(storage_shape, fan_in) for a linear under the config's weight format."""
+    return layers.linear_param_shape(d_in, d_out, cfg.weight_format), d_in
+
+
+def param_template(cfg) -> Dict[str, Any]:
+    """Nested dict: leaf = (shape, dtype_str, fan_in).  Layer-stacked."""
+    d, v = cfg.d_model, cfg.padded_vocab
+    pdt = cfg.param_dtype
+    t: Dict[str, Any] = {
+        "embed": ((v, d), pdt, d),
+        "final_norm": ((d,), pdt, None),
+    }
+    if not cfg.tie_embeddings:
+        (shape, fan), = [_lin(cfg, d, v)]
+        t["lm_head"] = (shape, pdt, fan)
+
+    def stacked(shape, fan, L):
+        return ((L,) + shape, pdt, fan)
+
+    L = cfg.n_layers
+    blk: Dict[str, Any] = {}
+
+    if cfg.ssm_state:  # mamba2 blocks (ssm and hybrid families)
+        dims = ssm.ssm_dims(cfg)
+        nl = L
+        (s_in, f_in) = _lin(cfg, d, dims["in_dim"])
+        (s_out, f_out) = _lin(cfg, dims["d_inner"], d)
+        blk.update(
+            norm_in=stacked((d,), None, nl),
+            in_proj=stacked(s_in, f_in, nl),
+            conv_w=stacked((cfg.ssm_conv, dims["conv_dim"]), cfg.ssm_conv, nl),
+            conv_b=stacked((dims["conv_dim"],), None, nl),
+            dt_bias=stacked((dims["heads"],), None, nl),
+            A_log=stacked((dims["heads"],), None, nl),
+            D=stacked((dims["heads"],), None, nl),
+            norm=stacked((dims["d_inner"],), None, nl),
+            out_proj=stacked(s_out, f_out, nl),
+        )
+        t["layers"] = blk
+        if cfg.is_hybrid:
+            hd = cfg.resolved_head_dim
+            sh: Dict[str, Any] = {"attn_norm": ((d,), pdt, None), "ffn_norm": ((d,), pdt, None)}
+            for nm, (di, do) in dict(
+                wq=(d, cfg.n_heads * hd), wk=(d, cfg.n_kv_heads * hd),
+                wv=(d, cfg.n_kv_heads * hd), wo=(cfg.n_heads * hd, d),
+                w_gate=(d, cfg.d_ff), w_up=(d, cfg.d_ff), w_down=(cfg.d_ff, d),
+            ).items():
+                (shape, fan) = _lin(cfg, di, do)
+                sh[nm] = (shape, pdt, fan)
+            t["shared_attn"] = sh
+        return t
+
+    # transformer families
+    hd = cfg.resolved_head_dim
+    blk["attn_norm"] = stacked((d,), None, L)
+    blk["ffn_norm"] = stacked((d,), None, L)
+    if cfg.use_mla:
+        dn, dr, dvh = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+        rr = cfg.kv_lora_rank
+        for nm, (di, do) in dict(
+            wq=(d, cfg.n_heads * (dn + dr)), w_dkv=(d, rr), w_krope=(d, dr),
+            w_uk=(rr, cfg.n_heads * dn), w_uv=(rr, cfg.n_heads * dvh),
+            wo=(cfg.n_heads * dvh, d),
+        ).items():
+            (shape, fan) = _lin(cfg, di, do)
+            blk[nm] = stacked(shape, fan, L)
+    else:
+        for nm, (di, do) in dict(
+            wq=(d, cfg.n_heads * hd), wk=(d, cfg.n_kv_heads * hd),
+            wv=(d, cfg.n_kv_heads * hd), wo=(cfg.n_heads * hd, d),
+        ).items():
+            (shape, fan) = _lin(cfg, di, do)
+            blk[nm] = stacked(shape, fan, L)
+        if cfg.qkv_bias:
+            blk["bq"] = stacked((cfg.n_heads * hd,), None, L)
+            blk["bk"] = stacked((cfg.n_kv_heads * hd,), None, L)
+            blk["bv"] = stacked((cfg.n_kv_heads * hd,), None, L)
+
+    if cfg.is_moe:
+        e, ffe = cfg.n_experts, cfg.d_ff_expert
+        blk["router"] = stacked((d, e), d, L)
+        blk["w_gate"] = stacked((e, d, ffe), d, L)
+        blk["w_up"] = stacked((e, d, ffe), d, L)
+        blk["w_down"] = stacked((e, ffe, d), ffe, L)
+        if cfg.n_shared_experts:
+            sff = cfg.n_shared_experts * ffe
+            for nm, (di, do) in dict(
+                shared_w_gate=(d, sff), shared_w_up=(d, sff), shared_w_down=(sff, d)
+            ).items():
+                (shape, fan) = _lin(cfg, di, do)
+                blk[nm] = stacked(shape, fan, L)
+    else:
+        for nm, (di, do) in dict(
+            w_gate=(d, cfg.d_ff), w_up=(d, cfg.d_ff), w_down=(cfg.d_ff, d)
+        ).items():
+            (shape, fan) = _lin(cfg, di, do)
+            blk[nm] = stacked(shape, fan, L)
+
+    t["layers"] = blk
+    return t
+
+
+def _map_template(t, fn):
+    if isinstance(t, dict):
+        return {k: _map_template(v, fn) for k, v in t.items()}
+    return fn(*t)
+
+
+def param_specs(cfg) -> Dict[str, Any]:
+    """ShapeDtypeStruct pytree — used by the dry-run (no allocation)."""
+    return _map_template(
+        param_template(cfg),
+        lambda shape, dt, fan: jax.ShapeDtypeStruct(shape, jnp.dtype(dt)),
+    )
+
+
+def init_params(key: jax.Array, cfg) -> Dict[str, Any]:
+    """Materialized parameters (truncated-normal fan-in scaling; norms at 1).
+
+    DiP-format weights are initialized in natural layout then converted with
+    ``store_weight`` — the offline permutation step of paper Fig. 3.
+    """
+    template = param_template(cfg)
+    leaves, treedef = jax.tree_util.tree_flatten(
+        template, is_leaf=lambda x: isinstance(x, tuple) and isinstance(x[0], tuple)
+    )
+    keys = jax.random.split(key, len(leaves))
+
+    def make(leaf, k):
+        shape, dt, fan = leaf
+        dt = jnp.dtype(dt)
+        if fan is None:  # norms / biases / scalars
+            init = jnp.ones(shape, dt)
+            return init
+
+        # special-cased SSM scalars by shape heuristics handled below
+        scale = (1.0 / max(1, fan)) ** 0.5
+        return (jax.random.truncated_normal(k, -2, 2, shape, jnp.float32) * scale).astype(dt)
+
+    params = jax.tree_util.tree_unflatten(treedef, [make(l, k) for l, k in zip(leaves, keys)])
+
+    # SSM-specific parameter semantics
+    if cfg.ssm_state:
+        lyr = params["layers"]
+        nl = cfg.n_layers
+        dims = ssm.ssm_dims(cfg)
+        k1, k2 = jax.random.split(key)
+        lyr["A_log"] = jnp.log(
+            jax.random.uniform(k1, (nl, dims["heads"]), jnp.float32, 1.0, 16.0)
+        ).astype(jnp.dtype(cfg.param_dtype))
+        dt0 = jax.random.uniform(k2, (nl, dims["heads"]), jnp.float32, 1e-3, 0.1)
+        lyr["dt_bias"] = (dt0 + jnp.log(-jnp.expm1(-dt0))).astype(jnp.dtype(cfg.param_dtype))
+        lyr["conv_b"] = jnp.zeros_like(lyr["conv_b"])
+    if cfg.qkv_bias and "bq" in params.get("layers", {}):
+        for nm in ("bq", "bk", "bv"):
+            params["layers"][nm] = jnp.zeros_like(params["layers"][nm])
+    return params
+
+
+# ---------------------------------------------------------------- forward ---
+def _transformer_block(x, lp, cfg, *, positions, cache, kv_chunk, constrain,
+                       unroll=False):
+    attn_in = layers.rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+    if cfg.use_mla:
+        a, new_cache = attention.mla_attention(
+            attn_in, lp, cfg, positions=positions, cache=cache,
+            kv_chunk=kv_chunk, constrain=constrain, unroll=unroll,
+        )
+    else:
+        a, new_cache = attention.gqa_attention(
+            attn_in, lp, cfg, positions=positions, cache=cache,
+            kv_chunk=kv_chunk, constrain=constrain, unroll=unroll,
+        )
+    x = x + a  # mid-block residual: left to propagation (constraining it
+    # forces an extra scatter/gather pair per layer — §Perf iter 4, refuted)
+    ffn_in = layers.rms_norm(x, lp["ffn_norm"], cfg.norm_eps)
+    if cfg.is_moe:
+        f, aux = moe.moe_ffn(ffn_in, lp, cfg, constrain=constrain)
+    else:
+        f, aux = moe.dense_ffn(ffn_in, lp, cfg, constrain=constrain), jnp.zeros((), jnp.float32)
+    # the scan carry is saved per layer for backward — constraining it keeps
+    # the saved residuals in the sequence-sharded layout (16x less memory)
+    return constrain(x + f, "act_btd"), new_cache, aux
+
+
+def _mamba_block(x, lp, cfg, *, cache, constrain):
+    inner_in = layers.rms_norm(x, lp["norm_in"], cfg.norm_eps)
+    y, new_cache = ssm.ssd_block(inner_in, lp, cfg, cache=cache, constrain=constrain)
+    return constrain(x + y, "act_btd"), new_cache
+
+
+def forward(
+    params: Dict[str, Any],
+    cfg,
+    *,
+    tokens: Optional[jax.Array] = None,        # (B, S) int32
+    embeddings: Optional[jax.Array] = None,    # (B, S, d) — [vlm]/[audio] stubs
+    cache: Optional[Dict] = None,              # layer-stacked cache pytree
+    kv_chunk: int = 0,
+    constrain: Constrain = _id,
+    unroll: bool = False,                      # dry-run cost-probe mode: unroll
+                                               # layer scans so XLA cost analysis
+                                               # counts every layer (see
+                                               # launch/dryrun.py probe logic)
+    logits_positions: str = "all",             # "all" | "last" — serving prefill
+                                               # needs only the next-token logits
+) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
+    """Returns (logits, new_cache, aux_loss)."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    if embeddings is not None:
+        x = embeddings.astype(cd)
+    else:
+        x = params["embed"].astype(cd)[tokens]
+    x = constrain(x, "act_btd")
+    b, s = x.shape[:2]
+
+    start = cache["pos"] if cache is not None else jnp.zeros((), jnp.int32)
+    positions = start + jnp.arange(s, dtype=jnp.int32)
+
+    remat = cfg.remat == "block"
+
+    if cfg.ssm_state:
+        x, new_layer_caches = _scan_mamba(params, cfg, x, cache, remat, constrain,
+                                          unroll, kv_chunk)
+        if cfg.is_hybrid:
+            pass  # handled inside _scan_mamba
+        aux_total = jnp.zeros((), jnp.float32)
+    else:
+        def block(carry, xs):
+            x, aux = carry
+            lp, lcache = xs
+            if lcache is not None:
+                lcache = dict(lcache, pos=start)  # all layers share the position
+            x, new_cache, aux_i = _transformer_block(
+                x, lp, cfg, positions=positions, cache=lcache,
+                kv_chunk=kv_chunk, constrain=constrain, unroll=unroll,
+            )
+            if new_cache is not None:
+                new_cache = _strip_pos(new_cache)
+            return (x, aux + aux_i), new_cache
+
+        block_fn = jax.checkpoint(block) if remat else block
+        layer_caches = cache["layers"] if cache is not None else None
+        (x, aux_total), new_layer_caches = jax.lax.scan(
+            block_fn, (x, jnp.zeros((), jnp.float32)), (params["layers"], layer_caches),
+            unroll=cfg.n_layers if unroll else 1,
+        )
+
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if logits_positions == "last":
+        # serving prefill: one row through the lm_head instead of S rows —
+        # removes the (B, S, V) logits and their gathers (§Perf pair 3)
+        x = x[:, -1:]
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    if cfg.tie_embeddings:
+        logits = jnp.matmul(
+            x, head.astype(cd), preferred_element_type=jnp.float32
+        ).astype(jnp.float32)
+    else:
+        logits = layers.linear(
+            x, head, d_out=cfg.padded_vocab,
+            weight_format=cfg.weight_format, matmul_impl=cfg.matmul_impl,
+            compute_dtype=cd,
+        ).astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab_size:
+        # mask the padding lanes (never sampled, -inf in the softmax/loss);
+        # keeping the padded width lets the vocab dim shard over any axis
+        lane = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+        logits = jnp.where(lane < cfg.vocab_size, logits, -1e30)
+    logits = constrain(logits, "logits")
+
+    new_cache = None
+    if cache is not None:
+        new_cache = dict(cache)
+        new_cache["layers"] = new_layer_caches
+        new_cache["pos"] = cache["pos"] + s
+    return logits, new_cache, aux_total
+
+
+def _scan_mamba(params, cfg, x, cache, remat, constrain, unroll=False, kv_chunk=0):
+    """Scan over mamba blocks; hybrid: shared attn applied per superblock."""
+    lp_all = params["layers"]
+    lcaches = cache["layers"] if cache is not None else None
+
+    pos_now = cache["pos"] if cache is not None else jnp.zeros((), jnp.int32)
+
+    def mblock(x, lp, lcache):
+        if lcache is not None:
+            lcache = dict(lcache, pos=pos_now)
+        x, nc = _mamba_block(x, lp, cfg, cache=lcache, constrain=constrain)
+        return x, (_strip_pos(nc) if nc is not None else None)
+
+    mblock = jax.checkpoint(mblock) if remat else mblock
+
+    if not cfg.is_hybrid:
+        def body(x, xs):
+            lp, lc = xs
+            return mblock(x, lp, lc)
+        return jax.lax.scan(body, x, (lp_all, lcaches),
+                            unroll=cfg.n_layers if unroll else 1)
+
+    # hybrid: group layers into superblocks of attn_every mamba layers,
+    # each followed by the single shared attention+FFN block.
+    ae = cfg.attn_every
+    n_super = cfg.n_layers // ae
+    shared = params["shared_attn"]
+    b, s = x.shape[:2]
+    positions = pos_now + jnp.arange(s, dtype=jnp.int32)
+
+    def regroup(t):
+        return t.reshape((n_super, ae) + t.shape[1:])
+
+    lp_grp = jax.tree_util.tree_map(regroup, lp_all)
+    # split cache: mamba caches (stacked L) + shared-attn caches (stacked n_super)
+    mcache_grp = (
+        jax.tree_util.tree_map(regroup, {k: v for k, v in lcaches.items() if k != "attn"})
+        if lcaches is not None else None
+    )
+    acache = lcaches["attn"] if lcaches is not None else None
+
+    def shared_block(x, sc):
+        if sc is not None:
+            sc = dict(sc, pos=pos_now)
+        attn_in = layers.rms_norm(x, shared["attn_norm"], cfg.norm_eps)
+        a, new_sc = attention.gqa_attention(
+            attn_in, shared, cfg, positions=positions, cache=sc,
+            kv_chunk=kv_chunk, constrain=constrain, unroll=unroll,
+        )
+        x = x + a
+        ffn_in = layers.rms_norm(x, shared["ffn_norm"], cfg.norm_eps)
+        x = x + moe.dense_ffn(ffn_in, shared, cfg, constrain=constrain)
+        return x, (_strip_pos(new_sc) if new_sc is not None else None)
+
+    def superblock(x, xs):
+        lp, mc, ac = xs
+        def inner(x, ys):
+            ilp, imc = ys
+            return mblock(x, ilp, imc)
+        x, new_mc = jax.lax.scan(inner, x, (lp, mc), unroll=ae if unroll else 1)
+        x, new_ac = shared_block(x, ac)
+        return x, (new_mc, new_ac)
+
+    x, (new_mc, new_ac) = jax.lax.scan(
+        superblock, x, (lp_grp, mcache_grp, acache),
+        unroll=n_super if unroll else 1,
+    )
+    if cache is None:
+        return x, None
+    new_mc = jax.tree_util.tree_map(
+        lambda t: t.reshape((cfg.n_layers,) + t.shape[2:]), new_mc
+    )
+    new_mc["attn"] = new_ac
+    return x, new_mc
+
+
+# ------------------------------------------------------------------ caches --
+def init_cache(cfg, batch: int, max_seq: int) -> Dict[str, Any]:
+    """Layer-stacked decode cache (leading axis = n_layers / n_super)."""
+    cd = jnp.dtype(cfg.compute_dtype)
+
+    def stack(make, n):
+        caches = [make() for _ in range(n)]
+        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *caches)
+
+    if cfg.ssm_state:
+        base = stack(lambda: _strip_pos(ssm.init_ssm_cache(batch, cfg, cd)), cfg.n_layers)
+        if cfg.is_hybrid:
+            n_super = cfg.n_layers // cfg.attn_every
+            base["attn"] = stack(
+                lambda: _strip_pos(
+                    attention.init_gqa_cache(
+                        batch, cfg.n_kv_heads, max_seq, cfg.resolved_head_dim, cd
+                    )
+                ),
+                n_super,
+            )
+        layers_cache = base
+    elif cfg.use_mla:
+        layers_cache = stack(
+            lambda: _strip_pos(attention.init_mla_cache(batch, max_seq, cfg, cd)),
+            cfg.n_layers,
+        )
+    else:
+        layers_cache = stack(
+            lambda: _strip_pos(
+                attention.init_gqa_cache(
+                    batch, cfg.n_kv_heads, max_seq, cfg.resolved_head_dim, cd
+                )
+            ),
+            cfg.n_layers,
+        )
+    return {"layers": layers_cache, "pos": jnp.zeros((), jnp.int32)}
+
+
+def _strip_pos(c: Dict) -> Dict:
+    return {k: v for k, v in c.items() if k != "pos"}
+
+
+# ------------------------------------------------------------- objectives ---
+def loss_fn(params, cfg, batch, *, constrain: Constrain = _id,
+            unroll: bool = False, kv_chunk: int = 0) -> jax.Array:
+    logits, _, aux = forward(
+        params, cfg,
+        tokens=batch.get("tokens"), embeddings=batch.get("embeddings"),
+        constrain=constrain, unroll=unroll, kv_chunk=kv_chunk,
+    )
+    loss = layers.cross_entropy_loss(logits[:, :-1], batch["labels"][:, 1:])
+    return loss + aux
+
+
+def train_step_fn(cfg, optimizer, *, constrain: Constrain = _id,
+                  unroll: bool = False, kv_chunk: int = 0, microbatch: int = 1):
+    """Returns step(state, batch) -> (state, metrics).  Pure; jit at call site.
+
+    ``microbatch > 1`` enables gradient accumulation: the global batch is
+    split into ``microbatch`` slices scanned sequentially with the summed
+    gradient applied once — live activation memory scales with the slice
+    size (the standard fit-the-HBM lever for the biggest train cells).
+    """
+
+    def grad_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch, constrain=constrain, unroll=unroll,
+                              kv_chunk=kv_chunk)
+        )(params)
+
+    def step(state, batch):
+        params, opt_state, step_no = state["params"], state["opt_state"], state["step"]
+        if microbatch <= 1:
+            loss, grads = grad_of(params, batch)
+        else:
+            def split(t):
+                b = t.shape[0]
+                return t.reshape((microbatch, b // microbatch) + t.shape[1:])
+
+            micro = jax.tree_util.tree_map(split, batch)
+
+            def acc_step(carry, mb):
+                loss_acc, g_acc = carry
+                loss_i, g_i = grad_of(params, mb)
+                return (
+                    loss_acc + loss_i,
+                    jax.tree_util.tree_map(jnp.add, g_acc, g_i),
+                ), None
+
+            zero_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (loss, grads), _ = jax.lax.scan(
+                acc_step, (jnp.zeros((), jnp.float32), zero_g), micro
+            )
+            inv = 1.0 / microbatch
+            loss = loss * inv
+            grads = jax.tree_util.tree_map(lambda g: g * inv, grads)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = jax.tree_util.tree_map(lambda p, u: p + u, params, updates)
+        gnorm = optimizer.last_grad_norm(opt_state)
+        new_state = {"params": params, "opt_state": opt_state, "step": step_no + 1}
+        return new_state, {"loss": loss, "grad_norm": gnorm, "step": step_no + 1}
+
+    return step
+
+
+def decode_step_fn(cfg, *, constrain: Constrain = _id, unroll: bool = False):
+    """Returns serve_step(params, cache, tokens) -> (logits, cache)."""
+
+    def step(params, cache, tokens):
+        logits, new_cache, _ = forward(
+            params, cfg, tokens=tokens, cache=cache, constrain=constrain,
+            unroll=unroll,
+        )
+        return logits, new_cache
+
+    return step

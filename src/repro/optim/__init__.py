@@ -1,0 +1,12 @@
+"""Optimizers and schedules (self-contained — no optax dependency)."""
+
+from repro.optim.adamw import AdamW, GradientTransform, clip_by_global_norm
+from repro.optim.schedules import cosine_schedule, linear_warmup
+
+__all__ = [
+    "AdamW",
+    "GradientTransform",
+    "clip_by_global_norm",
+    "cosine_schedule",
+    "linear_warmup",
+]

@@ -1,0 +1,114 @@
+"""AdamW with global-norm clipping, built for sharded pytrees.
+
+Self-contained (optax is not available offline).  The optimizer state mirrors
+the parameter pytree leaf-for-leaf, so whatever sharding the parameters carry
+propagates to the moments — FSDP/ZeRO sharding of optimizer state falls out
+of GSPMD for free.
+
+Interface expected by repro.models.transformer.train_step_fn:
+    opt = AdamW(lr=..., ...)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)   # params += updates
+    opt.last_grad_norm(state) -> f32 scalar (pre-clip global norm)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamW", "GradientTransform", "clip_by_global_norm"]
+
+Schedule = Union[float, Callable[[jax.Array], jax.Array]]
+
+
+def _global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = _global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda l: (l * scale).astype(l.dtype), tree), norm
+
+
+@dataclasses.dataclass(frozen=True)
+class GradientTransform:
+    """Optional hook applied to gradients before the optimizer (e.g. the
+    compression transform from repro.distributed.compression)."""
+
+    fn: Callable[[Any, Any], tuple]  # (grads, transform_state) -> (grads, state)
+    init: Callable[[Any], Any]       # params -> transform_state
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Schedule = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    grad_transform: Optional[GradientTransform] = None
+
+    def init(self, params) -> Dict[str, Any]:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        state = {
+            "mu": jax.tree_util.tree_map(zeros, params),
+            "nu": jax.tree_util.tree_map(zeros, params),
+            "count": jnp.zeros((), jnp.int32),
+            "grad_norm": jnp.zeros((), jnp.float32),
+        }
+        if self.grad_transform is not None:
+            state["transform"] = self.grad_transform.init(params)
+        return state
+
+    def _lr_at(self, count):
+        return self.lr(count) if callable(self.lr) else jnp.asarray(self.lr, jnp.float32)
+
+    def update(self, grads, state, params):
+        if self.grad_transform is not None:
+            grads, tstate = self.grad_transform.fn(grads, state["transform"])
+        else:
+            tstate = None
+
+        grads, gnorm = clip_by_global_norm(grads, self.clip_norm)
+        count = state["count"] + 1
+        b1c = 1.0 - self.b1 ** count.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** count.astype(jnp.float32)
+        lr = self._lr_at(count)
+
+        def upd(g, mu, nu, p):
+            g32 = g.astype(jnp.float32)
+            mu = self.b1 * mu + (1 - self.b1) * g32
+            nu = self.b2 * nu + (1 - self.b2) * jnp.square(g32)
+            mhat = mu / b1c
+            nhat = nu / b2c
+            step = mhat / (jnp.sqrt(nhat) + self.eps)
+            if self.weight_decay and p.ndim >= 2:  # decay matrices only
+                step = step + self.weight_decay * p.astype(jnp.float32)
+            return (-lr * step).astype(p.dtype), mu, nu
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_mu = treedef.flatten_up_to(state["mu"])
+        flat_nu = treedef.flatten_up_to(state["nu"])
+        flat_p = treedef.flatten_up_to(params)
+        out = [upd(g, m, n, p) for g, m, n, p in zip(flat_g, flat_mu, flat_nu, flat_p)]
+        updates = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+        new_state = {
+            "mu": jax.tree_util.tree_unflatten(treedef, [o[1] for o in out]),
+            "nu": jax.tree_util.tree_unflatten(treedef, [o[2] for o in out]),
+            "count": count,
+            "grad_norm": gnorm,
+        }
+        if tstate is not None:
+            new_state["transform"] = tstate
+        return updates, new_state
+
+    @staticmethod
+    def last_grad_norm(state) -> jax.Array:
+        return state["grad_norm"]

@@ -1,0 +1,26 @@
+"""Learning-rate schedules (callables: step -> lr)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["linear_warmup", "cosine_schedule"]
+
+
+def linear_warmup(base_lr: float, warmup_steps: int):
+    def lr(step):
+        frac = jnp.minimum(step.astype(jnp.float32) / max(1, warmup_steps), 1.0)
+        return base_lr * frac
+
+    return lr
+
+
+def cosine_schedule(base_lr: float, warmup_steps: int, total_steps: int, min_frac: float = 0.1):
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(s / max(1, warmup_steps), 1.0)
+        progress = jnp.clip((s - warmup_steps) / max(1, total_steps - warmup_steps), 0.0, 1.0)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * progress))
+        return base_lr * warm * cos
+
+    return lr

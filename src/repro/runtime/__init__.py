@@ -1,0 +1,6 @@
+"""Runtime: fault-tolerant training loop and batched serving loop."""
+
+from repro.runtime.trainer import Trainer, TrainerConfig
+from repro.runtime.server import Server, ServerConfig
+
+__all__ = ["Trainer", "TrainerConfig", "Server", "ServerConfig"]

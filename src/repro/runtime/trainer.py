@@ -1,0 +1,156 @@
+"""Fault-tolerant training loop.
+
+Production behaviours implemented (and exercised by tests/test_runtime.py):
+
+  * **Auto-resume** — on start, restores the latest complete checkpoint
+    (params + optimizer state + data cursor) and continues bit-exactly; a
+    SIGKILL mid-run loses at most ``ckpt_every`` steps.
+  * **Async checkpointing** — device->host snapshot is synchronous (buffers
+    are donated), the file write overlaps the next steps.
+  * **Failure injection** — ``fail_at_step`` raises mid-loop to let tests
+    prove the restart path (a stand-in for a node loss; at multi-pod scale
+    the same checkpoint/restart contract is driven by the cluster manager).
+  * **Straggler mitigation** — per-step wall-time EWMA; steps slower than
+    ``straggler_factor``x the EWMA are counted and surfaced in metrics (the
+    1000-node action — re-scheduling the slow host — is the launcher's job;
+    the signal is produced here).
+  * **Elastic re-mesh** — checkpoints are mesh-independent; `Trainer` takes
+    whatever mesh/policy it is given and restores into it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.data import DataState, SyntheticLM
+from repro.models import transformer as tf_model
+from repro.optim import AdamW
+
+__all__ = ["Trainer", "TrainerConfig"]
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    ckpt_every: int = 25
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep: int = 2
+    log_every: int = 10
+    async_ckpt: bool = True
+    fail_at_step: Optional[int] = None     # failure injection (tests)
+    straggler_factor: float = 3.0
+    metrics_path: Optional[str] = None     # JSONL
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg,                                # ArchConfig
+        tcfg: TrainerConfig,
+        *,
+        optimizer: Optional[AdamW] = None,
+        data: Optional[SyntheticLM] = None,
+        mesh=None,
+        policy=None,
+        seq_len: int = 512,
+        global_batch: int = 8,
+    ):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.opt = optimizer or AdamW(lr=3e-4)
+        self.mesh = mesh
+        self.policy = policy
+        self.data = data or SyntheticLM(
+            vocab_size=cfg.vocab_size,
+            seq_len=seq_len,
+            global_batch=global_batch,
+            emit_embeddings=cfg.d_model if cfg.frontend != "none" else None,
+        )
+        self.ckpt = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.keep)
+        constrain = policy.constrain if policy is not None else (lambda x, t: x)
+        self._step_fn = tf_model.train_step_fn(cfg, self.opt, constrain=constrain)
+        self._jit_step = None
+        self.metrics_log: list = []
+
+    # ----------------------------------------------------------- state -----
+    def init_state(self, seed: int = 0) -> Dict[str, Any]:
+        params = tf_model.init_params(jax.random.PRNGKey(seed), self.cfg)
+        if self.policy is not None:
+            shardings = self.policy.param_shardings(params)
+            params = jax.tree_util.tree_map(jax.device_put, params, shardings)
+        return {
+            "params": params,
+            "opt_state": self.opt.init(params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def _compile(self, state):
+        donate = (0,)
+        if self.mesh is not None:
+            self._jit_step = jax.jit(self._step_fn, donate_argnums=donate)
+        else:
+            self._jit_step = jax.jit(self._step_fn, donate_argnums=donate)
+
+    # ------------------------------------------------------------ loop -----
+    def run(self, seed: int = 0) -> Dict[str, Any]:
+        state = self.init_state(seed)
+        data_state = DataState(step=0)
+        restored, meta = self.ckpt.restore(jax.eval_shape(lambda: state))
+        if restored is not None:
+            state = jax.tree_util.tree_map(jnp.asarray, restored)
+            data_state = DataState.from_dict(meta["data"])
+            print(f"[trainer] resumed from step {meta['step']}")
+        self._compile(state)
+
+        self.data.start(data_state)
+        it = iter(self.data)
+        ewma = None
+        stragglers = 0
+        t_loop = time.monotonic()
+        try:
+            while int(state["step"]) < self.tcfg.steps:
+                step_no, host_batch = next(it)
+                batch = {k: jnp.asarray(v) for k, v in host_batch.items()}
+                if (
+                    self.tcfg.fail_at_step is not None
+                    and step_no == self.tcfg.fail_at_step
+                ):
+                    raise RuntimeError(f"injected failure at step {step_no}")
+                t0 = time.monotonic()
+                state, metrics = self._jit_step(state, batch)
+                metrics = {k: float(v) for k, v in metrics.items()}
+                dt = time.monotonic() - t0
+                ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt
+                if dt > self.tcfg.straggler_factor * ewma and step_no > 3:
+                    stragglers += 1
+                metrics.update(step_time_s=dt, stragglers=stragglers)
+                self.metrics_log.append(metrics)
+                if self.tcfg.metrics_path:
+                    with open(self.tcfg.metrics_path, "a") as f:
+                        f.write(json.dumps(metrics) + "\n")
+                if int(metrics["step"]) % self.tcfg.log_every == 0:
+                    print(
+                        f"[trainer] step {int(metrics['step'])} "
+                        f"loss {metrics['loss']:.4f} ({dt*1e3:.0f} ms)"
+                    )
+                if int(metrics["step"]) % self.tcfg.ckpt_every == 0:
+                    self.ckpt.save(
+                        int(metrics["step"]),
+                        state,
+                        meta={"data": DataState(step=step_no + 1).to_dict()},
+                        blocking=not self.tcfg.async_ckpt,
+                    )
+        finally:
+            self.data.stop()
+            self.ckpt.wait()
+        total = time.monotonic() - t_loop
+        return {"state": state, "wall_s": total, "metrics": self.metrics_log}

@@ -1,0 +1,14 @@
+"""Shared test fixtures.
+
+IMPORTANT: no XLA_FLAGS / device-count forcing here — smoke tests and
+benches must see the real (single-CPU) device topology.  Tests that need
+multiple devices spawn subprocesses (see tests/test_multidevice.py).
+"""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

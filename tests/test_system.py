@@ -1,0 +1,80 @@
+"""End-to-end system behaviour: train -> checkpoint -> serve, with the
+paper's technique (DiP permutated weight storage) on."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tf_model
+from repro.optim import AdamW, cosine_schedule
+from repro.runtime import Server, ServerConfig, Trainer, TrainerConfig
+from repro.runtime.server import Request
+
+
+def _cfg(**kw):
+    base = dict(name="sys", family="dense", n_layers=2, d_model=64, n_heads=4,
+                n_kv_heads=2, d_ff=128, vocab_size=512, head_dim=16,
+                remat="none", compute_dtype="float32")
+    base.update(kw)
+    return ArchConfig(**base)
+
+
+def test_train_then_serve_end_to_end(tmp_path):
+    cfg = _cfg()
+    trainer = Trainer(
+        cfg,
+        TrainerConfig(steps=20, ckpt_every=10, ckpt_dir=str(tmp_path / "ck"),
+                      async_ckpt=True, log_every=100),
+        optimizer=AdamW(lr=cosine_schedule(3e-3, 5, 20)),
+        seq_len=64, global_batch=4,
+    )
+    out = trainer.run()
+    losses = [m["loss"] for m in out["metrics"]]
+    assert losses[-1] < losses[0], "training must reduce loss"
+
+    server = Server(cfg, ServerConfig(batch_slots=2, max_seq=128,
+                                      max_new_tokens=12), out["state"]["params"])
+    reqs = [Request(rid=i, prompt=np.arange(2, 8, dtype=np.int32)) for i in range(4)]
+    results = server.serve(reqs)
+    assert set(results) == {0, 1, 2, 3}
+    assert all(1 <= len(v) <= 12 for v in results.values())
+    assert all(0 <= t < cfg.vocab_size for v in results.values() for t in v)
+    assert server.last_stats["decode_steps"] > 0
+
+
+def test_dip_format_system_runs_with_pallas_kernels(tmp_path):
+    """The paper's storage format + fused kernel as the live matmul path."""
+    cfg = _cfg(weight_format="dip", matmul_impl="pallas_dip", vocab_size=256,
+               d_model=64, d_ff=128)
+    trainer = Trainer(
+        cfg,
+        TrainerConfig(steps=4, ckpt_every=100, ckpt_dir=str(tmp_path / "ck2"),
+                      async_ckpt=False, log_every=100),
+        optimizer=AdamW(lr=1e-3),
+        seq_len=32, global_batch=2,
+    )
+    out = trainer.run()
+    assert np.isfinite(out["metrics"][-1]["loss"])
+    assert out["metrics"][-1]["loss"] < out["metrics"][0]["loss"] * 1.2
+
+
+def test_weight_format_checkpoint_roundtrips_permutated(tmp_path):
+    """Checkpoints persist the permutated storage; restore + de-permute
+    recovers the natural weights exactly."""
+    from repro.checkpoint import restore_pytree, save_pytree
+    from repro.kernels import ops
+
+    cfg = _cfg(weight_format="dip")
+    params = tf_model.init_params(jax.random.PRNGKey(0), cfg)
+    path = str(tmp_path / "dipck")
+    save_pytree(path, params)
+    got = restore_pytree(path, jax.eval_shape(lambda: params))
+    w_stored = got["layers"]["wq"][0]
+    w_live = params["layers"]["wq"][0]
+    np.testing.assert_array_equal(np.asarray(w_stored), np.asarray(w_live))
+    # storage really is permutated: de-shear differs from raw storage
+    nat = ops.from_dip_format(w_live)
+    assert not np.array_equal(np.asarray(nat), np.asarray(w_live))
