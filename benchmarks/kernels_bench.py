@@ -16,8 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import permute
-from repro.kernels import ops
+from repro import api
 
 
 def _time(fn, *args, iters=20):
@@ -35,29 +34,35 @@ def run(csv_rows):
     m, k, n = 512, 1024, 1024
     x = jnp.asarray(r.normal(size=(m, k)).astype(np.float32))
     w = jnp.asarray(r.normal(size=(k, n)).astype(np.float32))
-    p = ops.to_dip_format(w)
+    dw = api.DipWeight.from_natural(w)
 
     plain = jax.jit(lambda a, b: a @ b)
-    desheared = jax.jit(lambda a, pp: a @ permute.unpermute_tiled(pp, 64))
+    # the distributed default: de-shear as a gather, then the XLA dot
+    desheared = jax.jit(lambda a, d: api.matmul(a, d, backend="xla"))
 
     t_plain = _time(plain, x, w)
-    t_dip_xla = _time(desheared, x, p)
+    t_dip_xla = _time(desheared, x, dw)
     overhead = (t_dip_xla - t_plain) / t_plain * 100
     print(f"XLA plain matmul {m}x{k}x{n}:          {t_plain:9.1f} us")
     print(f"XLA matmul from DiP storage (+unshear): {t_dip_xla:9.1f} us "
           f"({overhead:+.1f}% — amortized de-shear cost)")
 
     # correctness parity accompanying the timings
-    got = desheared(x, p)
+    got = desheared(x, dw)
     np.testing.assert_allclose(np.asarray(got), np.asarray(plain(x, w)), atol=2e-3)
+
+    # tuning-table resolution for this shape (what the Pallas path would use)
+    blocks = api.lookup_blocks("pallas_dip", m, k, n, x.dtype)
+    print(f"tuning table -> pallas_dip blocks for {m}x{k}x{n} f32: {tuple(blocks)}")
 
     # interpret-mode pallas timing (documentation only — Python emulation)
     tiny_x = x[:64, :256]
-    tiny_p = ops.to_dip_format(w[:256, :256])
+    tiny_w = api.DipWeight.from_natural(w[:256, :256])
     t_pallas = _time(
-        lambda a, pp: ops.dip_matmul(a, pp, out_features=256), tiny_x, tiny_p, iters=3
+        lambda a, d: api.matmul(a, d, backend="pallas_dip", interpret=True),
+        tiny_x, tiny_w, iters=3,
     )
-    print(f"Pallas dip_matmul 64x256x256 (interpret): {t_pallas:9.1f} us "
+    print(f"Pallas pallas_dip 64x256x256 (interpret): {t_pallas:9.1f} us "
           f"(Python emulation — TPU path compiles via Mosaic)")
 
     csv_rows.append(("kern_xla_plain_matmul", t_plain, f"{2*m*k*n/ (t_plain*1e-6) /1e9:.1f}GFLOP/s"))

@@ -12,8 +12,8 @@ Walks the paper's core contribution end to end:
 import numpy as np
 import jax.numpy as jnp
 
+from repro import api
 from repro.core import analytical, permute, simulator
-from repro.kernels import ops
 
 # 1. the permutation ---------------------------------------------------------
 w = np.arange(9).reshape(3, 3)
@@ -43,11 +43,13 @@ print(f"  registers : {100*c.register_saving:.1f}% saved  (paper: ~20%)")
 rng = np.random.default_rng(0)
 xb = jnp.asarray(rng.normal(size=(128, 256)).astype(np.float32))
 wb = jnp.asarray(rng.normal(size=(256, 192)).astype(np.float32))
-pb = ops.to_dip_format(wb)                      # offline permutation (Fig. 3)
-out = ops.dip_matmul(xb, pb, out_features=192)  # fused de-shear + MXU matmul
-print("\nPallas dip_matmul from permutated storage: max |err| =",
+dw = api.DipWeight.from_natural(wb)             # offline permutation (Fig. 3)
+print(f"\nfirst-class permutated storage: {dw}")
+out = api.matmul(xb, dw, backend="pallas_dip")  # fused de-shear + MXU matmul
+print("Pallas pallas_dip backend from permutated storage: max |err| =",
       float(jnp.max(jnp.abs(out - xb @ wb))))
-out_sys = ops.dip_matmul_systolic(xb, pb, out_features=192)
-print("wavefront-emulation kernel (diagonal input movement): max |err| =",
+out_sys = api.matmul(xb, dw, backend="pallas_systolic")
+print("wavefront-emulation backend (diagonal input movement): max |err| =",
       float(jnp.max(jnp.abs(out_sys - xb @ wb))))
+print("registered matmul backends:", ", ".join(api.list_backends()))
 print("\nOK — see benchmarks/ for the full Fig.5/6 + Table I/II/IV reproduction.")

@@ -30,9 +30,9 @@ def main():
 
     cfg = get_config(args.arch).reduced(compute_dtype="float32")
     if args.dip:
-        cfg = dataclasses.replace(cfg, weight_format="dip", matmul_impl="pallas_dip")
+        cfg = dataclasses.replace(cfg, matmul_backend="pallas_dip")
     print(f"serving reduced {cfg.name} ({cfg.param_count()/1e6:.1f}M params, "
-          f"format={cfg.weight_format}, impl={cfg.matmul_impl})")
+          f"backend={cfg.matmul_backend}, dip_storage={cfg.uses_dip_storage})")
 
     params = tf_model.init_params(jax.random.PRNGKey(0), cfg)
     server = Server(

@@ -1,0 +1,43 @@
+"""Typed accelerator-abstraction boundary for the DiP reproduction.
+
+Two first-class concepts (see ``docs/api.md``):
+
+* :class:`DipWeight` — the paper's permutated weight layout as a registered
+  pytree (storage + logical-shape metadata), consumed by checkpointing,
+  sharding, autodiff, and kernel dispatch.
+* the matmul-backend registry — ``matmul(x, w, backend=...)`` dispatches to
+  named, pluggable implementations (``xla`` / ``ws`` / ``pallas_dip`` /
+  ``pallas_systolic``) with block sizes drawn from a per-shape/dtype tuning
+  table.
+"""
+
+from repro.api.registry import (
+    DEFAULT_BACKEND,
+    MatmulBackend,
+    backend_layout,
+    default_interpret,
+    get_backend,
+    list_backends,
+    matmul,
+    register_backend,
+)
+from repro.api.tuning import BlockConfig, clamp_blocks, lookup_blocks, register_tuning
+from repro.api.weights import PERM_TILE, DipWeight, as_dip_weight
+
+__all__ = [
+    "PERM_TILE",
+    "DEFAULT_BACKEND",
+    "DipWeight",
+    "as_dip_weight",
+    "MatmulBackend",
+    "register_backend",
+    "get_backend",
+    "list_backends",
+    "backend_layout",
+    "matmul",
+    "default_interpret",
+    "BlockConfig",
+    "register_tuning",
+    "lookup_blocks",
+    "clamp_blocks",
+]

@@ -1,0 +1,350 @@
+"""Pluggable matmul-backend registry and the single dispatching entry point.
+
+``matmul(x, w, *, backend=None)`` is the one matmul surface the rest of the
+system calls — models, serving, training, benchmarks.  Backends are
+registered under a name (``register_backend``) and declare the weight layout
+they consume:
+
+    layout="natural"   plain (K, N) weights; a ``DipWeight`` argument is
+                       de-sheared first (a jnp gather — the distributed /
+                       GSPMD-friendly path)
+    layout="dip"       DiP-permutated storage; a natural array argument is
+                       permutated on the fly (one-off convenience — models
+                       hoist this through ``DipWeight`` at parameter init)
+
+Built-in backends:
+
+    xla              XLA/GSPMD dot (default; layout-adaptive, natively
+                     differentiable)
+    ws               weight-stationary tiled Pallas kernel (baseline)
+    pallas_dip       fused de-shear + MXU Pallas kernel (the paper's fast
+                     path)
+    pallas_systolic  wavefront-emulation Pallas kernel (dataflow-faithful
+                     validation path)
+
+Tiled backends share one padding/batching shim and a per-backend
+``custom_vjp`` (Pallas kernels have no JVP rule; the backward runs plain XLA
+matmuls, with the cotangent re-permutated for dip-layout storage — the
+permutation is orthogonal, so ``d/dP f(unperm(P)) = perm(d/dW f(W))``).
+Block sizes come from the tuning table (repro.api.tuning) unless the caller
+pins them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, List, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.api import tuning
+from repro.api.weights import PERM_TILE, DipWeight, as_dip_weight
+from repro.core import permute
+
+__all__ = [
+    "MatmulBackend",
+    "register_backend",
+    "get_backend",
+    "list_backends",
+    "backend_layout",
+    "matmul",
+    "default_interpret",
+    "DEFAULT_BACKEND",
+]
+
+DEFAULT_BACKEND = "xla"
+
+_LAYOUTS = ("natural", "dip")
+
+
+def default_interpret() -> bool:
+    """Pallas kernels run compiled on TPU, interpreted elsewhere (CPU CI)."""
+    return jax.default_backend() != "tpu"
+
+
+# --------------------------------------------------------------------------
+# shared tiled-dispatch machinery
+def _pad_dim(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _flatten_batch(x: jax.Array):
+    lead = x.shape[:-1]
+    return x.reshape((-1, x.shape[-1])), lead
+
+
+def _build_tiled_caller(fn: Callable, layout: str):
+    """custom_vjp wrapper around one 2-D padded kernel invocation.
+
+    Pallas calls with scratch accumulators have no jvp rule, so the backward
+    runs plain XLA matmuls.  For dip-layout storage the weight cotangent is
+    the permutated gradient of the natural weight.
+    """
+
+    @functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+    def call(x2, w2, opts):
+        block_m, block_n, block_k, perm_tile, interpret = opts
+        return fn(
+            x2, w2, block_m=block_m, block_n=block_n, block_k=block_k,
+            perm_tile=perm_tile, interpret=interpret,
+        )
+
+    def fwd(x2, w2, opts):
+        return call(x2, w2, opts), (x2, w2)
+
+    def bwd(opts, res, g):
+        perm_tile = opts[3]
+        x2, w2 = res
+        wn = permute.unpermute_tiled(w2, perm_tile) if layout == "dip" else w2
+        g32 = g.astype(jnp.float32)
+        dx = jnp.matmul(g32, wn.astype(jnp.float32).T).astype(x2.dtype)
+        dwn = jnp.matmul(x2.astype(jnp.float32).T, g32)
+        dw = (
+            permute.permute_tiled(dwn, perm_tile) if layout == "dip" else dwn
+        ).astype(w2.dtype)
+        return dx, dw
+
+    call.defvjp(fwd, bwd)
+    return call
+
+
+# --------------------------------------------------------------------------
+# registry
+@dataclasses.dataclass(frozen=True)
+class MatmulBackend:
+    """One registered matmul implementation.
+
+    ``fn`` contract for tiled backends (``tiled=True``)::
+
+        fn(x2, w2, *, block_m, block_n, block_k, perm_tile, interpret) -> out2
+
+    with 2-D operands already padded to block multiples.  Non-tiled backends
+    (``tiled=False``, e.g. ``xla``) receive ``fn(x, w_natural)`` with the
+    original leading batch dims and must be natively differentiable.
+    """
+
+    name: str
+    layout: str                       # "natural" | "dip"
+    fn: Callable
+    tiled: bool = True
+    description: str = ""
+    caller: Optional[Callable] = None  # custom_vjp'd tiled invocation
+
+
+_REGISTRY: Dict[str, MatmulBackend] = {}
+_BUILTINS_LOADED = False
+
+
+def _ensure_builtins() -> None:
+    # Deferred: the built-in backends live in repro.kernels, which itself
+    # imports repro.api (the ops deprecation shims) — registering lazily on
+    # first registry access breaks the import cycle.
+    global _BUILTINS_LOADED
+    if not _BUILTINS_LOADED:
+        _BUILTINS_LOADED = True
+        _register_builtins()
+
+
+def register_backend(
+    name: str,
+    fn: Optional[Callable] = None,
+    *,
+    layout: str = "natural",
+    tiled: bool = True,
+    description: str = "",
+    overwrite: bool = False,
+):
+    """Register a matmul backend (usable as a decorator).
+
+    New kernels and precisions plug in here instead of growing another
+    ``elif`` ladder at every call site.
+    """
+    if fn is None:
+        return functools.partial(
+            register_backend, name, layout=layout, tiled=tiled,
+            description=description, overwrite=overwrite,
+        )
+    if layout not in _LAYOUTS:
+        raise ValueError(f"layout must be one of {_LAYOUTS}, got {layout!r}")
+    if layout == "dip" and not tiled:
+        raise ValueError(
+            "dip-layout backends must be tiled=True: the dispatcher drives "
+            "them through the shared padding/custom-VJP shim (see the "
+            "MatmulBackend.fn contract)"
+        )
+    _ensure_builtins()
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(f"backend {name!r} already registered (overwrite=True to replace)")
+    caller = _build_tiled_caller(fn, layout) if tiled else None
+    _REGISTRY[name] = MatmulBackend(
+        name=name, layout=layout, fn=fn, tiled=tiled,
+        description=description, caller=caller,
+    )
+    return fn
+
+
+def get_backend(name: Optional[str] = None) -> MatmulBackend:
+    _ensure_builtins()
+    name = name or DEFAULT_BACKEND
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown matmul backend {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def list_backends() -> List[str]:
+    _ensure_builtins()
+    return sorted(_REGISTRY)
+
+
+def backend_layout(name: Optional[str] = None) -> str:
+    """Weight layout the named backend consumes ("natural" | "dip")."""
+    return get_backend(name).layout
+
+
+# --------------------------------------------------------------------------
+# dispatch
+def _tiled_dispatch(
+    be: MatmulBackend,
+    x: jax.Array,
+    w2: jax.Array,
+    out_cols: int,
+    perm_tile: int,
+    block_m: Optional[int],
+    block_n: Optional[int],
+    block_k: Optional[int],
+    interpret: Optional[bool],
+) -> jax.Array:
+    if interpret is None:
+        interpret = default_interpret()
+    x2, lead = _flatten_batch(x)
+    m, k, n = x2.shape[0], w2.shape[-2], w2.shape[-1]
+    blocks = tuning.lookup_blocks(be.name, m, k, n, x2.dtype, perm_tile=perm_tile)
+    bm = block_m or blocks.block_m
+    bn = block_n or blocks.block_n
+    bk = block_k or blocks.block_k
+    x2 = _pad_dim(_pad_dim(x2, 0, bm), 1, bk)
+    w2 = _pad_dim(_pad_dim(w2, 0, bk), 1, bn)
+    out = be.caller(x2, w2, (bm, bn, bk, perm_tile, interpret))
+    return out[:m, :out_cols].reshape(lead + (out_cols,))
+
+
+def matmul(
+    x: jax.Array,
+    w: Union[jax.Array, DipWeight],
+    *,
+    backend: Optional[str] = None,
+    block_m: Optional[int] = None,
+    block_n: Optional[int] = None,
+    block_k: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """``x @ w`` through a registered backend.
+
+    ``x``: (..., d_in); ``w``: natural (d_in, d_out) array or ``DipWeight``.
+    Returns (..., d_out).  The weight is adapted to the backend's declared
+    layout; block sizes default to the tuning table; ``interpret`` defaults
+    to compiled-on-TPU / interpreted-elsewhere.
+    """
+    be = get_backend(backend)
+
+    if be.layout == "dip":
+        dw = as_dip_weight(w)
+        storage = dw.data
+        if storage.ndim != 2:
+            raise ValueError(
+                f"matmul weight must be 2-D (got storage {storage.shape}); "
+                "index the stacked axis first"
+            )
+        kp = storage.shape[-2]
+        xdim = x.shape[-1]
+        # validate against the LOGICAL d_in (not the padded storage): padding
+        # rows are zero, so accepting a wider or narrower x would silently
+        # compute with dropped or zero-imputed features.
+        if xdim != dw.d_in:
+            raise ValueError(
+                f"x contraction {xdim} does not match DipWeight d_in={dw.d_in} "
+                f"(storage {storage.shape})"
+            )
+        xk = _pad_dim(x, -1, dw.perm_tile)  # match the stored padding of K
+        if xk.shape[-1] != kp:
+            raise ValueError(
+                f"x contraction {xdim} does not match dip storage "
+                f"{storage.shape} (d_in={dw.d_in})"
+            )
+        return _tiled_dispatch(
+            be, xk, storage, dw.d_out, dw.perm_tile,
+            block_m, block_n, block_k, interpret,
+        )
+
+    wn = w.to_natural() if isinstance(w, DipWeight) else w
+    if wn.ndim != 2:
+        raise ValueError(f"matmul weight must be 2-D, got {wn.shape}")
+    if x.shape[-1] != wn.shape[-2]:
+        raise ValueError(f"contraction mismatch: x {x.shape} @ w {wn.shape}")
+    if not be.tiled:
+        return be.fn(x, wn)
+    return _tiled_dispatch(
+        be, x, wn, wn.shape[-1], PERM_TILE, block_m, block_n, block_k, interpret
+    )
+
+
+# --------------------------------------------------------------------------
+# built-in backends
+def _register_builtins() -> None:
+    from repro.kernels.dip_matmul import dip_matmul_pallas
+    from repro.kernels.dip_systolic import dip_systolic_pallas
+    from repro.kernels.ws_matmul import ws_matmul_pallas
+
+    def xla_fn(x, wn):
+        # NOTE: no preferred_element_type=f32 here — the MXU accumulates in
+        # f32 internally regardless, while a f32 *output* forces f32 TP
+        # all-reduces and f32 cotangents through the whole backward
+        # (2x collective + activation bytes; §Perf iteration 3).
+        return jnp.matmul(x, wn)
+
+    def ws_fn(x2, w2, *, block_m, block_n, block_k, perm_tile, interpret):
+        del perm_tile
+        return ws_matmul_pallas(
+            x2, w2, block_m=block_m, block_n=block_n, block_k=block_k,
+            interpret=interpret,
+        )
+
+    def dip_fn(x2, p2, *, block_m, block_n, block_k, perm_tile, interpret):
+        return dip_matmul_pallas(
+            x2, p2, block_m=block_m, block_n=block_n, block_k=block_k,
+            perm_tile=perm_tile, interpret=interpret,
+        )
+
+    def systolic_fn(x2, p2, *, block_m, block_n, block_k, perm_tile, interpret):
+        del block_n, block_k
+        return dip_systolic_pallas(
+            x2, p2, block_m=block_m, array_n=perm_tile, interpret=interpret
+        )
+
+    register_backend(
+        "xla", xla_fn, layout="natural", tiled=False,
+        description="XLA/GSPMD dot (default; de-shears DipWeight as a gather)",
+    )
+    register_backend(
+        "ws", ws_fn, layout="natural",
+        description="weight-stationary tiled Pallas kernel (baseline)",
+    )
+    register_backend(
+        "pallas_dip", dip_fn, layout="dip",
+        description="fused de-shear + MXU Pallas kernel (paper fast path)",
+    )
+    register_backend(
+        "pallas_systolic", systolic_fn, layout="dip",
+        description="wavefront-emulation Pallas kernel (validation path)",
+    )

@@ -1,0 +1,120 @@
+"""Per-shape/dtype block-size tuning table for the matmul backends.
+
+Replaces the hardcoded ``block_m/n/k = 256`` defaults that every kernel
+wrapper used to carry.  Lookup order:
+
+1. explicit caller override (``api.matmul(..., block_m=...)``) — never touched
+2. registered tuning entries, most recently registered first, matched on
+   (backend, dtype, shape bounds)
+3. the built-in heuristic
+
+Whatever the table yields is then *clamped to the problem*: a block is never
+larger than the padded dimension it tiles (no point padding a (8, 64) matmul
+to 256x256), never smaller than the hardware minimum (8 sublanes for M, one
+permutation tile for K/N — the de-shear operates per 64-wide tile).
+
+A future autotuner (ROADMAP) writes measured entries through
+:func:`register_tuning`; nothing else needs to change.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, NamedTuple, Optional
+
+import jax.numpy as jnp
+
+from repro.api.weights import PERM_TILE
+
+__all__ = ["BlockConfig", "TuningEntry", "register_tuning", "lookup_blocks", "clamp_blocks"]
+
+
+class BlockConfig(NamedTuple):
+    block_m: int
+    block_n: int
+    block_k: int
+
+
+@dataclasses.dataclass(frozen=True)
+class TuningEntry:
+    """One tuning rule: applies when every non-None constraint matches."""
+
+    blocks: BlockConfig
+    backend: Optional[str] = None       # None = any backend
+    dtype: Optional[str] = None         # operand dtype name, None = any
+    max_m: Optional[int] = None         # rule applies while m <= max_m, etc.
+    max_k: Optional[int] = None
+    max_n: Optional[int] = None
+
+    def matches(self, backend: str, dtype: str, m: int, k: int, n: int) -> bool:
+        return (
+            (self.backend is None or self.backend == backend)
+            and (self.dtype is None or self.dtype == dtype)
+            and (self.max_m is None or m <= self.max_m)
+            and (self.max_k is None or k <= self.max_k)
+            and (self.max_n is None or n <= self.max_n)
+        )
+
+
+_TABLE: List[TuningEntry] = []
+
+
+def register_tuning(
+    blocks,
+    *,
+    backend: Optional[str] = None,
+    dtype: Optional[str] = None,
+    max_m: Optional[int] = None,
+    max_k: Optional[int] = None,
+    max_n: Optional[int] = None,
+) -> TuningEntry:
+    """Add a tuning rule (most recently registered wins on overlap)."""
+    entry = TuningEntry(
+        blocks=BlockConfig(*blocks), backend=backend, dtype=dtype,
+        max_m=max_m, max_k=max_k, max_n=max_n,
+    )
+    _TABLE.insert(0, entry)
+    return entry
+
+
+def _pow2_ceil(v: int) -> int:
+    return 1 << max(0, int(v) - 1).bit_length()
+
+
+def clamp_blocks(
+    blocks: BlockConfig, m: int, k: int, n: int, perm_tile: int = PERM_TILE
+) -> BlockConfig:
+    """Shrink blocks to the problem: never over-block a tiny dimension.
+
+    K/N blocks stay multiples of the permutation tile (the in-kernel
+    de-shear is per-tile) — a table entry that isn't is rounded up rather
+    than poisoning every dispatch with a kernel-side ValueError; M keeps
+    the 8-sublane floor.
+    """
+    tile_up = lambda v: v + (-v) % perm_tile
+    bm = max(8, min(blocks.block_m, _pow2_ceil(m)))
+    bn = tile_up(max(perm_tile, min(blocks.block_n, _pow2_ceil(n))))
+    bk = tile_up(max(perm_tile, min(blocks.block_k, _pow2_ceil(k))))
+    return BlockConfig(bm, bn, bk)
+
+
+def lookup_blocks(
+    backend: str, m: int, k: int, n: int, dtype, *, perm_tile: int = PERM_TILE
+) -> BlockConfig:
+    """Resolve block sizes for one dispatch (before caller overrides)."""
+    dtype_name = jnp.dtype(dtype).name
+    for entry in _TABLE:
+        if entry.matches(backend, dtype_name, m, k, n):
+            return clamp_blocks(entry.blocks, m, k, n, perm_tile)
+    # heuristic fallback: MXU-aligned 256 cube, shrunk to the problem
+    return clamp_blocks(BlockConfig(256, 256, 256), m, k, n, perm_tile)
+
+
+# ---------------------------------------------------------------------------
+# Built-in entries.  Narrower operands afford deeper K blocks at the same
+# VMEM budget (acc scratch is f32/i32 at block_m x block_n regardless);
+# the wavefront-emulation path tiles K/N at the physical array dimension.
+register_tuning((256, 256, 256), dtype="float32")
+register_tuning((256, 256, 512), dtype="bfloat16")
+register_tuning((256, 256, 512), dtype="int8")
+register_tuning((128, PERM_TILE, PERM_TILE), backend="pallas_systolic")

@@ -1,0 +1,152 @@
+"""`DipWeight` — the paper's permutated weight layout as a first-class pytree.
+
+The DiP dataflow consumes weights stored *permutated* (offline software step,
+paper Fig. 3): each 64x64 tile has column ``i`` rotated up by ``i``.  Before
+this type existed, that layout was a bare ``jax.Array`` plus stringly-typed
+flags (``weight_format="dip"``) and hand-threaded ``d_out`` padding metadata
+scattered across every call site.  ``DipWeight`` bundles the permutated
+storage with its metadata so checkpointing, sharding, autodiff, and kernel
+dispatch all key off the *type*:
+
+    storage   ``data``       (..., Kp, Np) permutated, zero-padded to the
+                             permutation-tile grid; arbitrary leading batch
+                             dims (layer-stacked params scan transparently)
+    metadata  ``d_in``       logical contraction dim (K before padding)
+              ``d_out``      logical output dim (N before padding)
+              ``perm_tile``  the array dimension the permutation tiles over
+                             (64 in the paper)
+
+Registered as a pytree node **with keys**: ``jax.jit``, ``jax.grad``,
+``jax.lax.scan``, optimizer ``tree_map``s, and ``tree_flatten_with_path``
+(checkpoint manifests) all traverse into ``.data`` while the metadata rides
+along as static aux data.  Gradients w.r.t. a ``DipWeight`` therefore come
+back *as* a ``DipWeight`` holding the permutated-storage cotangent.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import permute
+
+__all__ = ["PERM_TILE", "DipWeight", "as_dip_weight"]
+
+PERM_TILE = 64  # the paper's systolic-array dimension
+
+
+def _pad_up(v: int, multiple: int) -> int:
+    return v + (-v) % multiple
+
+
+@jax.tree_util.register_pytree_with_keys_class
+class DipWeight:
+    """Permutated weight storage + logical-shape metadata (see module doc).
+
+    ``data`` is intentionally unvalidated: pytree transforms route tracers,
+    ``ShapeDtypeStruct``s, ``NamedSharding``s, and optimizer moments through
+    the same container, so the constructor must accept any payload.
+    """
+
+    __slots__ = ("data", "d_in", "d_out", "perm_tile")
+
+    def __init__(self, data: Any, d_in: int, d_out: int, perm_tile: int = PERM_TILE):
+        self.data = data
+        self.d_in = int(d_in)
+        self.d_out = int(d_out)
+        self.perm_tile = int(perm_tile)
+
+    # ------------------------------------------------------------- pytree --
+    def tree_flatten_with_keys(self):
+        return (
+            ((jax.tree_util.GetAttrKey("data"), self.data),),
+            (self.d_in, self.d_out, self.perm_tile),
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], *aux)
+
+    # ------------------------------------------------------- construction --
+    @staticmethod
+    def storage_dims(d_in: int, d_out: int, perm_tile: int = PERM_TILE) -> Tuple[int, int]:
+        """Padded (Kp, Np) trailing dims of the permutated storage."""
+        return _pad_up(d_in, perm_tile), _pad_up(d_out, perm_tile)
+
+    @classmethod
+    def from_natural(cls, w: jax.Array, perm_tile: int = PERM_TILE) -> "DipWeight":
+        """Offline permutation (paper Fig. 3): pad the trailing two dims to
+        the tile grid and permute each tile.  Leading batch dims (e.g. a
+        layer-stacking axis) pass through untouched."""
+        d_in, d_out = int(w.shape[-2]), int(w.shape[-1])
+        return cls(permute.permute_tiled(w, perm_tile), d_in, d_out, perm_tile)
+
+    # ------------------------------------------------------------ queries --
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    @property
+    def storage_shape(self) -> Tuple[int, ...]:
+        return tuple(self.data.shape)
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        """Logical shape: leading batch dims + (d_in, d_out)."""
+        return tuple(self.data.shape[:-2]) + (self.d_in, self.d_out)
+
+    @property
+    def ndim(self) -> int:
+        return self.data.ndim
+
+    # -------------------------------------------------------- conversions --
+    def to_natural(self) -> jax.Array:
+        """Recover the natural-layout weight (inverse permutation + crop)."""
+        wn = permute.unpermute_tiled(self.data, self.perm_tile)
+        return wn[..., : self.d_in, : self.d_out]
+
+    def astype(self, dtype) -> "DipWeight":
+        if jnp.dtype(dtype) == jnp.dtype(self.data.dtype):
+            return self
+        return DipWeight(self.data.astype(dtype), self.d_in, self.d_out, self.perm_tile)
+
+    def with_data(self, data: Any) -> "DipWeight":
+        """Same metadata, different payload (shardings, specs, moments)."""
+        return DipWeight(data, self.d_in, self.d_out, self.perm_tile)
+
+    def __repr__(self) -> str:
+        data = self.data
+        desc = (
+            f"{getattr(data, 'shape', None)}:{getattr(data, 'dtype', type(data).__name__)}"
+        )
+        return (
+            f"DipWeight({desc}, d_in={self.d_in}, d_out={self.d_out}, "
+            f"perm_tile={self.perm_tile})"
+        )
+
+
+def as_dip_weight(
+    w: Any,
+    *,
+    d_out: Optional[int] = None,
+    perm_tile: int = PERM_TILE,
+) -> DipWeight:
+    """Coerce to ``DipWeight``.
+
+    * ``DipWeight`` passes through (``d_out`` must agree if given).
+    * A natural-layout array is permutated via :meth:`DipWeight.from_natural`.
+
+    To wrap storage that is *already* permutated (e.g. loaded from an
+    external artifact), construct ``DipWeight(storage, d_in, d_out)``
+    directly.
+    """
+    if isinstance(w, DipWeight):
+        if d_out is not None and d_out != w.d_out:
+            raise ValueError(f"d_out mismatch: requested {d_out}, weight has {w.d_out}")
+        return w
+    dw = DipWeight.from_natural(w, perm_tile)
+    if d_out is not None and d_out != dw.d_out:
+        raise ValueError(f"d_out mismatch: requested {d_out}, natural weight has {dw.d_out}")
+    return dw

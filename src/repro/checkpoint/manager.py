@@ -35,6 +35,8 @@ from typing import Any, Dict, List, Optional
 import jax
 import numpy as np
 
+from repro.api import DipWeight
+
 __all__ = ["CheckpointManager", "save_pytree", "restore_pytree"]
 
 
@@ -43,6 +45,27 @@ def _flatten_with_paths(tree):
     paths = ["/".join(str(k) for k in path) for path, _ in flat]
     leaves = [leaf for _, leaf in flat]
     return paths, leaves, treedef
+
+
+def _dip_index(tree) -> Dict[str, Dict]:
+    """path -> logical-shape metadata for every ``DipWeight`` node.
+
+    ``DipWeight`` is a pytree node, so its permutated storage serializes
+    through the ordinary leaf path (``.../wq/.data``); this records the
+    metadata alongside so manifests are self-describing and restore can
+    verify the logical shape survives (padding is part of the type, not a
+    convention the reader must re-derive).
+    """
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: isinstance(x, DipWeight)
+    )
+    out: Dict[str, Dict] = {}
+    for path, node in flat:
+        if isinstance(node, DipWeight):
+            out["/".join(str(k) for k in path)] = {
+                "d_in": node.d_in, "d_out": node.d_out, "perm_tile": node.perm_tile,
+            }
+    return out
 
 
 def save_pytree(path: str, tree: Any, *, meta: Optional[Dict] = None) -> None:
@@ -56,7 +79,7 @@ def save_pytree(path: str, tree: Any, *, meta: Optional[Dict] = None) -> None:
         fname = f"leaf_{i:05d}.npy"
         np.save(os.path.join(tmp, fname), arr)
         index.append({"path": p, "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)})
-    manifest = {"leaves": index, "meta": meta or {}}
+    manifest = {"leaves": index, "meta": meta or {}, "dip_weights": _dip_index(tree)}
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
         f.flush()
@@ -70,6 +93,15 @@ def restore_pytree(path: str, like: Any, *, shardings: Any = None) -> Any:
     elastic placement on the *current* mesh (optional)."""
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
+    saved_dip = manifest.get("dip_weights", {})
+    live_dip = _dip_index(like)
+    for p, info in saved_dip.items():
+        live = live_dip.get(p)
+        if live is not None and live != info:
+            raise ValueError(
+                f"DipWeight metadata mismatch at {p}: checkpoint {info}, "
+                f"restore target {live}"
+            )
     paths, leaves, treedef = _flatten_with_paths(like)
     by_path = {e["path"]: e for e in manifest["leaves"]}
     if set(paths) != set(by_path):

@@ -57,8 +57,11 @@ class ArchConfig:
     # numerics / implementation
     param_dtype: str = "float32"
     compute_dtype: str = "bfloat16"
-    weight_format: str = "natural"   # natural | dip  (DiP permutated storage)
-    matmul_impl: str = "xla"         # xla | pallas_dip | pallas_systolic
+    matmul_backend: str = "xla"      # registered repro.api backend name
+                                     # (xla | ws | pallas_dip | pallas_systolic | plugins)
+    dip_weights: bool = False        # force DiP permutated weight storage even
+                                     # for natural-layout backends (e.g. dip
+                                     # checkpoints served through XLA/GSPMD)
     remat: str = "block"             # none | block  (remat each scanned block)
     # notes for DESIGN.md §Arch-applicability
     notes: str = ""
@@ -74,6 +77,17 @@ class ArchConfig:
         to -inf in the loss and never indexed by token ids."""
         mult = 2048
         return -(-self.vocab_size // mult) * mult
+
+    @property
+    def uses_dip_storage(self) -> bool:
+        """Whether linear weights are held as ``api.DipWeight`` pytree nodes:
+        either forced (``dip_weights``) or required by the backend's declared
+        layout (the dip-consuming Pallas kernels)."""
+        if self.dip_weights:
+            return True
+        from repro import api  # deferred: keep config import light
+
+        return api.backend_layout(self.matmul_backend) == "dip"
 
     @property
     def is_moe(self) -> bool:

@@ -33,6 +33,8 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.api import DipWeight
+
 __all__ = ["ShardingPolicy", "make_policy"]
 
 
@@ -152,13 +154,29 @@ class ShardingPolicy:
         return P(*lead, *([None] * len(body)))
 
     def param_shardings(self, template: Dict[str, Any]) -> Dict[str, Any]:
-        """NamedSharding pytree matching repro.models.transformer.param_template."""
+        """NamedSharding pytree matching repro.models.transformer.param_template.
+
+        Accepts the template (tuple leaves, DiP linears carrying a
+        ``dip_meta`` 4th element), materialized params, or spec pytrees.
+        ``DipWeight`` nodes come back as ``DipWeight``-wrapped shardings with
+        identical metadata, so ``tree_map(device_put, params, shardings)``
+        traverses both trees in lockstep.  The DiP permutation is tile-local
+        (64x64), so the storage dims shard exactly like natural dims.
+        """
 
         def walk(t, name=None):
             if isinstance(t, dict):
                 return {k: walk(v, k) for k, v in t.items()}
-            shape = t[0] if isinstance(t, tuple) else t.shape
-            return self.named(self.param_pspec(name, tuple(shape)))
+            if isinstance(t, DipWeight):
+                return t.with_data(
+                    self.named(self.param_pspec(name, tuple(t.data.shape)))
+                )
+            if isinstance(t, tuple):
+                shape = t[0]
+                dip = t[3] if len(t) > 3 else None
+                ns = self.named(self.param_pspec(name, tuple(shape)))
+                return DipWeight(ns, *dip) if dip is not None else ns
+            return self.named(self.param_pspec(name, tuple(t.shape)))
 
         return walk(template)
 

@@ -16,7 +16,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["deshear_block", "shear_block", "rotate_left_dynamic"]
+__all__ = ["VMEM", "CompilerParams", "deshear_block", "shear_block", "rotate_left_dynamic"]
+
+# jax renamed these between releases (MemorySpace.VMEM <-> VMEM,
+# CompilerParams <-> TPUCompilerParams); resolve whichever spelling exists so
+# the kernels compile against any toolchain the container bakes in.
+VMEM = getattr(pltpu, "VMEM", None) or pltpu.MemorySpace.VMEM
+CompilerParams = getattr(pltpu, "TPUCompilerParams", None) or pltpu.CompilerParams
 
 
 def _barrel_shear(block: jax.Array, tile: int, *, inverse: bool) -> jax.Array:

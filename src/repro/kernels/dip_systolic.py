@@ -26,7 +26,6 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import common
 from repro.kernels.ref import acc_dtype_for
@@ -94,8 +93,8 @@ def dip_systolic_pallas(
         ],
         out_specs=pl.BlockSpec((block_m, array_n), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
-        scratch_shapes=[pltpu.MemorySpace.VMEM((block_m, array_n), acc_dtype)],
-        compiler_params=pltpu.CompilerParams(
+        scratch_shapes=[common.VMEM((block_m, array_n), acc_dtype)],
+        compiler_params=common.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -24,7 +24,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import common
 
 __all__ = ["flash_attention_pallas"]
 
@@ -101,11 +102,11 @@ def flash_attention_pallas(
         out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
         scratch_shapes=[
-            pltpu.MemorySpace.VMEM((block_q, 1), jnp.float32),
-            pltpu.MemorySpace.VMEM((block_q, 1), jnp.float32),
-            pltpu.MemorySpace.VMEM((block_q, d), jnp.float32),
+            common.VMEM((block_q, 1), jnp.float32),
+            common.VMEM((block_q, 1), jnp.float32),
+            common.VMEM((block_q, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=common.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -1,32 +1,29 @@
-"""Public jit'd entry points for the DiP kernels.
+"""DEPRECATED shims over ``repro.api`` — kept for one PR of compatibility.
 
-These wrappers make the kernels shape-agnostic (padding to block multiples,
-arbitrary leading batch dims), pick interpret mode automatically off-TPU, and
-expose the permutated storage format helpers used by the model zoo's
-`DipLinear`.
+The public matmul surface moved to ``repro.api``:
 
-API:
-    to_dip_format(w)        -> permutated + padded storage tensor
-    dip_matmul(x, p)        -> x @ w  from permutated storage (MXU fast path)
-    dip_matmul_systolic(..) -> same, via wavefront emulation (validation path)
-    ws_matmul(x, w)         -> baseline tiled matmul (natural layout)
+    ops.to_dip_format(w)            -> api.DipWeight.from_natural(w).data
+    ops.from_dip_format(p, shape)   -> api.DipWeight(p, *shape).to_natural()
+    ops.dip_matmul(x, p, ...)       -> api.matmul(x, dip_weight, backend="pallas_dip")
+    ops.dip_matmul_systolic(...)    -> api.matmul(..., backend="pallas_systolic")
+    ops.ws_matmul(x, w, ...)        -> api.matmul(x, w, backend="ws")
+
+These wrappers keep existing call sites working (raw permutated-storage
+arrays in, arrays out) but carry no metadata — new code should hold a
+``DipWeight`` and call ``api.matmul``.
 """
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import permute
-from repro.kernels import ref
-from repro.kernels.dip_matmul import dip_matmul_pallas
-from repro.kernels.dip_systolic import dip_systolic_pallas
-from repro.kernels.ws_matmul import ws_matmul_pallas
+from repro import api
+from repro.api import PERM_TILE, DipWeight, default_interpret
 
 __all__ = [
+    "PERM_TILE",
     "default_interpret",
     "to_dip_format",
     "from_dip_format",
@@ -35,169 +32,72 @@ __all__ = [
     "ws_matmul",
 ]
 
-PERM_TILE = 64  # the paper's array dimension
-
-
-def default_interpret() -> bool:
-    """Pallas kernels run compiled on TPU, interpreted elsewhere (CPU CI)."""
-    return jax.default_backend() != "tpu"
-
-
-def _pad_dim(x: jax.Array, axis: int, multiple: int) -> jax.Array:
-    size = x.shape[axis]
-    pad = (-size) % multiple
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths)
-
 
 def to_dip_format(w: jax.Array, perm_tile: int = PERM_TILE) -> jax.Array:
-    """Convert a (K, N) weight to DiP permutated storage.
-
-    Pads K and N up to ``perm_tile`` multiples (zero rows/cols are inert in
-    the matmul) and applies the per-tile permutation.  This is the offline
-    software step of paper Fig. 3 — in this framework it happens at parameter
-    initialization / checkpoint-load time, never per step.
-    """
-    w = _pad_dim(_pad_dim(w, -1, perm_tile), -2, perm_tile)
-    return permute.permute_tiled(w, perm_tile)
+    """DEPRECATED: returns bare permutated storage; prefer
+    ``api.DipWeight.from_natural`` which keeps the logical-shape metadata."""
+    return DipWeight.from_natural(w, perm_tile).data
 
 
 def from_dip_format(
     p: jax.Array, shape: Optional[tuple] = None, perm_tile: int = PERM_TILE
 ) -> jax.Array:
-    """Recover the natural-layout weight (crops padding if ``shape`` given)."""
-    w = permute.unpermute_tiled(p, perm_tile)
-    if shape is not None:
-        w = w[..., : shape[-2], : shape[-1]]
-    return w
+    """DEPRECATED: recover the natural-layout weight (crops if ``shape`` given)."""
+    d_in = shape[-2] if shape is not None else p.shape[-2]
+    d_out = shape[-1] if shape is not None else p.shape[-1]
+    return DipWeight(p, d_in, d_out, perm_tile).to_natural()
 
 
-def _flatten_batch(x: jax.Array):
-    lead = x.shape[:-1]
-    return x.reshape((-1, x.shape[-1])), lead
+def _wrap_storage(x: jax.Array, p: jax.Array, out_features: Optional[int]) -> DipWeight:
+    # Bare storage carries no logical d_in, so take it from the activation
+    # (the seed semantics: x pads up to the stored K or the call is invalid)
+    # and crop the output to ``out_features``.
+    return DipWeight(p, x.shape[-1], out_features or p.shape[-1], PERM_TILE)
 
 
-# ---- autodiff: Pallas forward, XLA backward -------------------------------
-# pallas_call with scratch accumulators has no jvp rule; training through the
-# DiP kernels therefore uses a custom VJP whose backward runs plain XLA
-# matmuls.  Gradient w.r.t. the *permutated storage* is the permuted gradient
-# of the natural weight (the layout map is a permutation, hence linear and
-# orthogonal): d/dP f(unperm(P)) = perm(d/dW f(W)).
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
-def _pallas_mm(x2, w2, opts):
-    kind, block_m, block_n, block_k, interpret = opts
-    if kind == "dip":
-        return dip_matmul_pallas(
-            x2, w2, block_m=block_m, block_n=block_n, block_k=block_k,
-            interpret=interpret,
-        )
-    if kind == "ws":
-        return ws_matmul_pallas(
-            x2, w2, block_m=block_m, block_n=block_n, block_k=block_k,
-            interpret=interpret,
-        )
-    if kind == "systolic":
-        return dip_systolic_pallas(x2, w2, block_m=block_m, interpret=interpret)
-    raise ValueError(kind)
-
-
-def _pallas_mm_fwd(x2, w2, opts):
-    return _pallas_mm(x2, w2, opts), (x2, w2)
-
-
-def _pallas_mm_bwd(opts, res, g):
-    kind = opts[0]
-    x2, w2 = res
-    permuted = kind in ("dip", "systolic")
-    wn = permute.unpermute_tiled(w2, PERM_TILE) if permuted else w2
-    g32 = g.astype(jnp.float32)
-    dx = jnp.matmul(g32, wn.astype(jnp.float32).T).astype(x2.dtype)
-    dwn = jnp.matmul(x2.astype(jnp.float32).T, g32)
-    dw = (permute.permute_tiled(dwn, PERM_TILE) if permuted else dwn).astype(w2.dtype)
-    return dx, dw
-
-
-_pallas_mm.defvjp(_pallas_mm_fwd, _pallas_mm_bwd)
-
-
-def _matmul_via(kind, x, w, out_cols, block_m, block_n, block_k, interpret):
-    """Shared padding/batching shim around a 2-D pallas matmul kernel."""
-    if interpret is None:
-        interpret = default_interpret()
-    x2, lead = _flatten_batch(x)
-    m = x2.shape[0]
-    block_m = min(block_m, max(8, 1 << (m - 1).bit_length()))  # don't over-block tiny M
-    x2 = _pad_dim(_pad_dim(x2, 0, block_m), 1, block_k)
-    w2 = _pad_dim(_pad_dim(w, 0, block_k), 1, block_n)
-    out = _pallas_mm(x2, w2, (kind, block_m, block_n, block_k, interpret))
-    return out[:m, :out_cols].reshape(lead + (out_cols,))
-
-
-@functools.partial(
-    jax.jit,
-    static_argnames=("out_features", "block_m", "block_n", "block_k", "interpret"),
-)
 def dip_matmul(
     x: jax.Array,
     p: jax.Array,
     *,
     out_features: Optional[int] = None,
-    block_m: int = 256,
-    block_n: int = 256,
-    block_k: int = 256,
+    block_m: Optional[int] = None,
+    block_n: Optional[int] = None,
+    block_k: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
-    """``x @ w`` where ``p = to_dip_format(w)``; x: (..., K), p: (Kp, Np)."""
-    out_features = out_features or p.shape[-1]
-    xk = _pad_dim(x, -1, PERM_TILE)  # match the stored padding of K
-    if xk.shape[-1] != p.shape[0]:
-        raise ValueError(f"x contraction {x.shape[-1]} does not match dip storage {p.shape}")
-    return _matmul_via(
-        "dip", xk, p, out_features, block_m, block_n, block_k, interpret
+    """DEPRECATED: ``x @ w`` where ``p = to_dip_format(w)``."""
+    return api.matmul(
+        x, _wrap_storage(x, p, out_features), backend="pallas_dip",
+        block_m=block_m, block_n=block_n, block_k=block_k, interpret=interpret,
     )
 
 
-@functools.partial(
-    jax.jit, static_argnames=("out_features", "block_m", "interpret")
-)
 def dip_matmul_systolic(
     x: jax.Array,
     p: jax.Array,
     *,
     out_features: Optional[int] = None,
-    block_m: int = 128,
+    block_m: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
-    """Wavefront-emulation path (validation / dataflow demonstration)."""
-    if interpret is None:
-        interpret = default_interpret()
-    out_features = out_features or p.shape[-1]
-    xk = _pad_dim(x, -1, PERM_TILE)
-    x2, lead = _flatten_batch(xk)
-    m = x2.shape[0]
-    block_m = min(block_m, max(8, 1 << (m - 1).bit_length()))
-    x2 = _pad_dim(x2, 0, block_m)
-    out = _pallas_mm(x2, p, ("systolic", block_m, 0, 0, interpret))
-    return out[:m, :out_features].reshape(lead + (out_features,))
+    """DEPRECATED: wavefront-emulation path."""
+    return api.matmul(
+        x, _wrap_storage(x, p, out_features), backend="pallas_systolic",
+        block_m=block_m, interpret=interpret,
+    )
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("block_m", "block_n", "block_k", "interpret"),
-)
 def ws_matmul(
     x: jax.Array,
     w: jax.Array,
     *,
-    block_m: int = 256,
-    block_n: int = 256,
-    block_k: int = 256,
+    block_m: Optional[int] = None,
+    block_n: Optional[int] = None,
+    block_k: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
-    """Baseline tiled matmul with natural-layout weights."""
-    return _matmul_via(
-        "ws", x, w, w.shape[-1], block_m, block_n, block_k, interpret
+    """DEPRECATED: baseline tiled matmul with natural-layout weights."""
+    return api.matmul(
+        x, w, backend="ws",
+        block_m=block_m, block_n=block_n, block_k=block_k, interpret=interpret,
     )

@@ -34,7 +34,7 @@ def main():
         cfg = cfg.reduced()
     if args.dip:
         import dataclasses
-        cfg = dataclasses.replace(cfg, weight_format="dip", matmul_impl="pallas_dip",
+        cfg = dataclasses.replace(cfg, matmul_backend="pallas_dip",
                                   compute_dtype="float32")
 
     params = tf_model.init_params(jax.random.PRNGKey(0), cfg)

@@ -3,6 +3,11 @@
 ``input_specs(cfg, cell, policy)`` returns (fn, args) where ``fn`` is the
 step to lower (train_step / prefill_step / serve_step) and ``args`` is a
 pytree of sharding-annotated ShapeDtypeStructs.  Nothing here allocates.
+
+DiP-stored linears appear as ``api.DipWeight`` pytree nodes wrapping their
+storage spec; ``param_specs`` / ``param_shardings`` produce them with
+identical metadata, so the spec/sharding zips below traverse in lockstep and
+the optimizer-moment mirror inherits the wrapping for free.
 """
 
 from __future__ import annotations

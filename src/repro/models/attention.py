@@ -19,10 +19,16 @@ from typing import Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import api
 from repro.models import layers
 
 Constrain = Callable[[jax.Array, str], jax.Array]
 _id: Constrain = lambda x, tag: x
+
+
+def _natural(w):
+    """Natural-layout view of a weight (de-shears an ``api.DipWeight``)."""
+    return w.to_natural() if isinstance(w, api.DipWeight) else w
 
 __all__ = [
     "attention_core",
@@ -140,14 +146,10 @@ def gqa_attention(
     """Full GQA block: projections + RoPE + cache update + attention + out."""
     b, s, _ = x.shape
     h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
-    lk = dict(
-        weight_format=cfg.weight_format,
-        matmul_impl=cfg.matmul_impl,
-        compute_dtype=x.dtype,
-    )
-    q = layers.linear(x, p["wq"], p.get("bq"), d_out=h * hd, **lk).reshape(b, s, h, hd)
-    k = layers.linear(x, p["wk"], p.get("bk"), d_out=kv * hd, **lk).reshape(b, s, kv, hd)
-    v = layers.linear(x, p["wv"], p.get("bv"), d_out=kv * hd, **lk).reshape(b, s, kv, hd)
+    lk = dict(backend=cfg.matmul_backend, compute_dtype=x.dtype)
+    q = layers.linear(x, p["wq"], p.get("bq"), **lk).reshape(b, s, h, hd)
+    k = layers.linear(x, p["wk"], p.get("bk"), **lk).reshape(b, s, kv, hd)
+    v = layers.linear(x, p["wv"], p.get("bv"), **lk).reshape(b, s, kv, hd)
 
     q = layers.apply_rope(q, positions, cfg.rope_theta)
     k = layers.apply_rope(k, positions, cfg.rope_theta)
@@ -177,7 +179,7 @@ def gqa_attention(
         new_cache = {"k": ck, "v": cv, "pos": pos + s}
 
     out = out.reshape(b, s, h * hd)
-    out = layers.linear(out, p["wo"], d_out=cfg.d_model, **lk)
+    out = layers.linear(out, p["wo"], **lk)
     return constrain(out, "act_btd"), new_cache
 
 
@@ -217,22 +219,19 @@ def mla_attention(
     h = cfg.n_heads
     dn, dr, dv_ = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
     r = cfg.kv_lora_rank
-    lk = dict(
-        weight_format=cfg.weight_format,
-        matmul_impl=cfg.matmul_impl,
-        compute_dtype=x.dtype,
-    )
+    lk = dict(backend=cfg.matmul_backend, compute_dtype=x.dtype)
 
-    q = layers.linear(x, p["wq"], d_out=h * (dn + dr), **lk).reshape(b, s, h, dn + dr)
+    q = layers.linear(x, p["wq"], **lk).reshape(b, s, h, dn + dr)
     q_nope, q_rope = q[..., :dn], q[..., dn:]
     q_rope = layers.apply_rope(q_rope, positions, cfg.rope_theta)
 
-    c_kv = layers.linear(x, p["w_dkv"], d_out=r, **lk)                      # (B,S,r)
-    k_rope = layers.linear(x, p["w_krope"], d_out=dr, **lk)                 # (B,S,dr) shared
+    c_kv = layers.linear(x, p["w_dkv"], **lk)                               # (B,S,r)
+    k_rope = layers.linear(x, p["w_krope"], **lk)                           # (B,S,dr) shared
     k_rope = layers.apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
 
-    w_uk = p["w_uk"].astype(x.dtype).reshape(r, h, dn)
-    w_uv = p["w_uv"].astype(x.dtype).reshape(r, h, dv_)
+    # the absorbed form contracts these per-head — natural layout required
+    w_uk = _natural(p["w_uk"]).astype(x.dtype).reshape(r, h, dn)
+    w_uv = _natural(p["w_uv"]).astype(x.dtype).reshape(r, h, dv_)
 
     if cache is None:
         # naive/expanded prefill: materialize per-head K and V
@@ -267,5 +266,5 @@ def mla_attention(
         new_cache = {"c_kv": cc, "k_rope": cr, "pos": pos + s}
 
     out = out.reshape(b, s, h * dv_)
-    out = layers.linear(out, p["wo"], d_out=cfg.d_model, **lk)
+    out = layers.linear(out, p["wo"], **lk)
     return constrain(out, "act_btd"), new_cache

@@ -1,34 +1,25 @@
 """Shared model layers: DiP-aware linear, RMSNorm, RoPE, SwiGLU MLP.
 
 `linear` is the integration point of the paper's technique: every dense
-projection in the zoo routes through it, and its behaviour is selected by two
-config axes:
-
-  weight_format = "natural" | "dip"
-      "dip" stores the weight DiP-permutated (paper Fig. 3, applied per 64x64
-      tile, padded) — the format checkpoints and HBM hold.
-  matmul_impl   = "xla" | "pallas_dip" | "pallas_systolic"
-      "xla" leaves the matmul to XLA/GSPMD (the distributed default; with
-      dip-format weights the de-shear happens as a jnp gather before the dot).
-      "pallas_dip" runs the fused de-shear+MXU kernel; "pallas_systolic" runs
-      the wavefront-emulation kernel (validation path).
+projection in the zoo routes through it.  The weight is either a natural
+``jax.Array`` or an ``api.DipWeight`` (permutated storage + logical-shape
+metadata), and the kernel choice is a registered backend name
+(``cfg.matmul_backend``) resolved by ``repro.api.matmul`` — no stringly-typed
+format flags or hand-threaded ``d_out`` here.
 """
 
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import permute
-from repro.kernels import ops
+from repro import api
 
 __all__ = [
     "linear",
-    "linear_param_shape",
-    "store_weight",
     "rms_norm",
     "swiglu",
     "rope_frequencies",
@@ -37,68 +28,22 @@ __all__ = [
 ]
 
 
-def linear_param_shape(d_in: int, d_out: int, weight_format: str) -> tuple:
-    """Storage shape of a (d_in, d_out) weight under the given format."""
-    if weight_format == "dip":
-        pad = lambda v: v + (-v) % ops.PERM_TILE
-        return (pad(d_in), pad(d_out))
-    return (d_in, d_out)
-
-
-def store_weight(w: jax.Array, weight_format: str) -> jax.Array:
-    """Convert a natural-layout weight into its storage format."""
-    if weight_format == "dip":
-        return ops.to_dip_format(w)
-    return w
-
-
 def linear(
     x: jax.Array,
-    w: jax.Array,
+    w: Union[jax.Array, api.DipWeight],
     b: Optional[jax.Array] = None,
     *,
-    d_out: Optional[int] = None,
-    weight_format: str = "natural",
-    matmul_impl: str = "xla",
+    backend: Optional[str] = None,
     compute_dtype=jnp.bfloat16,
 ) -> jax.Array:
-    """``x @ W (+ b)`` honouring the DiP storage format and kernel choice."""
-    d_out = d_out if d_out is not None else (w.shape[-1] if weight_format == "natural" else None)
+    """``x @ W (+ b)`` through the registered matmul backend.
+
+    The output width comes from the weight itself (``DipWeight.d_out`` for
+    permutated storage — the padding bookkeeping lives in the type).
+    """
     x = x.astype(compute_dtype)
     w = w.astype(compute_dtype)
-
-    if weight_format == "natural":
-        if matmul_impl == "xla":
-            # NOTE: no preferred_element_type=f32 here — the MXU accumulates
-            # in f32 internally regardless, while a f32 *output* forces f32
-            # TP all-reduces and f32 cotangents through the whole backward
-            # (2x collective + activation bytes; §Perf iteration 3).
-            out = jnp.matmul(x, w)
-        elif matmul_impl == "pallas_dip":
-            # natural weights on the fused kernel = WS baseline kernel
-            out = ops.ws_matmul(x, w)
-        elif matmul_impl == "pallas_systolic":
-            out = ops.dip_matmul_systolic(x, ops.to_dip_format(w), out_features=w.shape[-1])
-        else:
-            raise ValueError(matmul_impl)
-    elif weight_format == "dip":
-        if d_out is None:
-            raise ValueError("dip-format linear needs d_out (storage is padded)")
-        if matmul_impl == "xla":
-            wn = permute.unpermute_tiled(w, ops.PERM_TILE)
-            xk = x
-            if xk.shape[-1] != wn.shape[0]:  # padded K storage
-                xk = jnp.pad(xk, [(0, 0)] * (x.ndim - 1) + [(0, wn.shape[0] - xk.shape[-1])])
-            out = jnp.matmul(xk, wn)[..., :d_out]
-        elif matmul_impl == "pallas_dip":
-            out = ops.dip_matmul(x, w, out_features=d_out)
-        elif matmul_impl == "pallas_systolic":
-            out = ops.dip_matmul_systolic(x, w, out_features=d_out)
-        else:
-            raise ValueError(matmul_impl)
-    else:
-        raise ValueError(weight_format)
-
+    out = api.matmul(x, w, backend=backend)
     if b is not None:
         out = out + b.astype(out.dtype)
     return out

@@ -35,17 +35,15 @@ __all__ = ["moe_ffn", "dense_ffn", "moe_capacity"]
 
 
 def dense_ffn(
-    x: jax.Array, p: Dict, cfg, *, d_ff: int = 0, constrain: Constrain = _id
+    x: jax.Array, p: Dict, cfg, *, constrain: Constrain = _id
 ) -> jax.Array:
     """SwiGLU MLP (dense archs and MoE shared experts)."""
-    lk = dict(weight_format=cfg.weight_format, matmul_impl=cfg.matmul_impl,
-              compute_dtype=x.dtype)
-    d_ff = d_ff or cfg.d_ff
-    gate = layers.linear(x, p["w_gate"], d_out=d_ff, **lk)
-    up = layers.linear(x, p["w_up"], d_out=d_ff, **lk)
+    lk = dict(backend=cfg.matmul_backend, compute_dtype=x.dtype)
+    gate = layers.linear(x, p["w_gate"], **lk)
+    up = layers.linear(x, p["w_up"], **lk)
     h = layers.swiglu(gate, up)
     h = constrain(h, "ffn_hidden")
-    return layers.linear(h, p["w_down"], d_out=cfg.d_model, **lk)
+    return layers.linear(h, p["w_down"], **lk)
 
 
 def moe_capacity(tokens: int, cfg) -> int:
@@ -140,7 +138,6 @@ def moe_ffn(
                 "w_down": p["shared_w_down"],
             },
             cfg,
-            d_ff=cfg.n_shared_experts * cfg.d_ff_expert,
             constrain=constrain,
         )
         out = out + shared

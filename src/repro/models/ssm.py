@@ -81,10 +81,9 @@ def ssd_block(
     bsz, seqlen, _ = x.shape
     dims = ssm_dims(cfg)
     di, h, pdim, n = dims["d_inner"], dims["heads"], dims["headdim"], dims["state"]
-    lk = dict(weight_format=cfg.weight_format, matmul_impl=cfg.matmul_impl,
-              compute_dtype=x.dtype)
+    lk = dict(backend=cfg.matmul_backend, compute_dtype=x.dtype)
 
-    zxbcdt = layers.linear(x, p["in_proj"], d_out=dims["in_dim"], **lk)
+    zxbcdt = layers.linear(x, p["in_proj"], **lk)
     z, xin, bmat, cmat, dt = jnp.split(
         zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1
     )
@@ -192,5 +191,5 @@ def ssd_block(
     y = y.astype(x.dtype) * jax.nn.silu(z)
     y = layers.rms_norm(y, p["norm"], cfg.norm_eps)
     y = constrain(y, "ssm_inner")
-    out = layers.linear(y, p["out_proj"], d_out=cfg.d_model, **lk)
+    out = layers.linear(y, p["out_proj"], **lk)
     return constrain(out, "act_btd"), new_cache

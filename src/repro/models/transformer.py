@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.models import attention, layers, moe, ssm
 
 Constrain = Callable[[jax.Array, str], jax.Array]
@@ -46,12 +47,18 @@ __all__ = [
 
 # ------------------------------------------------------------ param layout --
 def _lin(cfg, d_in, d_out):
-    """(storage_shape, fan_in) for a linear under the config's weight format."""
-    return layers.linear_param_shape(d_in, d_out, cfg.weight_format), d_in
+    """(storage_shape, fan_in, dip_meta) for a linear under the config's
+    weight storage.  ``dip_meta`` is ``(d_in, d_out, perm_tile)`` when the
+    weight lives as an ``api.DipWeight``, else None."""
+    if cfg.uses_dip_storage:
+        shape = api.DipWeight.storage_dims(d_in, d_out)
+        return shape, d_in, (d_in, d_out, api.PERM_TILE)
+    return (d_in, d_out), d_in, None
 
 
 def param_template(cfg) -> Dict[str, Any]:
-    """Nested dict: leaf = (shape, dtype_str, fan_in).  Layer-stacked."""
+    """Nested dict: leaf = (shape, dtype_str, fan_in[, dip_meta]).
+    Layer-stacked; ``shape`` is the *storage* shape (padded for DiP)."""
     d, v = cfg.d_model, cfg.padded_vocab
     pdt = cfg.param_dtype
     t: Dict[str, Any] = {
@@ -59,11 +66,11 @@ def param_template(cfg) -> Dict[str, Any]:
         "final_norm": ((d,), pdt, None),
     }
     if not cfg.tie_embeddings:
-        (shape, fan), = [_lin(cfg, d, v)]
-        t["lm_head"] = (shape, pdt, fan)
+        shape, fan, dip = _lin(cfg, d, v)
+        t["lm_head"] = (shape, pdt, fan, dip)
 
-    def stacked(shape, fan, L):
-        return ((L,) + shape, pdt, fan)
+    def stacked(shape, fan, L, dip=None):
+        return ((L,) + shape, pdt, fan, dip)
 
     L = cfg.n_layers
     blk: Dict[str, Any] = {}
@@ -71,18 +78,18 @@ def param_template(cfg) -> Dict[str, Any]:
     if cfg.ssm_state:  # mamba2 blocks (ssm and hybrid families)
         dims = ssm.ssm_dims(cfg)
         nl = L
-        (s_in, f_in) = _lin(cfg, d, dims["in_dim"])
-        (s_out, f_out) = _lin(cfg, dims["d_inner"], d)
+        s_in, f_in, dip_in = _lin(cfg, d, dims["in_dim"])
+        s_out, f_out, dip_out = _lin(cfg, dims["d_inner"], d)
         blk.update(
             norm_in=stacked((d,), None, nl),
-            in_proj=stacked(s_in, f_in, nl),
+            in_proj=stacked(s_in, f_in, nl, dip_in),
             conv_w=stacked((cfg.ssm_conv, dims["conv_dim"]), cfg.ssm_conv, nl),
             conv_b=stacked((dims["conv_dim"],), None, nl),
             dt_bias=stacked((dims["heads"],), None, nl),
             A_log=stacked((dims["heads"],), None, nl),
             D=stacked((dims["heads"],), None, nl),
             norm=stacked((dims["d_inner"],), None, nl),
-            out_proj=stacked(s_out, f_out, nl),
+            out_proj=stacked(s_out, f_out, nl, dip_out),
         )
         t["layers"] = blk
         if cfg.is_hybrid:
@@ -93,8 +100,8 @@ def param_template(cfg) -> Dict[str, Any]:
                 wv=(d, cfg.n_kv_heads * hd), wo=(cfg.n_heads * hd, d),
                 w_gate=(d, cfg.d_ff), w_up=(d, cfg.d_ff), w_down=(cfg.d_ff, d),
             ).items():
-                (shape, fan) = _lin(cfg, di, do)
-                sh[nm] = (shape, pdt, fan)
+                shape, fan, dip = _lin(cfg, di, do)
+                sh[nm] = (shape, pdt, fan, dip)
             t["shared_attn"] = sh
         return t
 
@@ -110,15 +117,15 @@ def param_template(cfg) -> Dict[str, Any]:
             w_uk=(rr, cfg.n_heads * dn), w_uv=(rr, cfg.n_heads * dvh),
             wo=(cfg.n_heads * dvh, d),
         ).items():
-            (shape, fan) = _lin(cfg, di, do)
-            blk[nm] = stacked(shape, fan, L)
+            shape, fan, dip = _lin(cfg, di, do)
+            blk[nm] = stacked(shape, fan, L, dip)
     else:
         for nm, (di, do) in dict(
             wq=(d, cfg.n_heads * hd), wk=(d, cfg.n_kv_heads * hd),
             wv=(d, cfg.n_kv_heads * hd), wo=(cfg.n_heads * hd, d),
         ).items():
-            (shape, fan) = _lin(cfg, di, do)
-            blk[nm] = stacked(shape, fan, L)
+            shape, fan, dip = _lin(cfg, di, do)
+            blk[nm] = stacked(shape, fan, L, dip)
         if cfg.qkv_bias:
             blk["bq"] = stacked((cfg.n_heads * hd,), None, L)
             blk["bk"] = stacked((cfg.n_kv_heads * hd,), None, L)
@@ -135,14 +142,14 @@ def param_template(cfg) -> Dict[str, Any]:
             for nm, (di, do) in dict(
                 shared_w_gate=(d, sff), shared_w_up=(d, sff), shared_w_down=(sff, d)
             ).items():
-                (shape, fan) = _lin(cfg, di, do)
-                blk[nm] = stacked(shape, fan, L)
+                shape, fan, dip = _lin(cfg, di, do)
+                blk[nm] = stacked(shape, fan, L, dip)
     else:
         for nm, (di, do) in dict(
             w_gate=(d, cfg.d_ff), w_up=(d, cfg.d_ff), w_down=(cfg.d_ff, d)
         ).items():
-            (shape, fan) = _lin(cfg, di, do)
-            blk[nm] = stacked(shape, fan, L)
+            shape, fan, dip = _lin(cfg, di, do)
+            blk[nm] = stacked(shape, fan, L, dip)
 
     t["layers"] = blk
     return t
@@ -155,18 +162,23 @@ def _map_template(t, fn):
 
 
 def param_specs(cfg) -> Dict[str, Any]:
-    """ShapeDtypeStruct pytree — used by the dry-run (no allocation)."""
-    return _map_template(
-        param_template(cfg),
-        lambda shape, dt, fan: jax.ShapeDtypeStruct(shape, jnp.dtype(dt)),
-    )
+    """ShapeDtypeStruct pytree — used by the dry-run (no allocation).
+    DiP-stored linears appear as ``DipWeight`` nodes wrapping the spec of
+    their (padded) storage, mirroring ``init_params`` exactly."""
+
+    def mk(shape, dt, fan, dip=None):
+        spec = jax.ShapeDtypeStruct(shape, jnp.dtype(dt))
+        return api.DipWeight(spec, *dip) if dip is not None else spec
+
+    return _map_template(param_template(cfg), mk)
 
 
 def init_params(key: jax.Array, cfg) -> Dict[str, Any]:
     """Materialized parameters (truncated-normal fan-in scaling; norms at 1).
 
-    DiP-format weights are initialized in natural layout then converted with
-    ``store_weight`` — the offline permutation step of paper Fig. 3.
+    DiP-stored weights are initialized in natural layout then converted with
+    ``api.DipWeight.from_natural`` — the offline permutation step of paper
+    Fig. 3, run once at init / checkpoint-load, never per step.
     """
     template = param_template(cfg)
     leaves, treedef = jax.tree_util.tree_flatten(
@@ -175,7 +187,8 @@ def init_params(key: jax.Array, cfg) -> Dict[str, Any]:
     keys = jax.random.split(key, len(leaves))
 
     def make(leaf, k):
-        shape, dt, fan = leaf
+        shape, dt, fan = leaf[:3]
+        dip = leaf[3] if len(leaf) > 3 else None
         dt = jnp.dtype(dt)
         if fan is None:  # norms / biases / scalars
             init = jnp.ones(shape, dt)
@@ -183,6 +196,13 @@ def init_params(key: jax.Array, cfg) -> Dict[str, Any]:
 
         # special-cased SSM scalars by shape heuristics handled below
         scale = (1.0 / max(1, fan)) ** 0.5
+        if dip is not None:
+            d_in, d_out, perm_tile = dip
+            nat_shape = shape[:-2] + (d_in, d_out)
+            nat = (
+                jax.random.truncated_normal(k, -2, 2, nat_shape, jnp.float32) * scale
+            ).astype(dt)
+            return api.DipWeight.from_natural(nat, perm_tile)
         return (jax.random.truncated_normal(k, -2, 2, shape, jnp.float32) * scale).astype(dt)
 
     params = jax.tree_util.tree_unflatten(treedef, [make(l, k) for l, k in zip(leaves, keys)])
@@ -306,9 +326,7 @@ def forward(
         ).astype(jnp.float32)
     else:
         logits = layers.linear(
-            x, head, d_out=cfg.padded_vocab,
-            weight_format=cfg.weight_format, matmul_impl=cfg.matmul_impl,
-            compute_dtype=cd,
+            x, head, backend=cfg.matmul_backend, compute_dtype=cd,
         ).astype(jnp.float32)
     if cfg.padded_vocab != cfg.vocab_size:
         # mask the padding lanes (never sampled, -inf in the softmax/loss);

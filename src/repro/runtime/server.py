@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.models import transformer as tf_model
 
 __all__ = ["Server", "ServerConfig", "Request"]
@@ -46,6 +47,7 @@ class Server:
     def __init__(self, cfg, scfg: ServerConfig, params, *, policy=None):
         self.cfg = cfg
         self.scfg = scfg
+        api.get_backend(cfg.matmul_backend)  # fail fast on unknown backends
         self.params = params
         constrain = policy.constrain if policy is not None else (lambda x, t: x)
         self._decode = jax.jit(tf_model.decode_step_fn(cfg, constrain=constrain))

@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.checkpoint import CheckpointManager
 from repro.data import DataState, SyntheticLM
 from repro.models import transformer as tf_model
@@ -66,6 +67,7 @@ class Trainer:
     ):
         self.cfg = cfg
         self.tcfg = tcfg
+        api.get_backend(cfg.matmul_backend)  # fail fast on unknown backends
         self.opt = optimizer or AdamW(lr=3e-4)
         self.mesh = mesh
         self.policy = policy

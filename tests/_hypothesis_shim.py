@@ -1,0 +1,85 @@
+"""Property-testing front-end: real `hypothesis` when installed, otherwise a
+tiny deterministic fallback so the tier-1 suite still *runs* on a bare CPU
+environment (no pip access).
+
+The fallback implements just what these tests use — ``@settings``, ``@given``
+with keyword strategies, ``st.integers``, ``st.sampled_from`` — and replays
+each test ``max_examples`` times with draws from a fixed-seed RNG.  It keeps
+the property-style coverage (many sampled shapes/seeds per test) without the
+shrinking/database machinery; install the ``test`` extra
+(``pip install -e .[test]``) for the real thing.
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised implicitly by whichever env runs CI
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class strategies:  # noqa: N801 - mimics the hypothesis module name
+        @staticmethod
+        def integers(min_value=0, max_value=None):
+            if max_value is None:
+                max_value = 2**31 - 1
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1))
+            )
+
+        @staticmethod
+        def sampled_from(values):
+            vals = list(values)
+            return _Strategy(lambda rng: vals[int(rng.integers(len(vals)))])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(2)))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value))
+            )
+
+    def given(**strats):
+        def deco(fn):
+            @functools.wraps(fn)
+            def runner(*args, **kwargs):
+                n = getattr(runner, "_max_examples", 20)
+                rng = np.random.default_rng(0)
+                for _ in range(n):
+                    drawn = {k: s.draw(rng) for k, s in strats.items()}
+                    fn(*args, **drawn, **kwargs)
+
+            # pytest must not see the strategy parameters as fixtures
+            del runner.__wrapped__
+            runner.hypothesis_fallback = True
+            return runner
+
+        return deco
+
+    def settings(max_examples=20, **_):
+        # applied outside @given: stamp the example count onto the runner
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+
+st = strategies
+
+__all__ = ["given", "settings", "strategies", "st", "HAVE_HYPOTHESIS"]

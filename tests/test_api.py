@@ -1,0 +1,272 @@
+"""repro.api: DipWeight pytree semantics, backend-registry dispatch parity,
+tuning-table resolution, and checkpoint round-trips on odd shapes."""
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import api
+from repro.kernels import ref
+
+KEY = jax.random.PRNGKey(11)
+
+# deliberately not multiples of the 64-wide permutation tile
+ODD_M, ODD_K, ODD_N = 23, 100, 130
+
+
+def _mats(m=ODD_M, k=ODD_K, n=ODD_N, dtype="float32", seed=0):
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.normal(size=(m, k)).astype(dtype))
+    w = jnp.asarray(r.normal(size=(k, n)).astype(dtype))
+    return x, w
+
+
+# ------------------------------------------------------------- DipWeight ----
+def test_dip_weight_roundtrip_and_metadata():
+    _, w = _mats()
+    dw = api.DipWeight.from_natural(w)
+    assert dw.shape == (ODD_K, ODD_N)
+    assert dw.storage_shape == (128, 192)  # padded to the 64-tile grid
+    np.testing.assert_allclose(np.asarray(dw.to_natural()), np.asarray(w))
+    # storage really is permutated (not just padded)
+    assert not np.array_equal(
+        np.asarray(dw.data[:ODD_K, :ODD_N]), np.asarray(w)
+    )
+
+
+def test_dip_weight_stacked_leading_dims():
+    r = np.random.default_rng(1)
+    w = jnp.asarray(r.normal(size=(3, 70, 90)).astype(np.float32))
+    dw = api.DipWeight.from_natural(w)
+    assert dw.storage_shape == (3, 128, 128)
+    assert dw.shape == (3, 70, 90)
+    np.testing.assert_allclose(np.asarray(dw.to_natural()), np.asarray(w))
+    # a sliced stack entry is the per-layer DipWeight scan consumes
+    sliced = jax.tree_util.tree_map(lambda t: t[1], dw)
+    assert isinstance(sliced, api.DipWeight)
+    assert sliced.storage_shape == (128, 128) and sliced.d_out == 90
+
+
+def test_dip_weight_is_a_pytree_through_jit_and_grad():
+    x, w = _mats()
+    dw = api.DipWeight.from_natural(w)
+
+    # jit: DipWeight crosses the trace boundary as a pytree node
+    @jax.jit
+    def f(xx, d):
+        return api.matmul(xx, d, backend="xla")
+
+    np.testing.assert_allclose(
+        np.asarray(f(x, dw)), np.asarray(x @ w), atol=1e-4, rtol=1e-4
+    )
+
+    # grad: the cotangent comes back AS a DipWeight with the same metadata
+    g = jax.grad(lambda d: jnp.sum(f(x, d) ** 2))(dw)
+    assert isinstance(g, api.DipWeight)
+    assert (g.d_in, g.d_out, g.perm_tile) == (dw.d_in, dw.d_out, dw.perm_tile)
+    assert g.storage_shape == dw.storage_shape
+
+    # flatten/unflatten identity
+    leaves, treedef = jax.tree_util.tree_flatten(dw)
+    assert len(leaves) == 1
+    back = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert isinstance(back, api.DipWeight) and back.d_out == dw.d_out
+
+
+# ------------------------------------------------------ registry dispatch ---
+@pytest.mark.parametrize("backend", ["xla", "ws", "pallas_dip", "pallas_systolic"])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_matmul_matches_ref_oracle_all_backends(backend, dtype):
+    """Acceptance: api.matmul == kernels.ref oracle for every registered
+    backend on an odd-shaped case (interpret mode on CPU)."""
+    x, w = _mats(dtype="float32")
+    x, w = x.astype(dtype), w.astype(dtype)
+    dw = api.DipWeight.from_natural(w)
+    got = api.matmul(x, dw, backend=backend)
+    want = ref.dip_matmul_ref(
+        jnp.pad(x, [(0, 0), (0, (-ODD_K) % 64)]), dw.data
+    )[..., :ODD_N]
+    tol = dict(atol=1e-3, rtol=1e-3) if dtype == "float32" else dict(atol=0.5, rtol=0.05)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **tol
+    )
+
+
+@pytest.mark.parametrize("backend", ["xla", "ws", "pallas_dip", "pallas_systolic"])
+def test_matmul_accepts_natural_arrays_on_any_backend(backend):
+    x, w = _mats()
+    got = api.matmul(x, w, backend=backend)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref.ws_matmul_ref(x, w)), atol=1e-3, rtol=1e-3
+    )
+
+
+def test_matmul_batched_leading_dims():
+    r = np.random.default_rng(2)
+    x = jnp.asarray(r.normal(size=(2, 5, 100)).astype(np.float32))
+    w = jnp.asarray(r.normal(size=(100, 70)).astype(np.float32))
+    dw = api.DipWeight.from_natural(w)
+    got = api.matmul(x, dw, backend="pallas_dip")
+    assert got.shape == (2, 5, 70)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(x) @ np.asarray(w), atol=1e-3, rtol=1e-3
+    )
+
+
+def test_unknown_backend_and_duplicate_registration():
+    with pytest.raises(KeyError, match="unknown matmul backend"):
+        api.matmul(*_mats(), backend="nope")
+    with pytest.raises(ValueError, match="already registered"):
+        api.register_backend("xla", lambda x, w: x @ w, tiled=False)
+    # dip-layout backends go through the tiled padding/VJP shim; a non-tiled
+    # one would crash at dispatch, so it must be rejected at registration
+    with pytest.raises(ValueError, match="must be tiled"):
+        api.register_backend("bad_dip", lambda x, w: x @ w, layout="dip", tiled=False)
+
+
+def test_dip_dispatch_rejects_padded_width_activations():
+    """x wider than the logical d_in must raise, not silently drop features
+    into the zero-padding rows (dip and xla paths must agree on validity)."""
+    _, w = _mats()  # d_in=100, storage Kp=128
+    dw = api.DipWeight.from_natural(w)
+    x_padded = jnp.ones((4, 128), jnp.float32)
+    for backend in ("pallas_dip", "pallas_systolic", "xla"):
+        with pytest.raises(ValueError, match="contraction"):
+            api.matmul(x_padded, dw, backend=backend)
+    # narrower x on a tile-aligned weight must raise too (no silent
+    # zero-imputation of the missing features)
+    dw_aligned = api.DipWeight.from_natural(jnp.ones((128, 128), jnp.float32))
+    with pytest.raises(ValueError, match="contraction"):
+        api.matmul(jnp.ones((4, 100), jnp.float32), dw_aligned, backend="pallas_dip")
+
+
+def test_register_custom_backend_dispatches():
+    name = "test_double_xla"
+    if name not in api.list_backends():
+        api.register_backend(
+            name, lambda x, wn: 2.0 * jnp.matmul(x, wn), layout="natural",
+            tiled=False, description="test-only",
+        )
+    x, w = _mats()
+    np.testing.assert_allclose(
+        np.asarray(api.matmul(x, w, backend=name)),
+        2.0 * (np.asarray(x) @ np.asarray(w)),
+        atol=1e-3, rtol=1e-3,
+    )
+
+
+# ------------------------------------------------------------- gradients ----
+def test_grad_through_dip_linear_matches_xla_path():
+    """Acceptance: jax.grad through a DipWeight linear (Pallas fwd, custom
+    VJP bwd) matches the natively-differentiated XLA path to fp32 tol."""
+    from repro.models import layers
+
+    x, w = _mats()
+    b = jnp.zeros((ODD_N,), jnp.float32)
+    dw = api.DipWeight.from_natural(w)
+
+    def loss(backend):
+        def f(d, bb):
+            out = layers.linear(x, d, bb, backend=backend, compute_dtype=jnp.float32)
+            return jnp.mean(out ** 2)
+        return f
+
+    for wrt in (0, 1):  # weight grad and bias grad
+        g_x = jax.grad(loss("xla"), argnums=wrt)(dw, b)
+        g_p = jax.grad(loss("pallas_dip"), argnums=wrt)(dw, b)
+        gx, gp = jax.tree_util.tree_leaves(g_x), jax.tree_util.tree_leaves(g_p)
+        for a, c in zip(gx, gp):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(c), atol=1e-5, rtol=1e-5)
+    assert isinstance(jax.grad(loss("pallas_dip"))(dw, b), api.DipWeight)
+
+
+# ----------------------------------------------------------- tuning table ---
+def test_tuning_clamp_rounds_bad_entries_to_tile_multiples():
+    """A table entry with non-tile-multiple K/N blocks must not poison
+    dispatch — clamp_blocks rounds up to the permutation tile."""
+    blocks = api.clamp_blocks(api.BlockConfig(96, 96, 96), 1024, 1024, 1024)
+    assert blocks == (96, 128, 128)  # M is unconstrained; K/N round up to 64s
+
+
+def test_tuning_lookup_clamps_to_problem():
+    blocks = api.lookup_blocks("pallas_dip", 8, 64, 64, jnp.float32)
+    assert blocks == (8, 64, 64)
+    blocks = api.lookup_blocks("pallas_dip", 1024, 1024, 1024, jnp.float32)
+    assert blocks == (256, 256, 256)
+    # bf16 affords deeper K blocks (built-in entry)
+    blocks = api.lookup_blocks("pallas_dip", 1024, 1024, 1024, jnp.bfloat16)
+    assert blocks.block_k == 512
+    # systolic path tiles K/N at the physical array dimension
+    blocks = api.lookup_blocks("pallas_systolic", 1024, 1024, 1024, jnp.float32)
+    assert (blocks.block_n, blocks.block_k) == (64, 64)
+
+
+def test_tuning_registration_overrides_and_block_override_is_honoured():
+    entry = api.register_tuning(
+        (64, 128, 64), backend="pallas_dip", dtype="float32", max_m=16,
+    )
+    try:
+        blocks = api.lookup_blocks("pallas_dip", 16, 256, 256, jnp.float32)
+        assert tuple(blocks) == (16, 128, 64)  # m clamped, rest from entry
+        x, w = _mats()
+        dw = api.DipWeight.from_natural(w)
+        got = api.matmul(x, dw, backend="pallas_dip", block_m=64, block_n=64, block_k=64)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(x) @ np.asarray(w), atol=1e-3, rtol=1e-3
+        )
+    finally:
+        from repro.api import tuning as tuning_mod
+
+        tuning_mod._TABLE.remove(entry)
+
+
+# ------------------------------------------------------------ checkpoints ---
+def test_checkpoint_roundtrip_preserves_logical_shape_on_odd_dims(tmp_path):
+    """Acceptance: save -> load keeps the logical (d_in, d_out) on dims that
+    are not multiples of 64, keyed off the DipWeight type (no hand-threaded
+    padding metadata)."""
+    from repro.checkpoint import restore_pytree, save_pytree
+
+    r = np.random.default_rng(3)
+    nat = jnp.asarray(r.normal(size=(ODD_K, ODD_N)).astype(np.float32))
+    tree = {"w": api.DipWeight.from_natural(nat), "b": jnp.zeros((ODD_N,))}
+    path = str(tmp_path / "ck")
+    save_pytree(path, tree)
+
+    like = jax.eval_shape(lambda: tree)
+    got = restore_pytree(path, like)
+    assert isinstance(got["w"], api.DipWeight)
+    assert got["w"].shape == (ODD_K, ODD_N)
+    assert got["w"].storage_shape == (128, 192)
+    np.testing.assert_allclose(np.asarray(got["w"].to_natural()), np.asarray(nat))
+
+    # metadata mismatch is detected, not silently mis-cropped
+    bad_like = dict(like, w=api.DipWeight(like["w"].data, 128, 192))
+    with pytest.raises(ValueError, match="DipWeight metadata mismatch"):
+        restore_pytree(path, bad_like)
+
+
+def test_sharding_walk_matches_param_structure():
+    """param_shardings mirrors DipWeight nodes so device_put tree_maps in
+    lockstep (single-device mesh here)."""
+    from repro.configs.base import ArchConfig
+    from repro.distributed.sharding import make_policy
+    from repro.models import transformer as tf_model
+
+    cfg = ArchConfig(
+        name="t", family="dense", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab_size=256, head_dim=16, remat="none",
+        compute_dtype="float32", matmul_backend="pallas_dip",
+    )
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    policy = make_policy(mesh, cfg, "train")
+    params = tf_model.init_params(KEY, cfg)
+    shardings = policy.param_shardings(tf_model.param_template(cfg))
+    placed = jax.tree_util.tree_map(jax.device_put, params, shardings)
+    assert isinstance(placed["layers"]["wq"], api.DipWeight)
+    # template-derived and params-derived walks agree structurally
+    shardings2 = policy.param_shardings(params)
+    jax.tree_util.tree_map(lambda a, b: None, shardings, shardings2)

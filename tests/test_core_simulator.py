@@ -1,7 +1,7 @@
 """Cycle-accurate simulators: numerically exact + timing == eqs. (1)-(7)."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.core import analytical, permute, simulator
 

@@ -48,30 +48,30 @@ def test_chunked_attention_equals_dense(chunk):
     np.testing.assert_allclose(np.asarray(chunked), np.asarray(dense), atol=2e-3)
 
 
-# keys stored in DiP format under weight_format="dip" (dense family)
+# keys stored as api.DipWeight when cfg.uses_dip_storage (dense family)
 _DIP_KEYS = {"wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down", "lm_head",
              "in_proj", "out_proj", "w_dkv", "w_krope", "w_uk", "w_uv",
              "shared_w_gate", "shared_w_up", "shared_w_down"}
 
 
 def _to_dip_params(tree):
-    from repro.kernels import ops
+    from repro import api
 
     out = {}
     for k, v in tree.items():
         if isinstance(v, dict):
             out[k] = _to_dip_params(v)
         elif k in _DIP_KEYS and v.ndim >= 2:
-            out[k] = ops.to_dip_format(v) if v.ndim == 2 else jax.vmap(ops.to_dip_format)(v)
+            out[k] = api.DipWeight.from_natural(v)  # leading stack dims pass through
         else:
             out[k] = v
     return out
 
 
 def test_dip_storage_equals_natural_storage():
-    """weight_format=dip must be numerically identical to natural layout."""
+    """DipWeight storage must be numerically identical to natural layout."""
     cfg_nat = _dense_cfg()
-    cfg_dip = dataclasses.replace(cfg_nat, weight_format="dip")
+    cfg_dip = dataclasses.replace(cfg_nat, dip_weights=True)
     params_nat = tf_model.init_params(KEY, cfg_nat)
     params_dip = _to_dip_params(params_nat)
 
@@ -83,7 +83,7 @@ def test_dip_storage_equals_natural_storage():
 
 def test_pallas_impl_equals_xla_impl():
     cfg_x = _dense_cfg(n_layers=1, vocab_size=128)
-    cfg_p = dataclasses.replace(cfg_x, weight_format="dip", matmul_impl="pallas_dip")
+    cfg_p = dataclasses.replace(cfg_x, matmul_backend="pallas_dip")
     params = tf_model.init_params(KEY, cfg_x)
     params_p = _to_dip_params(params)
     toks = jax.random.randint(KEY, (1, 8), 0, 128)

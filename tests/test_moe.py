@@ -3,7 +3,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.configs.base import ArchConfig
 from repro.models import moe, transformer as tf_model
@@ -90,7 +90,6 @@ def test_shared_experts_added():
         {"w_gate": lp["shared_w_gate"], "w_up": lp["shared_w_up"],
          "w_down": lp["shared_w_down"]},
         cfg_sh,
-        d_ff=cfg_sh.n_shared_experts * cfg_sh.d_ff_expert,
     )
     np.testing.assert_allclose(
         np.asarray(out_sh), np.asarray(out_ns + shared_only), atol=1e-4

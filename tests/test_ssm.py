@@ -31,7 +31,7 @@ def _naive_ssd_reference(x, p, cfg):
     dims = ssm.ssm_dims(cfg)
     di, h, pd, n = dims["d_inner"], dims["heads"], dims["headdim"], dims["state"]
 
-    zxbcdt = np.asarray(linear(jnp.asarray(x), p["in_proj"], d_out=dims["in_dim"],
+    zxbcdt = np.asarray(linear(jnp.asarray(x), p["in_proj"],
                                compute_dtype=jnp.float32), np.float64)
     z = zxbcdt[..., :di]
     xin = zxbcdt[..., di:2 * di]
@@ -70,7 +70,7 @@ def _naive_ssd_reference(x, p, cfg):
         rms_norm(jnp.asarray(y, jnp.float32), p["norm"], cfg.norm_eps), np.float64
     )
     out = np.asarray(
-        linear(jnp.asarray(y, jnp.float32), p["out_proj"], d_out=cfg.d_model,
+        linear(jnp.asarray(y, jnp.float32), p["out_proj"],
                compute_dtype=jnp.float32),
         np.float64,
     )

@@ -47,7 +47,7 @@ def test_train_then_serve_end_to_end(tmp_path):
 
 def test_dip_format_system_runs_with_pallas_kernels(tmp_path):
     """The paper's storage format + fused kernel as the live matmul path."""
-    cfg = _cfg(weight_format="dip", matmul_impl="pallas_dip", vocab_size=256,
+    cfg = _cfg(matmul_backend="pallas_dip", vocab_size=256,
                d_model=64, d_ff=128)
     trainer = Trainer(
         cfg,
@@ -62,19 +62,21 @@ def test_dip_format_system_runs_with_pallas_kernels(tmp_path):
 
 
 def test_weight_format_checkpoint_roundtrips_permutated(tmp_path):
-    """Checkpoints persist the permutated storage; restore + de-permute
-    recovers the natural weights exactly."""
+    """Checkpoints persist the permutated storage (as DipWeight pytree
+    nodes); restore + de-permute recovers the natural weights exactly."""
+    from repro.api import DipWeight
     from repro.checkpoint import restore_pytree, save_pytree
-    from repro.kernels import ops
 
-    cfg = _cfg(weight_format="dip")
+    cfg = _cfg(dip_weights=True)
     params = tf_model.init_params(jax.random.PRNGKey(0), cfg)
     path = str(tmp_path / "dipck")
     save_pytree(path, params)
     got = restore_pytree(path, jax.eval_shape(lambda: params))
-    w_stored = got["layers"]["wq"][0]
-    w_live = params["layers"]["wq"][0]
-    np.testing.assert_array_equal(np.asarray(w_stored), np.asarray(w_live))
+    assert isinstance(got["layers"]["wq"], DipWeight)
+    w_stored = got["layers"]["wq"]
+    w_live = params["layers"]["wq"]
+    assert (w_stored.d_in, w_stored.d_out) == (w_live.d_in, w_live.d_out)
+    np.testing.assert_array_equal(np.asarray(w_stored.data), np.asarray(w_live.data))
     # storage really is permutated: de-shear differs from raw storage
-    nat = ops.from_dip_format(w_live)
-    assert not np.array_equal(np.asarray(nat), np.asarray(w_live))
+    nat = w_live.to_natural()
+    assert not np.array_equal(np.asarray(nat[0]), np.asarray(w_live.data[0]))
