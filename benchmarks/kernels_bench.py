@@ -65,6 +65,22 @@ def run(csv_rows):
     print(f"Pallas pallas_dip 64x256x256 (interpret): {t_pallas:9.1f} us "
           f"(Python emulation — TPU path compiles via Mosaic)")
 
+    # tuned-vs-heuristic delta on the same workload: what the autotuner's
+    # measured entry buys over whatever the table currently resolves
+    # (register=False keeps the benchmark from mutating the global table)
+    from repro.api import autotune
+
+    res = autotune.autotune_shape(
+        "pallas_dip", 64, 256, 256, "float32",
+        iters=2, warmup=1, interpret=True, max_candidates=4, register=False,
+    )
+    t_inc, t_best = res.incumbent_time_us, res.best.time_us
+    speedup = res.speedup_vs_incumbent() or 1.0
+    print(f"autotune 64x256x256 f32: incumbent {tuple(res.incumbent)} "
+          f"{t_inc:9.1f} us -> best {tuple(res.best.blocks)} {t_best:9.1f} us "
+          f"({speedup:.2f}x; {len(res.measurements)} candidates)")
+
     csv_rows.append(("kern_xla_plain_matmul", t_plain, f"{2*m*k*n/ (t_plain*1e-6) /1e9:.1f}GFLOP/s"))
     csv_rows.append(("kern_xla_dip_storage", t_dip_xla, f"overhead_{overhead:+.1f}%"))
     csv_rows.append(("kern_pallas_interpret", t_pallas, "interpret_mode"))
+    csv_rows.append(("kern_autotune_best", t_best, f"tuned_vs_incumbent_{speedup:.2f}x"))

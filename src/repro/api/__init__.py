@@ -9,6 +9,11 @@ Two first-class concepts (see ``docs/api.md``):
   named, pluggable implementations (``xla`` / ``ws`` / ``pallas_dip`` /
   ``pallas_systolic``) with block sizes drawn from a per-shape/dtype tuning
   table.
+
+The tuning table is self-optimizing: ``repro.api.autotune`` (a module-level
+CLI, not imported here to keep this package light) measures candidate block
+geometries on the live device and persists winners to a per-device cache
+that ``repro.api.tuning`` reloads on first lookup — see ``docs/tuning.md``.
 """
 
 from repro.api.registry import (
@@ -21,7 +26,13 @@ from repro.api.registry import (
     matmul,
     register_backend,
 )
-from repro.api.tuning import BlockConfig, clamp_blocks, lookup_blocks, register_tuning
+from repro.api.tuning import (
+    BlockConfig,
+    clamp_blocks,
+    lookup_blocks,
+    register_measured,
+    register_tuning,
+)
 from repro.api.weights import PERM_TILE, DipWeight, as_dip_weight
 
 __all__ = [
@@ -38,6 +49,7 @@ __all__ = [
     "default_interpret",
     "BlockConfig",
     "register_tuning",
+    "register_measured",
     "lookup_blocks",
     "clamp_blocks",
 ]

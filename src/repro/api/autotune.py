@@ -1,0 +1,425 @@
+"""Measurement-based block-size autotuner for the matmul backends.
+
+The paper's DSE (Tables 1-2) shows DiP's efficiency hinges on tile geometry;
+``repro.api.tuning`` holds the per-(backend, dtype, shape) table, but its
+built-in entries are heuristics.  This module fills the table from the live
+device instead:
+
+1. **candidate generation** — MXU/perm-tile-aligned ``BlockConfig``s for the
+   problem, deduplicated through :func:`tuning.clamp_blocks` and filtered by
+   a VMEM working-set estimate (operand blocks are double-buffered, the
+   accumulator scratch is f32/i32 at ``block_m x block_n``);
+2. **measurement** — each candidate is dispatched through the real
+   ``api.matmul`` path (compile + warm first, then timed over ``iters``
+   calls with ``block_until_ready`` fencing);
+3. **persistence** — the winner is registered as an exact-shape entry via
+   :func:`tuning.register_measured` and mirrored to the JSON cache that
+   ``repro.api.tuning`` reloads on first lookup, so one autotune run
+   benefits every later process on the same device.
+
+CLI (shapes from a model config, or an explicit list)::
+
+    python -m repro.api.autotune --backend pallas_dip --config llama3_8b
+    python -m repro.api.autotune --shapes 256x1024x1024,256x1024x4096
+
+On a CPU host the Pallas kernels run in interpret mode — absolute times are
+Python-emulation numbers, but the full measure->register->persist loop is
+exercised end to end (that is what CI runs).  See ``docs/tuning.md``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.api import registry, tuning
+from repro.api.tuning import BlockConfig
+from repro.api.weights import PERM_TILE, DipWeight
+
+__all__ = [
+    "Measurement",
+    "ShapeResult",
+    "estimate_vmem_bytes",
+    "candidate_blocks",
+    "measure_candidate",
+    "autotune_shape",
+    "autotune_shapes",
+    "autotune_for_config",
+    "main",
+]
+
+# Per-core VMEM on current TPU generations is ~16 MiB; leave headroom for
+# the pipeline's own buffers and the de-shear temporaries.
+VMEM_BYTES = 16 * 1024 * 1024
+DEFAULT_VMEM_FRACTION = 0.75
+
+_M_SIDES = (8, 32, 64, 128, 256, 512)
+_KN_SIDES = (64, 128, 256, 512)
+
+
+@dataclasses.dataclass(frozen=True)
+class Measurement:
+    blocks: BlockConfig
+    time_us: float
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeResult:
+    """All measurements for one (backend, dtype, m, k, n) workload."""
+
+    backend: str
+    dtype: str
+    m: int
+    k: int
+    n: int
+    measurements: Tuple[Measurement, ...]
+    incumbent: BlockConfig  # what lookup_blocks returned before this run
+
+    @property
+    def best(self) -> Measurement:
+        return min(self.measurements, key=lambda r: r.time_us)
+
+    @property
+    def incumbent_time_us(self) -> Optional[float]:
+        for r in self.measurements:
+            if r.blocks == self.incumbent:
+                return r.time_us
+        return None
+
+    def speedup_vs_incumbent(self) -> Optional[float]:
+        t = self.incumbent_time_us
+        return None if t is None else t / self.best.time_us
+
+
+def _timer() -> float:
+    """Wall-clock source for the measurement loop (monkeypatchable in tests)."""
+    return time.perf_counter()
+
+
+def estimate_vmem_bytes(blocks: BlockConfig, dtype, out_dtype=None) -> int:
+    """Working-set estimate for one tiled-kernel grid step.
+
+    x (bm, bk) and w (bk, bn) operand blocks are double-buffered by the
+    Pallas pipeline; the accumulator scratch is f32/i32 (4 bytes) at
+    (bm, bn); the output block is written once per K sweep.
+    """
+    item = jnp.dtype(dtype).itemsize
+    out_item = jnp.dtype(out_dtype).itemsize if out_dtype is not None else item
+    bm, bn, bk = blocks.block_m, blocks.block_n, blocks.block_k
+    operands = 2 * (bm * bk + bk * bn) * item
+    acc = bm * bn * 4
+    out = 2 * bm * bn * out_item
+    return operands + acc + out
+
+
+def candidate_blocks(
+    backend: str,
+    dtype,
+    m: int,
+    k: int,
+    n: int,
+    *,
+    perm_tile: int = PERM_TILE,
+    vmem_budget: Optional[int] = None,
+    max_candidates: Optional[int] = None,
+    incumbent: Optional[BlockConfig] = None,
+) -> List[BlockConfig]:
+    """Aligned, VMEM-feasible candidates for one workload.
+
+    The incumbent (whatever ``lookup_blocks`` currently resolves — a table
+    entry or the heuristic) is always candidate 0, so a tuning run can only
+    improve on the status quo.  ``pallas_systolic`` pins K/N at the physical
+    array dimension (the kernel tiles the wavefront per 64-wide array), so
+    only M varies there.
+    """
+    if max_candidates is not None and max_candidates < 1:
+        raise ValueError(f"max_candidates must be >= 1, got {max_candidates}")
+    dtype = jnp.dtype(dtype)
+    # integer operands accumulate to (and emit) int32 — count the output
+    # block at its real width or int8 working sets are undercounted 4x
+    out_dtype = jnp.dtype(jnp.int32) if dtype.kind in "iu" else dtype
+    budget = vmem_budget or int(VMEM_BYTES * DEFAULT_VMEM_FRACTION)
+    if incumbent is None:
+        incumbent = tuning.lookup_blocks(backend, m, k, n, dtype, perm_tile=perm_tile)
+
+    raw: List[BlockConfig] = [incumbent]
+    if registry.get_backend(backend).name == "pallas_systolic":
+        for bm in _M_SIDES:
+            raw.append(BlockConfig(bm, perm_tile, perm_tile))
+    else:
+        for bm in _M_SIDES:
+            for bn in _KN_SIDES:
+                for bk in _KN_SIDES:
+                    raw.append(BlockConfig(bm, bn, bk))
+
+    seen, out = set(), []
+    for cand in raw:
+        cand = tuning.clamp_blocks(cand, m, k, n, perm_tile)
+        if cand in seen:
+            continue
+        seen.add(cand)
+        if cand != incumbent and estimate_vmem_bytes(cand, dtype, out_dtype) > budget:
+            continue
+        out.append(cand)
+    if max_candidates is not None and len(out) > max_candidates:
+        # keep the incumbent plus the largest-working-set survivors (deep
+        # blocks amortize the de-shear best; tiny blocks rarely win)
+        rest = sorted(
+            out[1:], key=lambda c: estimate_vmem_bytes(c, dtype, out_dtype),
+            reverse=True,
+        )
+        out = out[:1] + rest[: max_candidates - 1]
+    return out
+
+
+def _operands(backend: str, dtype, m: int, k: int, n: int, seed: int = 0):
+    """Random activation + weight pair in the layout the backend consumes."""
+    r = np.random.default_rng(seed)
+    dtype = jnp.dtype(dtype)
+    if dtype == jnp.dtype(jnp.int8):
+        x = r.integers(-128, 128, (m, k)).astype(np.int8)
+        w = r.integers(-128, 128, (k, n)).astype(np.int8)
+    else:
+        x = r.normal(0, 1, (m, k)).astype(dtype)
+        w = r.normal(0, 1, (k, n)).astype(dtype)
+    x, w = jnp.asarray(x), jnp.asarray(w)
+    if registry.backend_layout(backend) == "dip":
+        return x, DipWeight.from_natural(w)
+    return x, w
+
+
+def measure_candidate(
+    backend: str,
+    x,
+    w,
+    blocks: BlockConfig,
+    *,
+    iters: int = 3,
+    warmup: int = 1,
+    interpret: Optional[bool] = None,
+) -> float:
+    """Mean wall time (us) over ``iters`` compiled-and-warmed dispatches."""
+    def dispatch():
+        return registry.matmul(
+            x, w, backend=backend,
+            block_m=blocks.block_m, block_n=blocks.block_n,
+            block_k=blocks.block_k, interpret=interpret,
+        )
+
+    iters = max(1, iters)
+    for _ in range(max(1, warmup)):  # compile + warm outside the timed loop
+        dispatch().block_until_ready()
+    t0 = _timer()
+    for _ in range(iters):
+        out = dispatch()
+    out.block_until_ready()
+    return (_timer() - t0) / iters * 1e6
+
+
+def autotune_shape(
+    backend: str,
+    m: int,
+    k: int,
+    n: int,
+    dtype="float32",
+    *,
+    iters: int = 3,
+    warmup: int = 1,
+    interpret: Optional[bool] = None,
+    max_candidates: Optional[int] = 8,
+    vmem_budget: Optional[int] = None,
+    register: bool = True,
+    persist: bool = True,
+    cache_path=None,
+    verbose: bool = False,
+) -> ShapeResult:
+    """Measure candidates for one workload; register + persist the winner."""
+    be = registry.get_backend(backend)
+    if not be.tiled:
+        raise ValueError(
+            f"backend {be.name!r} is not tiled — it has no block sizes to tune"
+        )
+    dtype_name = jnp.dtype(dtype).name
+    lm, lk, ln = m, k, n
+    if be.layout == "dip":
+        # dispatch looks blocks up with the PADDED storage dims (the DipWeight
+        # carries K/N zero-padded to the perm-tile grid), so the entry must be
+        # keyed — and candidates generated — in that domain or it never hits
+        lk, ln = DipWeight.storage_dims(k, n)
+    incumbent = tuning.lookup_blocks(be.name, lm, lk, ln, dtype)
+    cands = candidate_blocks(
+        be.name, dtype, lm, lk, ln,
+        vmem_budget=vmem_budget, max_candidates=max_candidates,
+        incumbent=incumbent,
+    )
+    x, w = _operands(be.name, dtype, m, k, n)
+    measurements = []
+    for cand in cands:
+        t = measure_candidate(
+            be.name, x, w, cand, iters=iters, warmup=warmup, interpret=interpret
+        )
+        measurements.append(Measurement(cand, t))
+        if verbose:
+            print(f"  {tuple(cand)!s:>18}  {t:10.1f} us")
+    result = ShapeResult(
+        backend=be.name, dtype=dtype_name, m=m, k=k, n=n,
+        measurements=tuple(measurements), incumbent=incumbent,
+    )
+    if register:
+        tuning.register_measured(
+            result.best.blocks, backend=be.name, dtype=dtype_name,
+            m=lm, k=lk, n=ln, time_us=result.best.time_us,
+            persist=persist, path=cache_path,
+        )
+    return result
+
+
+def autotune_shapes(
+    backend: str,
+    shapes: Sequence[Tuple[int, int, int]],
+    dtype="float32",
+    *,
+    verbose: bool = False,
+    **kwargs,
+) -> List[ShapeResult]:
+    """Tune every (m, k, n) in ``shapes``; duplicates are collapsed."""
+    results = []
+    for m, k, n in dict.fromkeys(tuple(s) for s in shapes):
+        if verbose:
+            print(f"[autotune] {backend} {jnp.dtype(dtype).name} {m}x{k}x{n}")
+        results.append(
+            autotune_shape(backend, m, k, n, dtype, verbose=verbose, **kwargs)
+        )
+    return results
+
+
+def autotune_for_config(
+    cfg, *, tokens: int = 128, backend: Optional[str] = None, **kwargs
+) -> List[ShapeResult]:
+    """Tune every distinct linear projection of a model config.
+
+    Used by the launchers' opt-in ``--autotune`` flag: registers measured
+    entries before the first forward pass traces, so the jitted model picks
+    them up.  No-op (with a notice) for non-tiled backends like ``xla``.
+    """
+    from repro.configs.shapes import matmul_shapes
+
+    backend = backend or cfg.matmul_backend
+    if not registry.get_backend(backend).tiled:
+        print(f"[autotune] backend {backend!r} is not tiled; nothing to tune")
+        return []
+    shapes = [(s.m, s.k, s.n) for s in matmul_shapes(cfg, tokens=tokens)]
+    return autotune_shapes(backend, shapes, cfg.compute_dtype, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# CLI
+def _parse_shapes(spec: str) -> List[Tuple[int, int, int]]:
+    shapes = []
+    for part in spec.split(","):
+        dims = part.lower().split("x")
+        if len(dims) != 3:
+            raise argparse.ArgumentTypeError(
+                f"shape {part!r} is not of the form MxKxN"
+            )
+        shapes.append(tuple(int(d) for d in dims))
+    return shapes
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.api.autotune",
+        description="Measure matmul block-size candidates on the live device "
+                    "and persist the winners into the tuning table.",
+    )
+    ap.add_argument("--backend", default="pallas_dip",
+                    help="registered tiled backend to tune (default: pallas_dip)")
+    ap.add_argument("--config", default=None,
+                    help="model config name (repro.configs) to derive shapes from")
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the config's tiny CPU-scale variant")
+    ap.add_argument("--shapes", type=_parse_shapes, default=None,
+                    metavar="MxKxN[,MxKxN...]",
+                    help="explicit workload shapes (overrides --config)")
+    ap.add_argument("--tokens", type=int, default=128,
+                    help="M dimension (tokens per dispatch) for --config shapes")
+    ap.add_argument("--dtype", default=None,
+                    help="operand dtype (default: config compute_dtype or float32)")
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--warmup", type=int, default=1)
+    ap.add_argument("--max-candidates", type=int, default=None,
+                    help="cap the candidate count per shape "
+                         "(default: 4 in interpret mode, 8 compiled)")
+    ap.add_argument("--vmem-budget", type=int, default=None,
+                    help="VMEM working-set budget in bytes")
+    ap.add_argument("--cache-path", default=None,
+                    help="tuning-cache file (default: "
+                         "~/.cache/repro-dip/tuning-<device>.json)")
+    ap.add_argument("--no-persist", action="store_true",
+                    help="register winners in-process only; do not write the cache")
+    ap.add_argument("--compiled", action="store_true",
+                    help="force compiled (non-interpret) Pallas execution")
+    args = ap.parse_args(argv)
+
+    interpret = False if args.compiled else registry.default_interpret()
+    max_candidates = args.max_candidates
+    if max_candidates is None:
+        max_candidates = 4 if interpret else 8
+
+    dtype = args.dtype
+    if args.shapes is not None:
+        shapes = args.shapes
+    elif args.config is not None:
+        from repro.configs import get_config
+
+        cfg = get_config(args.config)
+        if args.reduced:
+            cfg = cfg.reduced()
+        dtype = dtype or cfg.compute_dtype
+        from repro.configs.shapes import matmul_shapes
+
+        named = matmul_shapes(cfg, tokens=args.tokens)
+        print(f"[autotune] {len(named)} distinct projections in "
+              f"{cfg.name}{' (reduced)' if args.reduced else ''}:")
+        for s in named:
+            print(f"  {s.m:>6} x {s.k:>6} x {s.n:>6}  ({s.name})")
+        shapes = [(s.m, s.k, s.n) for s in named]
+    else:
+        # default smoke suite: small enough for CPU interpret mode
+        shapes = [(64, 128, 128), (64, 128, 256)]
+    dtype = dtype or "float32"
+
+    if not registry.get_backend(args.backend).tiled:
+        print(f"[autotune] backend {args.backend!r} is not tiled — it has no "
+              f"block sizes to tune (tiled backends: "
+              f"{[b for b in registry.list_backends() if registry.get_backend(b).tiled]})")
+        return 2
+
+    mode = "interpret" if interpret else "compiled"
+    print(f"[autotune] backend={args.backend} dtype={jnp.dtype(dtype).name} "
+          f"mode={mode} iters={args.iters} shapes={len(shapes)}")
+    results = autotune_shapes(
+        args.backend, shapes, dtype,
+        iters=args.iters, warmup=args.warmup, interpret=interpret,
+        max_candidates=max_candidates, vmem_budget=args.vmem_budget,
+        persist=not args.no_persist, cache_path=args.cache_path,
+        verbose=True,
+    )
+    for res in results:
+        speedup = res.speedup_vs_incumbent()
+        note = f"{speedup:.2f}x vs incumbent" if speedup else "incumbent untimed"
+        print(f"[autotune] {res.m}x{res.k}x{res.n}: best {tuple(res.best.blocks)} "
+              f"@ {res.best.time_us:.1f} us ({note}, "
+              f"{len(res.measurements)} candidates)")
+    if not args.no_persist:
+        print(f"[autotune] cache written: {tuning.cache_path(args.cache_path)}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

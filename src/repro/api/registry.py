@@ -144,9 +144,9 @@ _BUILTINS_LOADED = False
 
 
 def _ensure_builtins() -> None:
-    # Deferred: the built-in backends live in repro.kernels, which itself
-    # imports repro.api (the ops deprecation shims) — registering lazily on
-    # first registry access breaks the import cycle.
+    # Deferred: the built-in backends live in repro.kernels; registering
+    # lazily on first registry access keeps this module import-light and
+    # immune to api<->kernels import cycles.
     global _BUILTINS_LOADED
     if not _BUILTINS_LOADED:
         _BUILTINS_LOADED = True

@@ -13,20 +13,37 @@ larger than the padded dimension it tiles (no point padding a (8, 64) matmul
 to 256x256), never smaller than the hardware minimum (8 sublanes for M, one
 permutation tile for K/N — the de-shear operates per 64-wide tile).
 
-A future autotuner (ROADMAP) writes measured entries through
-:func:`register_tuning`; nothing else needs to change.
+The autotuner (``repro.api.autotune``) writes *measured* entries through
+:func:`register_measured`: exact-shape rules (min == max == the measured
+problem) that outrank the heuristic built-ins, mirrored to a JSON cache on
+disk (:func:`cache_path`) that reloads lazily on the first lookup so tuned
+entries survive restarts.  See ``docs/tuning.md``.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List, NamedTuple, Optional
+import json
+import os
+import pathlib
+import warnings
+from typing import List, NamedTuple, Optional, Union
 
 import jax.numpy as jnp
 
 from repro.api.weights import PERM_TILE
 
-__all__ = ["BlockConfig", "TuningEntry", "register_tuning", "lookup_blocks", "clamp_blocks"]
+__all__ = [
+    "BlockConfig",
+    "TuningEntry",
+    "register_tuning",
+    "register_measured",
+    "lookup_blocks",
+    "clamp_blocks",
+    "cache_path",
+    "load_cache",
+    "save_cache_record",
+]
 
 
 class BlockConfig(NamedTuple):
@@ -37,14 +54,23 @@ class BlockConfig(NamedTuple):
 
 @dataclasses.dataclass(frozen=True)
 class TuningEntry:
-    """One tuning rule: applies when every non-None constraint matches."""
+    """One tuning rule: applies when every non-None constraint matches.
+
+    ``max_*`` bound the rule from above (applies while m <= max_m, ...);
+    ``min_*`` from below.  Measured entries pin both to the benchmarked
+    problem so they never leak onto shapes that were not timed.
+    """
 
     blocks: BlockConfig
     backend: Optional[str] = None       # None = any backend
     dtype: Optional[str] = None         # operand dtype name, None = any
-    max_m: Optional[int] = None         # rule applies while m <= max_m, etc.
+    max_m: Optional[int] = None
     max_k: Optional[int] = None
     max_n: Optional[int] = None
+    min_m: Optional[int] = None
+    min_k: Optional[int] = None
+    min_n: Optional[int] = None
+    source: str = "user"                # user | measured | cache | builtin
 
     def matches(self, backend: str, dtype: str, m: int, k: int, n: int) -> bool:
         return (
@@ -53,6 +79,9 @@ class TuningEntry:
             and (self.max_m is None or m <= self.max_m)
             and (self.max_k is None or k <= self.max_k)
             and (self.max_n is None or n <= self.max_n)
+            and (self.min_m is None or m >= self.min_m)
+            and (self.min_k is None or k >= self.min_k)
+            and (self.min_n is None or n >= self.min_n)
         )
 
 
@@ -67,11 +96,20 @@ def register_tuning(
     max_m: Optional[int] = None,
     max_k: Optional[int] = None,
     max_n: Optional[int] = None,
+    min_m: Optional[int] = None,
+    min_k: Optional[int] = None,
+    min_n: Optional[int] = None,
+    source: str = "user",
 ) -> TuningEntry:
-    """Add a tuning rule (most recently registered wins on overlap)."""
+    """Add a tuning rule (most recently registered wins on overlap).
+
+    The default ``source="user"`` keeps explicitly registered rules ahead
+    of lazily loaded cache entries (see :func:`load_cache` precedence).
+    """
     entry = TuningEntry(
         blocks=BlockConfig(*blocks), backend=backend, dtype=dtype,
         max_m=max_m, max_k=max_k, max_n=max_n,
+        min_m=min_m, min_k=min_k, min_n=min_n, source=source,
     )
     _TABLE.insert(0, entry)
     return entry
@@ -102,6 +140,7 @@ def lookup_blocks(
     backend: str, m: int, k: int, n: int, dtype, *, perm_tile: int = PERM_TILE
 ) -> BlockConfig:
     """Resolve block sizes for one dispatch (before caller overrides)."""
+    _ensure_cache_loaded()
     dtype_name = jnp.dtype(dtype).name
     for entry in _TABLE:
         if entry.matches(backend, dtype_name, m, k, n):
@@ -111,10 +150,167 @@ def lookup_blocks(
 
 
 # ---------------------------------------------------------------------------
+# Measured-entry persistence.  The autotuner (repro.api.autotune) registers
+# winners through register_measured(), which mirrors them to a JSON cache so
+# a fresh process starts from the measured table instead of the heuristics.
+CACHE_VERSION = 1
+_CACHE_DIR_ENV = "REPRO_DIP_CACHE_DIR"        # override the cache directory
+_CACHE_DISABLE_ENV = "REPRO_DIP_NO_TUNING_CACHE"  # set to skip import-time load
+
+
+def _device_tag() -> str:
+    """Filename-safe identifier for the device the entries were measured on
+    (block-size winners do not transfer across device generations)."""
+    import jax  # deferred: keep module import free of backend initialization
+
+    try:
+        kind = jax.devices()[0].device_kind
+    except Exception:  # uninitializable backend — still want a usable path
+        kind = jax.default_backend()
+    tag = "".join(c if c.isalnum() else "-" for c in kind.lower()).strip("-")
+    return tag or "unknown"
+
+
+def cache_dir() -> pathlib.Path:
+    env = os.environ.get(_CACHE_DIR_ENV)
+    if env:
+        return pathlib.Path(env)
+    xdg = os.environ.get("XDG_CACHE_HOME")
+    base = pathlib.Path(xdg) if xdg else pathlib.Path.home() / ".cache"
+    return base / "repro-dip"
+
+
+def cache_path(path: Union[str, pathlib.Path, None] = None) -> pathlib.Path:
+    """The tuning-cache file for this device (``tuning-<device>.json``)."""
+    if path is not None:
+        return pathlib.Path(path)
+    return cache_dir() / f"tuning-{_device_tag()}.json"
+
+
+def _record_key(rec: dict) -> tuple:
+    return (rec["backend"], rec["dtype"], rec["m"], rec["k"], rec["n"])
+
+
+def _read_cache(path: pathlib.Path) -> List[dict]:
+    if not path.exists():
+        return []
+    payload = json.loads(path.read_text())
+    if payload.get("version") != CACHE_VERSION:
+        raise ValueError(
+            f"tuning cache {path} has version {payload.get('version')!r}, "
+            f"expected {CACHE_VERSION}"
+        )
+    return list(payload.get("entries", []))
+
+
+def save_cache_record(
+    rec: dict, path: Union[str, pathlib.Path, None] = None
+) -> pathlib.Path:
+    """Insert-or-replace one measured record (keyed on backend/dtype/shape)."""
+    p = cache_path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    try:
+        existing = _read_cache(p)
+    except Exception as exc:
+        # self-heal: a corrupt/foreign-version cache must not make every
+        # future autotune run crash at persist time — start a fresh file
+        warnings.warn(f"replacing unreadable tuning cache {p}: {exc}")
+        existing = []
+    entries = [e for e in existing if _record_key(e) != _record_key(rec)]
+    entries.append(rec)
+    entries.sort(key=_record_key)
+    tmp = p.with_suffix(".json.tmp")
+    tmp.write_text(json.dumps(
+        {"version": CACHE_VERSION, "device": _device_tag(), "entries": entries},
+        indent=2, sort_keys=True,
+    ) + "\n")
+    tmp.replace(p)  # atomic: a concurrent reader never sees a torn file
+    return p
+
+
+def register_measured(
+    blocks,
+    *,
+    backend: str,
+    dtype: str,
+    m: int,
+    k: int,
+    n: int,
+    time_us: Optional[float] = None,
+    persist: bool = True,
+    path: Union[str, pathlib.Path, None] = None,
+) -> TuningEntry:
+    """Register an autotuned winner: an exact-shape rule, optionally mirrored
+    to the on-disk cache so it survives restarts."""
+    entry = register_tuning(
+        blocks, backend=backend, dtype=dtype,
+        max_m=m, max_k=k, max_n=n, min_m=m, min_k=k, min_n=n,
+        source="measured",
+    )
+    if persist:
+        bc = entry.blocks
+        rec = {
+            "backend": backend, "dtype": dtype, "m": m, "k": k, "n": n,
+            "block_m": bc.block_m, "block_n": bc.block_n, "block_k": bc.block_k,
+        }
+        if time_us is not None:
+            rec["time_us"] = round(float(time_us), 3)
+        save_cache_record(rec, path)
+    return entry
+
+
+def load_cache(path: Union[str, pathlib.Path, None] = None) -> int:
+    """Register every record from the on-disk cache (newest-registered wins);
+    returns the number of entries loaded.  Runs lazily on first table access
+    (not at import: resolving the cache filename initializes the JAX backend,
+    which importers like launch/dryrun must control themselves)."""
+    p = cache_path(path)
+    entries = [
+        TuningEntry(
+            blocks=BlockConfig(rec["block_m"], rec["block_n"], rec["block_k"]),
+            backend=rec["backend"], dtype=rec["dtype"],
+            max_m=rec["m"], max_k=rec["k"], max_n=rec["n"],
+            min_m=rec["m"], min_k=rec["k"], min_n=rec["n"],
+            source="cache",
+        )
+        for rec in _read_cache(p)
+    ]
+    # precedence: explicitly registered rules > cached winners > built-ins
+    idx = next(
+        (i for i, e in enumerate(_TABLE) if e.source == "builtin"), len(_TABLE)
+    )
+    _TABLE[idx:idx] = entries
+    return len(entries)
+
+
+_CACHE_LOADED = False
+
+
+def _ensure_cache_loaded() -> None:
+    """Load persisted measured entries once, on the first lookup.
+
+    Deliberately NOT at import: resolving the cache filename queries the
+    device kind, which initializes the JAX backend — importers (e.g.
+    launch/dryrun's XLA_FLAGS games) must stay in control of that.  Cached
+    entries splice in behind explicitly registered rules, so lazy loading
+    never demotes a rule the caller added before the first lookup.
+    """
+    global _CACHE_LOADED
+    if _CACHE_LOADED or os.environ.get(_CACHE_DISABLE_ENV):
+        return
+    _CACHE_LOADED = True  # set first so a load failure is not retried per call
+    try:
+        load_cache()
+    except Exception as exc:  # a corrupt cache must not break dispatch
+        warnings.warn(f"ignoring unreadable tuning cache: {exc}")
+
+
+# ---------------------------------------------------------------------------
 # Built-in entries.  Narrower operands afford deeper K blocks at the same
 # VMEM budget (acc scratch is f32/i32 at block_m x block_n regardless);
 # the wavefront-emulation path tiles K/N at the physical array dimension.
-register_tuning((256, 256, 256), dtype="float32")
-register_tuning((256, 256, 512), dtype="bfloat16")
-register_tuning((256, 256, 512), dtype="int8")
-register_tuning((128, PERM_TILE, PERM_TILE), backend="pallas_systolic")
+register_tuning((256, 256, 256), dtype="float32", source="builtin")
+register_tuning((256, 256, 512), dtype="bfloat16", source="builtin")
+register_tuning((256, 256, 512), dtype="int8", source="builtin")
+register_tuning((128, PERM_TILE, PERM_TILE), backend="pallas_systolic",
+                source="builtin")

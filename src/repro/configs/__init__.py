@@ -10,6 +10,7 @@ import importlib
 from typing import Dict, List
 
 from repro.configs.base import SHAPE_CELLS, ArchConfig, ShapeCell
+from repro.configs.shapes import MatmulShape, linear_dims, matmul_shapes
 
 ALL_ARCHS: List[str] = [
     "deepseek_v2_lite_16b",
@@ -55,4 +56,14 @@ def shape_cells_for(cfg: ArchConfig) -> List[ShapeCell]:
     return cells
 
 
-__all__ = ["ALL_ARCHS", "ArchConfig", "ShapeCell", "SHAPE_CELLS", "get_config", "shape_cells_for"]
+__all__ = [
+    "ALL_ARCHS",
+    "ArchConfig",
+    "ShapeCell",
+    "SHAPE_CELLS",
+    "MatmulShape",
+    "get_config",
+    "shape_cells_for",
+    "linear_dims",
+    "matmul_shapes",
+]

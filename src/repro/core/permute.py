@@ -129,7 +129,7 @@ def _permute_tiled_impl(w: jax.Array, tile_r: int, tile_c: int, inverse: bool) -
     # NOTE: the result stays PADDED to the tile grid — cropping would drop
     # elements the per-tile rotation moved into the padding rows, making the
     # transform lossy for unaligned shapes (callers crop after unpermuting;
-    # see kernels/ops.from_dip_format).
+    # see api.DipWeight.to_natural).
     return blk.reshape(lead + (rp, cp))
 
 

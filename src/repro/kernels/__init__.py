@@ -6,14 +6,13 @@ compiles through Mosaic.  See each module's docstring for the VMEM/BlockSpec
 design.
 """
 
-from repro.kernels import ops, ref
+from repro.kernels import ref
 from repro.kernels.dip_matmul import dip_matmul_pallas
 from repro.kernels.dip_systolic import dip_systolic_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.ws_matmul import ws_matmul_pallas
 
 __all__ = [
-    "ops",
     "ref",
     "dip_matmul_pallas",
     "dip_systolic_pallas",

@@ -27,6 +27,9 @@ def main():
     ap.add_argument("--max-seq", type=int, default=256)
     ap.add_argument("--dip", action="store_true",
                     help="store weights DiP-permutated + use the Pallas kernel")
+    ap.add_argument("--autotune", action="store_true",
+                    help="measure block-size candidates for this config's "
+                         "projections before serving (tiled backends only)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -36,6 +39,11 @@ def main():
         import dataclasses
         cfg = dataclasses.replace(cfg, matmul_backend="pallas_dip",
                                   compute_dtype="float32")
+    if args.autotune:
+        # registers measured tuning entries before the first forward traces,
+        # so every jitted dispatch below picks them up
+        from repro.api import autotune
+        autotune.autotune_for_config(cfg, tokens=args.slots, verbose=True)
 
     params = tf_model.init_params(jax.random.PRNGKey(0), cfg)
     server = Server(cfg, ServerConfig(batch_slots=args.slots, max_seq=args.max_seq,

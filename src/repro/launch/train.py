@@ -33,11 +33,19 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--mesh", default="none", choices=["none", "local", "single", "multi"])
     ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--autotune", action="store_true",
+                    help="measure block-size candidates for this config's "
+                         "projections before training (tiled backends only)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    if args.autotune:
+        # registers measured tuning entries before train_step traces, so the
+        # jitted step dispatches with them
+        from repro.api import autotune
+        autotune.autotune_for_config(cfg, tokens=args.batch * args.seq, verbose=True)
 
     mesh = policy = None
     if args.mesh == "local":

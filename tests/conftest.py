@@ -5,6 +5,13 @@ benches must see the real (single-CPU) device topology.  Tests that need
 multiple devices spawn subprocesses (see tests/test_multidevice.py).
 """
 
+import os
+
+# Hermeticity: a developer's ~/.cache/repro-dip tuning cache must not leak
+# measured block-size entries into the suite's lookup_blocks expectations.
+# Must be set before the first `repro.api` import (the cache loads there).
+os.environ.setdefault("REPRO_DIP_NO_TUNING_CACHE", "1")
+
 import numpy as np
 import pytest
 

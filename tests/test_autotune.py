@@ -1,0 +1,309 @@
+"""Autotuner + tuning persistence: clamp edges, candidate generation, cache
+round-trips, config shape extraction, and the CLI (with a stubbed measurer —
+no device timing in the suite)."""
+
+import dataclasses
+import json
+
+import jax.numpy as jnp
+import pytest
+
+from repro import api
+from repro.api import autotune, tuning
+from repro.configs import get_config, matmul_shapes
+
+
+@pytest.fixture
+def clean_table():
+    """Snapshot/restore the global tuning table around a test.  The yielded
+    snapshot lets a test reset to the pre-test table mid-flight (simulating a
+    fresh process)."""
+    saved = list(tuning._TABLE)
+    yield saved
+    tuning._TABLE[:] = saved
+
+
+@pytest.fixture
+def fake_measure(monkeypatch):
+    """Replace device timing with a deterministic cost model: the candidate
+    with the smallest block volume 'wins'.  Records every call."""
+    calls = []
+
+    def fake(backend, x, w, blocks, **kwargs):
+        calls.append((backend, blocks))
+        bm, bn, bk = blocks
+        return float(bm * bn * bk) / 1000.0
+
+    monkeypatch.setattr(autotune, "measure_candidate", fake)
+    return calls
+
+
+def _expected_winner(cands):
+    return min(cands, key=lambda b: b.block_m * b.block_n * b.block_k)
+
+
+# ------------------------------------------------------------ clamp edges ---
+def test_clamp_blocks_tiny_m_keeps_sublane_floor():
+    assert api.clamp_blocks(api.BlockConfig(256, 256, 256), 1, 64, 64) == (8, 64, 64)
+    assert api.clamp_blocks(api.BlockConfig(256, 256, 256), 7, 64, 64) == (8, 64, 64)
+
+
+def test_clamp_blocks_tiny_k_n_keep_perm_tile_floor():
+    assert api.clamp_blocks(api.BlockConfig(128, 256, 256), 128, 1, 1) == (128, 64, 64)
+
+
+def test_clamp_blocks_rounds_unaligned_entries_up_to_perm_tile():
+    # a hand-written (or corrupted-cache) entry that is not a multiple of the
+    # 64-wide permutation tile must not poison dispatch
+    assert api.clamp_blocks(api.BlockConfig(96, 96, 96), 1024, 1024, 1024) == (96, 128, 128)
+    assert api.clamp_blocks(api.BlockConfig(40, 100, 70), 1024, 1024, 1024) == (40, 128, 128)
+
+
+def test_clamp_blocks_shrinks_to_padded_problem():
+    # ragged problem: blocks never exceed the pow2-padded dimension
+    assert api.clamp_blocks(api.BlockConfig(512, 512, 512), 100, 130, 200) == (128, 256, 256)
+
+
+# --------------------------------------------------- exact-shape matching ---
+def test_register_measured_entry_is_exact_shape(clean_table):
+    tuning.register_measured(
+        (8, 128, 64), backend="pallas_dip", dtype="float32",
+        m=16, k=128, n=128, persist=False,
+    )
+    assert tuple(api.lookup_blocks("pallas_dip", 16, 128, 128, jnp.float32)) == (8, 128, 64)
+    # neither smaller nor larger problems inherit the measured entry
+    assert tuple(api.lookup_blocks("pallas_dip", 8, 128, 128, jnp.float32)) == (8, 128, 128)
+    assert tuple(api.lookup_blocks("pallas_dip", 32, 128, 128, jnp.float32)) == (32, 128, 128)
+    # nor other dtypes or backends
+    assert api.lookup_blocks("pallas_dip", 16, 128, 128, jnp.bfloat16).block_k != 64
+    assert tuple(api.lookup_blocks("ws", 16, 128, 128, jnp.float32)) == (16, 128, 128)
+
+
+# ------------------------------------------------------------- candidates ---
+def test_candidate_blocks_are_aligned_and_budgeted():
+    cands = autotune.candidate_blocks("pallas_dip", jnp.float32, 128, 256, 256)
+    assert len(cands) >= 2
+    assert len(set(cands)) == len(cands)
+    budget = int(autotune.VMEM_BYTES * autotune.DEFAULT_VMEM_FRACTION)
+    incumbent = tuning.lookup_blocks("pallas_dip", 128, 256, 256, jnp.float32)
+    assert cands[0] == incumbent
+    for c in cands:
+        assert c.block_n % api.PERM_TILE == 0 and c.block_k % api.PERM_TILE == 0
+        assert c.block_m >= 8
+        if c != incumbent:
+            assert autotune.estimate_vmem_bytes(c, jnp.float32) <= budget
+
+
+def test_candidate_blocks_tiny_budget_keeps_only_incumbent():
+    cands = autotune.candidate_blocks(
+        "pallas_dip", jnp.float32, 128, 256, 256, vmem_budget=1
+    )
+    assert cands == [tuning.lookup_blocks("pallas_dip", 128, 256, 256, jnp.float32)]
+
+
+def test_candidate_blocks_systolic_pins_kn_to_array_dim():
+    cands = autotune.candidate_blocks("pallas_systolic", jnp.float32, 256, 256, 256)
+    assert len(cands) >= 2
+    for c in cands:
+        assert (c.block_n, c.block_k) == (api.PERM_TILE, api.PERM_TILE)
+
+
+def test_candidate_cap_respects_limit_and_keeps_incumbent():
+    cands = autotune.candidate_blocks(
+        "pallas_dip", jnp.float32, 512, 512, 512, max_candidates=3
+    )
+    assert len(cands) == 3
+    assert cands[0] == tuning.lookup_blocks("pallas_dip", 512, 512, 512, jnp.float32)
+
+
+def test_estimate_vmem_scales_with_dtype_width():
+    blocks = api.BlockConfig(128, 128, 128)
+    f32 = autotune.estimate_vmem_bytes(blocks, jnp.float32)
+    bf16 = autotune.estimate_vmem_bytes(blocks, jnp.bfloat16)
+    assert f32 > bf16 > 0
+
+
+def test_autotune_rejects_non_tiled_backend():
+    with pytest.raises(ValueError, match="not tiled"):
+        autotune.autotune_shape("xla", 64, 64, 64)
+
+
+# -------------------------------------------------------- cache roundtrip ---
+def test_cache_roundtrip_fresh_load_hits_measured_entry(
+    tmp_path, clean_table, fake_measure
+):
+    """write (autotune) -> fresh load -> lookup_blocks returns the winner."""
+    cache = tmp_path / "tuning-test.json"
+    res = autotune.autotune_shape(
+        "pallas_dip", 64, 128, 128, "float32",
+        register=True, persist=True, cache_path=cache,
+    )
+    assert len(res.measurements) >= 2
+    winner = _expected_winner([m.blocks for m in res.measurements])
+    assert res.best.blocks == winner
+
+    # simulate a fresh process: restore the pre-test table, reload the cache
+    tuning._TABLE[:] = clean_table
+    assert tuple(api.lookup_blocks("pallas_dip", 64, 128, 128, jnp.float32)) != tuple(winner)
+    assert tuning.load_cache(cache) == 1
+    assert api.lookup_blocks("pallas_dip", 64, 128, 128, jnp.float32) == winner
+    # the measured entry is exact-shape: a different problem is untouched
+    assert tuple(api.lookup_blocks("pallas_dip", 256, 256, 256, jnp.float32)) == (256, 256, 256)
+
+
+def test_autotune_unaligned_shape_keys_entry_on_padded_dims(
+    clean_table, fake_measure
+):
+    """dip-layout dispatch resolves blocks with the PADDED storage dims, so a
+    winner measured for an unaligned problem must be keyed there to ever hit."""
+    res = autotune.autotune_shape(
+        "pallas_dip", 64, 100, 200, "float32", register=True, persist=False,
+    )
+    entry = tuning._TABLE[0]
+    assert entry.source == "measured"
+    assert (entry.min_k, entry.max_k, entry.min_n, entry.max_n) == (128, 128, 256, 256)
+    # what registry._tiled_dispatch will actually ask for (storage 128x256)
+    assert api.lookup_blocks("pallas_dip", 64, 128, 256, jnp.float32) == res.best.blocks
+
+
+def test_load_cache_splices_behind_user_registered_rules(clean_table, tmp_path):
+    cache = tmp_path / "c.json"
+    tuning.save_cache_record(
+        dict(backend="pallas_dip", dtype="float32", m=64, k=128, n=128,
+             block_m=8, block_n=64, block_k=64),
+        cache,
+    )
+    # deliberately no source= kwarg: the public-API default must stay ahead
+    api.register_tuning(
+        (64, 128, 128), backend="pallas_dip", dtype="float32",
+        max_m=64, min_m=64, max_k=128, min_k=128, max_n=128, min_n=128,
+    )
+    tuning.load_cache(cache)
+    # the explicitly registered rule outranks the cached winner
+    assert tuple(api.lookup_blocks("pallas_dip", 64, 128, 128, jnp.float32)) == (64, 128, 128)
+
+
+def test_save_cache_record_self_heals_corrupt_file(tmp_path):
+    cache = tmp_path / "c.json"
+    cache.write_text("{this is not json")
+    with pytest.warns(UserWarning, match="unreadable"):
+        tuning.save_cache_record(
+            dict(backend="ws", dtype="float32", m=8, k=64, n=64,
+                 block_m=8, block_n=64, block_k=64),
+            cache,
+        )
+    payload = json.loads(cache.read_text())
+    assert len(payload["entries"]) == 1
+
+
+def test_candidate_budget_counts_int32_output_for_int8():
+    # int8 operands emit int32: the same geometry costs more VMEM than f32
+    blocks = api.BlockConfig(256, 256, 256)
+    i8 = autotune.estimate_vmem_bytes(blocks, jnp.int8, jnp.int32)
+    f32 = autotune.estimate_vmem_bytes(blocks, jnp.float32)
+    assert i8 < f32  # operands shrink 4x but the output stays int32-wide
+    assert i8 > autotune.estimate_vmem_bytes(blocks, jnp.int8)
+    budget = autotune.estimate_vmem_bytes(blocks, jnp.int8, jnp.int32) - 1
+    cands = autotune.candidate_blocks(
+        "pallas_dip", jnp.int8, 1024, 1024, 1024, vmem_budget=budget
+    )
+    assert blocks not in cands[1:]  # filtered at the int32-aware estimate
+
+
+def test_save_cache_record_replaces_same_key(tmp_path):
+    cache = tmp_path / "t.json"
+    rec = dict(backend="ws", dtype="float32", m=8, k=64, n=64,
+               block_m=8, block_n=64, block_k=64)
+    tuning.save_cache_record(rec, cache)
+    tuning.save_cache_record(dict(rec, block_m=16), cache)
+    payload = json.loads(cache.read_text())
+    assert payload["version"] == tuning.CACHE_VERSION
+    assert len(payload["entries"]) == 1
+    assert payload["entries"][0]["block_m"] == 16
+
+
+def test_load_cache_rejects_unknown_version(tmp_path):
+    cache = tmp_path / "t.json"
+    cache.write_text(json.dumps({"version": 999, "entries": []}))
+    with pytest.raises(ValueError, match="version"):
+        tuning.load_cache(cache)
+
+
+def test_cache_path_honours_env_dir(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_DIP_CACHE_DIR", str(tmp_path))
+    p = tuning.cache_path()
+    assert p.parent == tmp_path
+    assert p.name.startswith("tuning-") and p.suffix == ".json"
+
+
+# -------------------------------------------------------------- CLI smoke ---
+def test_cli_smoke_with_stubbed_timer(tmp_path, clean_table, fake_measure, capsys):
+    cache = tmp_path / "cli.json"
+    rc = autotune.main([
+        "--backend", "pallas_dip", "--shapes", "32x64x64,32x64x128",
+        "--iters", "1", "--cache-path", str(cache),
+    ])
+    assert rc == 0
+    assert len({blocks for _, blocks in fake_measure}) >= 2  # >=2 candidates timed
+    payload = json.loads(cache.read_text())
+    assert len(payload["entries"]) == 2
+    out = capsys.readouterr().out
+    assert "best" in out and str(cache) in out
+
+    tuning._TABLE[:] = clean_table
+    tuning.load_cache(cache)
+    got = api.lookup_blocks("pallas_dip", 32, 64, 64, jnp.float32)
+    cands = autotune.candidate_blocks(
+        "pallas_dip", jnp.float32, 32, 64, 64, max_candidates=4
+    )
+    assert got == _expected_winner(cands)
+
+
+def test_cli_config_shapes_listing(clean_table, fake_measure, tmp_path, capsys):
+    rc = autotune.main([
+        "--backend", "pallas_dip", "--config", "llama3_8b", "--reduced",
+        "--tokens", "32", "--iters", "1", "--max-candidates", "2",
+        "--cache-path", str(tmp_path / "cfg.json"),
+    ])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "distinct projections" in out and "lm_head" in out
+
+
+# --------------------------------------------------------- config shapes ----
+def test_matmul_shapes_match_param_template_dip_metadata():
+    """Every DipWeight the model materializes must be covered by the shape
+    extractor the autotuner uses (else --autotune tunes the wrong problems)."""
+    from repro.models.transformer import param_template
+
+    for name in ("llama3_8b", "deepseek_v2_lite_16b", "mamba2_370m", "zamba2_2_7b"):
+        cfg = dataclasses.replace(
+            get_config(name).reduced(), matmul_backend="pallas_dip"
+        )
+        covered = {(s.k, s.n) for s in matmul_shapes(cfg, tokens=32)}
+
+        def walk(node):
+            if isinstance(node, dict):
+                for v in node.values():
+                    walk(v)
+                return
+            if len(node) == 4 and node[3] is not None:  # (shape, dtype, fan, dip)
+                d_in, d_out, _ = node[3]
+                assert (d_in, d_out) in covered, (name, d_in, d_out)
+
+        walk(param_template(cfg))
+
+
+def test_matmul_shapes_dedupes_and_validates_tokens():
+    cfg = get_config("llama3_8b").reduced()
+    shapes = matmul_shapes(cfg, tokens=64)
+    assert len({(s.m, s.k, s.n) for s in shapes}) == len(shapes)
+    assert all(s.m == 64 for s in shapes)
+    with pytest.raises(ValueError, match="tokens"):
+        matmul_shapes(cfg, tokens=0)
+
+
+def test_autotune_for_config_skips_non_tiled_backend(capsys):
+    cfg = get_config("llama3_8b").reduced()  # matmul_backend defaults to xla
+    assert autotune.autotune_for_config(cfg) == []
+    assert "not tiled" in capsys.readouterr().out

@@ -1,0 +1,35 @@
+"""Docs cannot silently rot: the fenced-Python checker (also run as the CI
+docs job) must pass, and the docs the README/ISSUE promise must exist."""
+
+import pathlib
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def test_required_docs_exist():
+    for rel in ("README.md", "docs/api.md", "docs/tuning.md", "docs/architecture.md"):
+        assert (ROOT / rel).exists(), rel
+
+
+def test_every_python_block_parses():
+    sys.path.insert(0, str(ROOT / "tools"))
+    try:
+        import check_docs
+    finally:
+        sys.path.pop(0)
+    paths = check_docs.default_paths(ROOT)
+    assert len(paths) >= 4
+    assert check_docs.check(paths) == []
+
+
+def test_checker_flags_broken_block(tmp_path):
+    bad = tmp_path / "bad.md"
+    bad.write_text("# t\n```python\ndef oops(:\n```\n")
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "check_docs.py"), str(bad)],
+        capture_output=True, text=True,
+    )
+    assert proc.returncode == 1
+    assert "bad.md" in proc.stderr

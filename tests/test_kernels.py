@@ -5,8 +5,9 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from repro import api
 from repro.core import permute
-from repro.kernels import ops, ref
+from repro.kernels import ref
 from repro.kernels.dip_matmul import dip_matmul_pallas
 from repro.kernels.ws_matmul import ws_matmul_pallas
 
@@ -41,8 +42,8 @@ def _tol(dtype):
 def test_dip_matmul_fast_path(shape, dtype):
     m, k, n = shape
     x, w = _mats(m, k, n, dtype)
-    p = ops.to_dip_format(jnp.asarray(w))
-    got = ops.dip_matmul(jnp.asarray(x), p, out_features=n)
+    dw = api.DipWeight.from_natural(jnp.asarray(w))
+    got = api.matmul(jnp.asarray(x), dw, backend="pallas_dip")
     want = ref.ws_matmul_ref(jnp.asarray(x), jnp.asarray(w))
     np.testing.assert_allclose(
         np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
@@ -54,10 +55,10 @@ def test_dip_matmul_fast_path(shape, dtype):
 def test_dip_systolic_wavefront_path(shape, dtype):
     m, k, n = shape
     x, w = _mats(m, k, n, dtype)
-    p = ops.to_dip_format(jnp.asarray(w))
-    got = ops.dip_matmul_systolic(jnp.asarray(x), p, out_features=n)
+    dw = api.DipWeight.from_natural(jnp.asarray(w))
+    got = api.matmul(jnp.asarray(x), dw, backend="pallas_systolic")
     want = ref.dip_systolic_ref(
-        jnp.asarray(np.pad(x, [(0, 0), (0, (-k) % 64)])), p
+        jnp.asarray(np.pad(x, [(0, 0), (0, (-k) % 64)])), dw.data
     )[..., :n]
     np.testing.assert_allclose(
         np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
@@ -68,7 +69,7 @@ def test_dip_systolic_wavefront_path(shape, dtype):
 def test_ws_baseline_kernel(shape):
     m, k, n = shape
     x, w = _mats(m, k, n, "float32")
-    got = ops.ws_matmul(jnp.asarray(x), jnp.asarray(w))
+    got = api.matmul(jnp.asarray(x), jnp.asarray(w), backend="ws")
     np.testing.assert_allclose(np.asarray(got), x @ w, atol=1e-3, rtol=1e-3)
 
 
@@ -76,8 +77,8 @@ def test_batched_inputs():
     r = np.random.default_rng(1)
     x = r.normal(size=(3, 5, 256)).astype(np.float32)
     w = r.normal(size=(256, 192)).astype(np.float32)
-    p = ops.to_dip_format(jnp.asarray(w))
-    got = ops.dip_matmul(jnp.asarray(x), p, out_features=192)
+    dw = api.DipWeight.from_natural(jnp.asarray(w))
+    got = api.matmul(jnp.asarray(x), dw, backend="pallas_dip")
     np.testing.assert_allclose(np.asarray(got), x @ w, atol=1e-3, rtol=1e-3)
 
 
@@ -85,7 +86,7 @@ def test_block_shape_sweep():
     """Kernel must be correct for every legal BlockSpec tiling."""
     m, k, n = 256, 256, 256
     x, w = _mats(m, k, n, "float32")
-    p = ops.to_dip_format(jnp.asarray(w))
+    p = api.DipWeight.from_natural(jnp.asarray(w)).data
     want = x @ w
     for bm in (64, 128, 256):
         for bk in (64, 128, 256):
@@ -114,7 +115,7 @@ def test_deshear_ablation_matches_ws_kernel():
 def test_dip_format_storage_is_permutated():
     """The storage tensor really is the paper's permutation (per 64-tile)."""
     w = np.random.default_rng(2).normal(size=(128, 128)).astype(np.float32)
-    p = np.asarray(ops.to_dip_format(jnp.asarray(w)))
+    p = np.asarray(api.DipWeight.from_natural(jnp.asarray(w)).data)
     for bi in range(2):
         for bj in range(2):
             blk = w[bi * 64:(bi + 1) * 64, bj * 64:(bj + 1) * 64]
@@ -129,8 +130,8 @@ def test_int8_paper_precision_exactness():
     r = np.random.default_rng(3)
     x = r.integers(-128, 128, (64, 192)).astype(np.int8)
     w = r.integers(-128, 128, (192, 64)).astype(np.int8)
-    p = ops.to_dip_format(jnp.asarray(w))
-    got = np.asarray(ops.dip_matmul(jnp.asarray(x), p, out_features=64))
+    dw = api.DipWeight.from_natural(jnp.asarray(w))
+    got = np.asarray(api.matmul(jnp.asarray(x), dw, backend="pallas_dip"))
     want = x.astype(np.int32) @ w.astype(np.int32)
     np.testing.assert_array_equal(got, want)
     assert got.dtype == np.int32

@@ -1,0 +1,69 @@
+"""Docs rot-check: every ```python fenced block in the Markdown docs must at
+least parse.
+
+    python tools/check_docs.py [paths...]
+
+Defaults to README.md + docs/*.md.  Blocks are compile()d, not executed —
+snippets may reference variables established in surrounding prose, but they
+cannot silently drift into syntax that no longer exists.  Exit code 1 lists
+every offending file/line.  Run by the CI docs job and tests/test_docs.py.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+from typing import Iterator, List, Tuple
+
+_FENCE = re.compile(r"^```(\w*)\s*$")
+
+
+def python_blocks(text: str) -> Iterator[Tuple[int, str]]:
+    """Yield (start_line, source) for each ```python fenced block."""
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        m = _FENCE.match(lines[i])
+        if m and m.group(1) in ("python", "py"):
+            start = i + 2  # 1-based line of the block's first source line
+            body: List[str] = []
+            i += 1
+            while i < len(lines) and not lines[i].startswith("```"):
+                body.append(lines[i])
+                i += 1
+            yield start, "\n".join(body)
+        i += 1
+
+
+def default_paths(root: pathlib.Path) -> List[pathlib.Path]:
+    paths = [root / "README.md"]
+    paths += sorted((root / "docs").glob("*.md"))
+    return [p for p in paths if p.exists()]
+
+
+def check(paths: List[pathlib.Path]) -> List[str]:
+    errors = []
+    total = 0
+    for path in paths:
+        for line, src in python_blocks(path.read_text()):
+            total += 1
+            try:
+                compile(src, f"{path}:{line}", "exec")
+            except SyntaxError as exc:
+                errors.append(f"{path}:{line}: {exc.msg} (block line {exc.lineno})")
+    print(f"[check_docs] {total} python block(s) across {len(paths)} file(s)")
+    return errors
+
+
+def main(argv: List[str]) -> int:
+    root = pathlib.Path(__file__).resolve().parent.parent
+    paths = [pathlib.Path(a) for a in argv] or default_paths(root)
+    errors = check(paths)
+    for err in errors:
+        print(f"[check_docs] FAIL {err}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
