@@ -80,7 +80,45 @@ def run(csv_rows):
           f"{t_inc:9.1f} us -> best {tuple(res.best.blocks)} {t_best:9.1f} us "
           f"({speedup:.2f}x; {len(res.measurements)} candidates)")
 
+    # quantized-vs-float deltas (the dip_int8w / dip_fp8 backends).  On this
+    # CPU host the meaningful comparison is the XLA-path analog: a quantized
+    # weight served through the natural-layout backend (dequant + dot) vs the
+    # plain bf16 dot — storage shrinks 4x (int8) / 2x (fp8) while the dequant
+    # epilogue rides the same amortization as the de-shear.  The Pallas
+    # quantized kernel itself is timed at interpret scale like the float one.
+    from repro.api import quant
+
+    xb = x.astype(jnp.bfloat16)
+    wb = w.astype(jnp.bfloat16)
+    plain_bf16 = jax.jit(lambda a, b: a @ b)
+    t_bf16 = _time(plain_bf16, xb, wb)
+    for scheme in ("int8", "fp8_e4m3"):
+        qw = quant.quantize(w, scheme)
+        deq = jax.jit(lambda a, d: api.matmul(a, d, backend="xla"))
+        t_q = _time(deq, xb, qw)
+        delta = (t_q - t_bf16) / t_bf16 * 100
+        bytes_ratio = jnp.dtype(qw.dtype).itemsize / 2.0  # vs bf16 storage
+        print(f"XLA matmul from {scheme} storage (+dequant):  {t_q:9.1f} us "
+              f"({delta:+.1f}% vs bf16 dot; {bytes_ratio:.1f}x weight bytes)")
+        err = np.abs(
+            np.asarray(deq(xb, qw), np.float32)
+            - np.asarray(plain_bf16(xb, wb), np.float32)
+        ).max() / np.abs(np.asarray(plain_bf16(xb, wb), np.float32)).max()
+        print(f"  max rel deviation vs bf16: {err:.4f} "
+              f"(documented bound: docs/quantization.md)")
+        assert err < 0.05, f"{scheme} deviation {err} beyond documented bound"
+        csv_rows.append((f"kern_xla_{scheme}_storage", t_q,
+                         f"delta_vs_bf16_{delta:+.1f}%"))
+
+    t_q_pallas = _time(
+        lambda a, d: api.matmul(a, d, backend="dip_int8w", interpret=True),
+        tiny_x, quant.quantize(w[:256, :256], "int8"), iters=3,
+    )
+    print(f"Pallas dip_int8w 64x256x256 (interpret):  {t_q_pallas:9.1f} us "
+          f"(Python emulation; vs float pallas_dip {t_pallas:9.1f} us)")
+
     csv_rows.append(("kern_xla_plain_matmul", t_plain, f"{2*m*k*n/ (t_plain*1e-6) /1e9:.1f}GFLOP/s"))
     csv_rows.append(("kern_xla_dip_storage", t_dip_xla, f"overhead_{overhead:+.1f}%"))
     csv_rows.append(("kern_pallas_interpret", t_pallas, "interpret_mode"))
+    csv_rows.append(("kern_pallas_int8w_interpret", t_q_pallas, "interpret_mode"))
     csv_rows.append(("kern_autotune_best", t_best, f"tuned_vs_incumbent_{speedup:.2f}x"))

@@ -5,10 +5,16 @@ Two first-class concepts (see ``docs/api.md``):
 * :class:`DipWeight` — the paper's permutated weight layout as a registered
   pytree (storage + logical-shape metadata), consumed by checkpointing,
   sharding, autodiff, and kernel dispatch.
+* :class:`QuantizedDipWeight` — the same layout at reduced precision
+  (int8 / fp8 permutated storage + per-output-channel scales); built by
+  ``api.quant.quantize`` and consumed natively by the ``dip_int8w`` /
+  ``dip_fp8`` backends (see ``docs/quantization.md``).
 * the matmul-backend registry — ``matmul(x, w, backend=...)`` dispatches to
   named, pluggable implementations (``xla`` / ``ws`` / ``pallas_dip`` /
-  ``pallas_systolic``) with block sizes drawn from a per-shape/dtype tuning
-  table.
+  ``pallas_systolic`` / ``dip_int8w`` / ``dip_fp8``) with block sizes drawn
+  from a per-shape/dtype tuning table; dispatch is weight-type aware, so a
+  quantized weight routes to its scheme's kernel with zero call-site
+  changes.
 
 The tuning table is self-optimizing: ``repro.api.autotune`` (a module-level
 CLI, not imported here to keep this package light) measures candidate block
@@ -33,6 +39,8 @@ from repro.api.tuning import (
     register_measured,
     register_tuning,
 )
+from repro.api import quant
+from repro.api.quant import QuantizedDipWeight
 from repro.api.weights import PERM_TILE, DipWeight, as_dip_weight
 
 __all__ = [
@@ -40,6 +48,8 @@ __all__ = [
     "DEFAULT_BACKEND",
     "DipWeight",
     "as_dip_weight",
+    "quant",
+    "QuantizedDipWeight",
     "MatmulBackend",
     "register_backend",
     "get_backend",

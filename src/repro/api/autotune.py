@@ -178,9 +178,21 @@ def candidate_blocks(
 
 
 def _operands(backend: str, dtype, m: int, k: int, n: int, seed: int = 0):
-    """Random activation + weight pair in the layout the backend consumes."""
+    """Random activation + weight pair in the layout the backend consumes.
+
+    For quantized (dip_q) backends ``dtype`` is the *activation* dtype — the
+    weight is quantized to the backend's declared scheme, exactly as a
+    serving call site would hold it.
+    """
     r = np.random.default_rng(seed)
     dtype = jnp.dtype(dtype)
+    be = registry.get_backend(backend)
+    if be.layout == "dip_q":
+        from repro.api import quant
+
+        x = jnp.asarray(r.normal(0, 1, (m, k)).astype(np.float32)).astype(dtype)
+        w = jnp.asarray(r.normal(0, 1, (k, n)).astype(np.float32))
+        return x, quant.quantize(w, be.scheme)
     if dtype == jnp.dtype(jnp.int8):
         x = r.integers(-128, 128, (m, k)).astype(np.int8)
         w = r.integers(-128, 128, (k, n)).astype(np.int8)
@@ -188,7 +200,7 @@ def _operands(backend: str, dtype, m: int, k: int, n: int, seed: int = 0):
         x = r.normal(0, 1, (m, k)).astype(dtype)
         w = r.normal(0, 1, (k, n)).astype(dtype)
     x, w = jnp.asarray(x), jnp.asarray(w)
-    if registry.backend_layout(backend) == "dip":
+    if be.layout == "dip":
         return x, DipWeight.from_natural(w)
     return x, w
 
@@ -246,8 +258,8 @@ def autotune_shape(
         )
     dtype_name = jnp.dtype(dtype).name
     lm, lk, ln = m, k, n
-    if be.layout == "dip":
-        # dispatch looks blocks up with the PADDED storage dims (the DipWeight
+    if be.layout in ("dip", "dip_q"):
+        # dispatch looks blocks up with the PADDED storage dims (the weight
         # carries K/N zero-padded to the perm-tile grid), so the entry must be
         # keyed — and candidates generated — in that domain or it never hits
         lk, ln = DipWeight.storage_dims(k, n)

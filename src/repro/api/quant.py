@@ -1,0 +1,270 @@
+"""`QuantizedDipWeight` — reduced-precision permutated weight storage.
+
+ADiP (arXiv:2510.10623) shows the diagonal-input/permutated-weight dataflow
+pays off most when the PE array runs at reduced precision; MatrixFlow
+(arXiv:2503.05290) leans on the same low-precision GEMM for transformer
+serving.  This module makes that a first-class weight type on top of
+:class:`~repro.api.weights.DipWeight`:
+
+    storage   ``data``    (..., Kp, Np) *quantized* permutated storage
+                          (int8 or fp8), zero-padded to the perm-tile grid
+              ``scale``   (..., 1, Np) float32 per-output-channel dequant
+                          scales (padding columns carry 1.0)
+    metadata  ``d_in`` / ``d_out`` / ``perm_tile``  — as in ``DipWeight``
+              ``scheme``  quantization scheme name (``int8`` / ``fp8_e4m3``)
+
+The per-output-channel scale layout survives the DiP permutation for free:
+the permutation rotates rows *within* a column (per 64-wide tile), so every
+storage column holds exactly the elements of the corresponding logical
+output channel and one scale per column dequantizes permutated and natural
+layout alike.
+
+Consumed by the ``dip_int8w`` / ``dip_fp8`` matmul backends (see
+``kernels/dip_matmul_q.py``); any other registered backend accepts a
+``QuantizedDipWeight`` too — ``api.matmul`` dequantizes it to the backend's
+declared layout (the GSPMD/XLA serving path for quantized checkpoints).
+See ``docs/quantization.md``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.weights import PERM_TILE, DipWeight
+from repro.core import permute
+
+__all__ = [
+    "QuantScheme",
+    "SCHEMES",
+    "scheme_info",
+    "QuantizedDipWeight",
+    "quantize",
+    "dequantize",
+    "dequantize_natural",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantScheme:
+    """One supported weight-quantization scheme."""
+
+    name: str
+    storage_dtype: Any          # jnp dtype of the quantized storage
+    qmax: float                 # |q| ceiling the scale maps amax onto
+    backend: str                # default matmul backend for this scheme
+
+    @property
+    def is_integer(self) -> bool:
+        return jnp.issubdtype(jnp.dtype(self.storage_dtype), jnp.integer)
+
+
+SCHEMES: Dict[str, QuantScheme] = {
+    # symmetric int8: scale = amax/127, q = clip(round(w/scale)); the paper's
+    # own PE datatype (DiP Table 3 evaluates an INT8 array)
+    "int8": QuantScheme("int8", jnp.int8, 127.0, "dip_int8w"),
+    # fp8 e4m3: scale maps amax onto the format's max normal (448); rounding
+    # is the dtype cast itself
+    "fp8_e4m3": QuantScheme("fp8_e4m3", jnp.float8_e4m3fn, 448.0, "dip_fp8"),
+}
+
+# guard against degenerate all-zero channels (their scale would be 0)
+_AMAX_FLOOR = 1e-8
+
+
+def scheme_info(scheme: str) -> QuantScheme:
+    try:
+        return SCHEMES[scheme]
+    except KeyError:
+        raise ValueError(
+            f"unknown quantization scheme {scheme!r}; supported: {sorted(SCHEMES)}"
+        ) from None
+
+
+@jax.tree_util.register_pytree_with_keys_class
+class QuantizedDipWeight:
+    """Quantized permutated storage + per-output-channel scales (module doc).
+
+    Like ``DipWeight``, payloads are unvalidated: pytree transforms route
+    tracers, ``ShapeDtypeStruct``s, and shardings through the same container.
+    """
+
+    __slots__ = ("data", "scale", "d_in", "d_out", "perm_tile", "scheme")
+
+    def __init__(
+        self,
+        data: Any,
+        scale: Any,
+        d_in: int,
+        d_out: int,
+        perm_tile: int = PERM_TILE,
+        scheme: str = "int8",
+    ):
+        self.data = data
+        self.scale = scale
+        self.d_in = int(d_in)
+        self.d_out = int(d_out)
+        self.perm_tile = int(perm_tile)
+        self.scheme = str(scheme)
+
+    # ------------------------------------------------------------- pytree --
+    def tree_flatten_with_keys(self):
+        return (
+            (
+                (jax.tree_util.GetAttrKey("data"), self.data),
+                (jax.tree_util.GetAttrKey("scale"), self.scale),
+            ),
+            (self.d_in, self.d_out, self.perm_tile, self.scheme),
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], *aux)
+
+    # ------------------------------------------------------------ queries --
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    @property
+    def storage_shape(self) -> Tuple[int, ...]:
+        return tuple(self.data.shape)
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        """Logical shape: leading batch dims + (d_in, d_out)."""
+        return tuple(self.data.shape[:-2]) + (self.d_in, self.d_out)
+
+    @property
+    def ndim(self) -> int:
+        return self.data.ndim
+
+    @property
+    def scheme_info(self) -> QuantScheme:
+        return scheme_info(self.scheme)
+
+    @property
+    def default_backend(self) -> str:
+        """The registered backend that consumes this scheme natively."""
+        return self.scheme_info.backend
+
+    # -------------------------------------------------------- conversions --
+    def dequantize(self, dtype=jnp.float32) -> DipWeight:
+        """Scales applied in the *permutated* domain (column scales commute
+        with the per-column row rotation) — returns a float ``DipWeight``."""
+        wd = (self.data.astype(jnp.float32) * self.scale).astype(dtype)
+        return DipWeight(wd, self.d_in, self.d_out, self.perm_tile)
+
+    def to_natural(self, dtype=jnp.float32) -> jax.Array:
+        """Dequantized natural-layout weight (inverse permutation + crop)."""
+        return self.dequantize(dtype).to_natural()
+
+    def with_data(self, data: Any, scale: Any) -> "QuantizedDipWeight":
+        """Same metadata, different payloads (shardings, specs)."""
+        return QuantizedDipWeight(
+            data, scale, self.d_in, self.d_out, self.perm_tile, self.scheme
+        )
+
+    def __repr__(self) -> str:
+        data = self.data
+        desc = (
+            f"{getattr(data, 'shape', None)}:{getattr(data, 'dtype', type(data).__name__)}"
+        )
+        return (
+            f"QuantizedDipWeight({desc}, scheme={self.scheme!r}, "
+            f"d_in={self.d_in}, d_out={self.d_out}, perm_tile={self.perm_tile})"
+        )
+
+
+# ---------------------------------------------------------------------------
+# quantization / dequantization
+def _pad_cols(a: jax.Array, width: int, value: float) -> jax.Array:
+    pad = width - a.shape[-1]
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * (a.ndim - 1) + [(0, pad)]
+    return jnp.pad(a, widths, constant_values=value)
+
+
+def quantize(
+    w: Union[jax.Array, DipWeight, "QuantizedDipWeight"],
+    scheme: str = "int8",
+    *,
+    perm_tile: int = PERM_TILE,
+) -> QuantizedDipWeight:
+    """Quantize a weight to permutated reduced-precision storage.
+
+    ``w``: a natural (..., d_in, d_out) float array or a ``DipWeight``
+    (dequantized to natural layout first — the permutation is exactly
+    invertible, so no precision is lost re-deriving it).  An already-matching
+    ``QuantizedDipWeight`` passes through; re-quantizing to a *different*
+    scheme raises (stacking two rounding steps silently degrades accuracy —
+    requantize from the float checkpoint instead).
+    """
+    info = scheme_info(scheme)
+    if isinstance(w, QuantizedDipWeight):
+        if w.scheme == scheme:
+            return w
+        raise ValueError(
+            f"weight is already quantized as {w.scheme!r}; requantizing to "
+            f"{scheme!r} would stack two rounding errors — dequantize from "
+            "the float checkpoint instead"
+        )
+    if isinstance(w, DipWeight):
+        perm_tile = w.perm_tile
+        wn = w.to_natural()
+    else:
+        wn = w
+    if not jnp.issubdtype(wn.dtype, jnp.floating):
+        raise TypeError(
+            f"quantize expects a floating-point weight, got {wn.dtype}"
+        )
+    d_in, d_out = int(wn.shape[-2]), int(wn.shape[-1])
+
+    w32 = wn.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(w32), axis=-2, keepdims=True)          # (..., 1, d_out)
+    scale = jnp.maximum(amax, _AMAX_FLOOR) / info.qmax
+    if info.is_integer:
+        q_nat = jnp.clip(
+            jnp.round(w32 / scale), -info.qmax, info.qmax
+        ).astype(info.storage_dtype)
+    else:
+        q_nat = (w32 / scale).astype(info.storage_dtype)
+
+    storage = permute.permute_tiled(q_nat, perm_tile)              # padded grid
+    np_cols = storage.shape[-1]
+    scale_p = _pad_cols(scale, np_cols, 1.0)                       # (..., 1, Np)
+    return QuantizedDipWeight(storage, scale_p, d_in, d_out, perm_tile, scheme)
+
+
+def dequantize(qw: QuantizedDipWeight, dtype=jnp.float32) -> DipWeight:
+    """Float ``DipWeight`` with the scales folded back in."""
+    if not isinstance(qw, QuantizedDipWeight):
+        raise TypeError(f"dequantize expects a QuantizedDipWeight, got {type(qw)}")
+    return qw.dequantize(dtype)
+
+
+def dequantize_natural(
+    qw: QuantizedDipWeight, dtype=jnp.float32
+) -> jax.Array:
+    """Dequantized natural-layout (d_in, d_out) weight."""
+    return dequantize(qw, dtype).to_natural()
+
+
+def max_abs_error_bound(qw: QuantizedDipWeight) -> jax.Array:
+    """Per-output-channel worst-case elementwise quantization error.
+
+    For the symmetric integer scheme the round-to-nearest error is at most
+    half a quantization step (``scale / 2``); for fp8 it is half a ulp at the
+    channel amax (``amax * 2**-mantissa_bits``, amax = scale * qmax).  Used
+    by the conformance suite to assert the documented accuracy expectation.
+    """
+    info = qw.scheme_info
+    scale = qw.scale[..., 0, : qw.d_out]
+    if info.is_integer:
+        return 0.5 * scale
+    m_bits = jnp.finfo(jnp.dtype(info.storage_dtype)).nmant
+    return scale * info.qmax * (2.0 ** -float(m_bits))

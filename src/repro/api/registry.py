@@ -11,6 +11,10 @@ they consume:
     layout="dip"       DiP-permutated storage; a natural array argument is
                        permutated on the fly (one-off convenience — models
                        hoist this through ``DipWeight`` at parameter init)
+    layout="dip_q"     quantized DiP-permutated storage + per-output-channel
+                       scales (``QuantizedDipWeight``); a float weight
+                       argument is quantized on the fly with the backend's
+                       declared scheme
 
 Built-in backends:
 
@@ -21,6 +25,16 @@ Built-in backends:
                      path)
     pallas_systolic  wavefront-emulation Pallas kernel (dataflow-faithful
                      validation path)
+    dip_int8w        W8A8-dynamic int8 kernel (int32 accumulation, fused
+                     scale-on-output — ADiP-style mixed precision)
+    dip_fp8          fp8-e4m3-weight kernel (device-gated compute width,
+                     emulated fallback)
+
+Dispatch is weight-type aware with zero call-site changes: a
+``QuantizedDipWeight`` with ``backend=None`` routes to its scheme's default
+quantized backend, and any *other* backend given a quantized weight
+dequantizes it to the layout it consumes (the GSPMD/XLA path for serving
+quantized checkpoints through plain dots).
 
 Tiled backends share one padding/batching shim and a per-backend
 ``custom_vjp`` (Pallas kernels have no JVP rule; the backward runs plain XLA
@@ -36,10 +50,12 @@ import dataclasses
 import functools
 from typing import Callable, Dict, List, Optional, Union
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.api import tuning
+from repro.api import quant, tuning
+from repro.api.quant import QuantizedDipWeight
 from repro.api.weights import PERM_TILE, DipWeight, as_dip_weight
 from repro.core import permute
 
@@ -56,7 +72,7 @@ __all__ = [
 
 DEFAULT_BACKEND = "xla"
 
-_LAYOUTS = ("natural", "dip")
+_LAYOUTS = ("natural", "dip", "dip_q")
 
 
 def default_interpret() -> bool:
@@ -116,6 +132,44 @@ def _build_tiled_caller(fn: Callable, layout: str):
     return call
 
 
+def _build_quantized_caller(fn: Callable):
+    """custom_vjp wrapper for quantized (dip_q) kernels.
+
+    Forward runs the quantized kernel; backward differentiates through the
+    *dequantized* weight (straight-through w.r.t. the activations — the
+    standard inference-time treatment).  The quantized storage and its
+    scales are frozen artifacts of an offline calibration, so their
+    cotangents are zero: float0 for integer storage (JAX's tangent dtype for
+    ints), zeros of the storage dtype for fp8.
+    """
+
+    @functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+    def call(x2, q2, ws, opts):
+        block_m, block_n, block_k, perm_tile, interpret = opts
+        return fn(
+            x2, q2, ws, block_m=block_m, block_n=block_n, block_k=block_k,
+            perm_tile=perm_tile, interpret=interpret,
+        )
+
+    def fwd(x2, q2, ws, opts):
+        return call(x2, q2, ws, opts), (x2, q2, ws)
+
+    def bwd(opts, res, g):
+        perm_tile = opts[3]
+        x2, q2, ws = res
+        wn = permute.unpermute_tiled(q2, perm_tile).astype(jnp.float32) * ws
+        dx = jnp.matmul(g.astype(jnp.float32), wn.T).astype(x2.dtype)
+        dq = (
+            np.zeros(q2.shape, jax.dtypes.float0)
+            if jnp.issubdtype(q2.dtype, jnp.integer)
+            else jnp.zeros(q2.shape, q2.dtype)
+        )
+        return dx, dq, jnp.zeros(ws.shape, ws.dtype)
+
+    call.defvjp(fwd, bwd)
+    return call
+
+
 # --------------------------------------------------------------------------
 # registry
 @dataclasses.dataclass(frozen=True)
@@ -126,17 +180,25 @@ class MatmulBackend:
 
         fn(x2, w2, *, block_m, block_n, block_k, perm_tile, interpret) -> out2
 
-    with 2-D operands already padded to block multiples.  Non-tiled backends
-    (``tiled=False``, e.g. ``xla``) receive ``fn(x, w_natural)`` with the
-    original leading batch dims and must be natively differentiable.
+    with 2-D operands already padded to block multiples.  Quantized backends
+    (``layout="dip_q"``) take one extra positional operand::
+
+        fn(x2, q2, w_scale, *, block_m, block_n, block_k, perm_tile,
+           interpret) -> out2
+
+    with ``q2`` the quantized permutated storage and ``w_scale`` the (1, Np)
+    per-output-channel scales.  Non-tiled backends (``tiled=False``, e.g.
+    ``xla``) receive ``fn(x, w_natural)`` with the original leading batch
+    dims and must be natively differentiable.
     """
 
     name: str
-    layout: str                       # "natural" | "dip"
+    layout: str                       # "natural" | "dip" | "dip_q"
     fn: Callable
     tiled: bool = True
     description: str = ""
     caller: Optional[Callable] = None  # custom_vjp'd tiled invocation
+    scheme: Optional[str] = None       # quantization scheme (dip_q layouts)
 
 
 _REGISTRY: Dict[str, MatmulBackend] = {}
@@ -160,33 +222,47 @@ def register_backend(
     layout: str = "natural",
     tiled: bool = True,
     description: str = "",
+    scheme: Optional[str] = None,
     overwrite: bool = False,
 ):
     """Register a matmul backend (usable as a decorator).
 
     New kernels and precisions plug in here instead of growing another
-    ``elif`` ladder at every call site.
+    ``elif`` ladder at every call site.  Quantized backends declare
+    ``layout="dip_q"`` plus the ``scheme`` they consume (see
+    ``repro.api.quant.SCHEMES``).
     """
     if fn is None:
         return functools.partial(
             register_backend, name, layout=layout, tiled=tiled,
-            description=description, overwrite=overwrite,
+            description=description, scheme=scheme, overwrite=overwrite,
         )
     if layout not in _LAYOUTS:
         raise ValueError(f"layout must be one of {_LAYOUTS}, got {layout!r}")
-    if layout == "dip" and not tiled:
+    if layout in ("dip", "dip_q") and not tiled:
         raise ValueError(
-            "dip-layout backends must be tiled=True: the dispatcher drives "
-            "them through the shared padding/custom-VJP shim (see the "
+            f"{layout}-layout backends must be tiled=True: the dispatcher "
+            "drives them through the shared padding/custom-VJP shim (see the "
             "MatmulBackend.fn contract)"
+        )
+    if layout == "dip_q":
+        quant.scheme_info(scheme)  # raises on unknown/missing schemes
+    elif scheme is not None:
+        raise ValueError(
+            f"scheme={scheme!r} is only meaningful for dip_q-layout backends"
         )
     _ensure_builtins()
     if name in _REGISTRY and not overwrite:
         raise ValueError(f"backend {name!r} already registered (overwrite=True to replace)")
-    caller = _build_tiled_caller(fn, layout) if tiled else None
+    if not tiled:
+        caller = None
+    elif layout == "dip_q":
+        caller = _build_quantized_caller(fn)
+    else:
+        caller = _build_tiled_caller(fn, layout)
     _REGISTRY[name] = MatmulBackend(
         name=name, layout=layout, fn=fn, tiled=tiled,
-        description=description, caller=caller,
+        description=description, caller=caller, scheme=scheme,
     )
     return fn
 
@@ -239,9 +315,62 @@ def _tiled_dispatch(
     return out[:m, :out_cols].reshape(lead + (out_cols,))
 
 
+def _validated_dip_x(x: jax.Array, dw) -> jax.Array:
+    """Check x's contraction against the LOGICAL d_in and pad it to the
+    stored K padding.  Validating against d_in (not the padded storage)
+    matters: padding rows are zero, so accepting a wider or narrower x would
+    silently compute with dropped or zero-imputed features."""
+    storage = dw.data
+    if storage.ndim != 2:
+        raise ValueError(
+            f"matmul weight must be 2-D (got storage {storage.shape}); "
+            "index the stacked axis first"
+        )
+    xdim = x.shape[-1]
+    if xdim != dw.d_in:
+        raise ValueError(
+            f"x contraction {xdim} does not match {type(dw).__name__} "
+            f"d_in={dw.d_in} (storage {storage.shape})"
+        )
+    xk = _pad_dim(x, -1, dw.perm_tile)  # match the stored padding of K
+    if xk.shape[-1] != storage.shape[-2]:
+        raise ValueError(
+            f"x contraction {xdim} does not match dip storage "
+            f"{storage.shape} (d_in={dw.d_in})"
+        )
+    return xk
+
+
+def _quantized_dispatch(
+    be: MatmulBackend,
+    x: jax.Array,
+    qw: QuantizedDipWeight,
+    block_m: Optional[int],
+    block_n: Optional[int],
+    block_k: Optional[int],
+    interpret: Optional[bool],
+) -> jax.Array:
+    if interpret is None:
+        interpret = default_interpret()
+    x2, lead = _flatten_batch(x)
+    q2, ws = qw.data, qw.scale
+    m, k, n = x2.shape[0], q2.shape[-2], q2.shape[-1]
+    # keyed on the ACTIVATION dtype: that is what varies per call site; the
+    # storage dtype is fixed by the backend's scheme
+    blocks = tuning.lookup_blocks(be.name, m, k, n, x2.dtype, perm_tile=qw.perm_tile)
+    bm = block_m or blocks.block_m
+    bn = block_n or blocks.block_n
+    bk = block_k or blocks.block_k
+    x2 = _pad_dim(_pad_dim(x2, 0, bm), 1, bk)
+    q2 = _pad_dim(_pad_dim(q2, 0, bk), 1, bn)
+    ws = _pad_dim(ws, 1, bn)  # padded columns are zero storage; scale value moot
+    out = be.caller(x2, q2, ws, (bm, bn, bk, qw.perm_tile, interpret))
+    return out[:m, : qw.d_out].reshape(lead + (qw.d_out,))
+
+
 def matmul(
     x: jax.Array,
-    w: Union[jax.Array, DipWeight],
+    w: Union[jax.Array, DipWeight, QuantizedDipWeight],
     *,
     backend: Optional[str] = None,
     block_m: Optional[int] = None,
@@ -251,39 +380,49 @@ def matmul(
 ) -> jax.Array:
     """``x @ w`` through a registered backend.
 
-    ``x``: (..., d_in); ``w``: natural (d_in, d_out) array or ``DipWeight``.
-    Returns (..., d_out).  The weight is adapted to the backend's declared
-    layout; block sizes default to the tuning table; ``interpret`` defaults
-    to compiled-on-TPU / interpreted-elsewhere.
+    ``x``: (..., d_in); ``w``: natural (d_in, d_out) array, ``DipWeight``,
+    or ``QuantizedDipWeight``.  Returns (..., d_out).  The weight is adapted
+    to the backend's declared layout (a ``QuantizedDipWeight`` with no
+    explicit backend dispatches to its scheme's quantized kernel; other
+    backends receive it dequantized); block sizes default to the tuning
+    table; ``interpret`` defaults to compiled-on-TPU / interpreted-elsewhere.
     """
+    if backend is None and isinstance(w, QuantizedDipWeight):
+        backend = w.default_backend
     be = get_backend(backend)
+
+    if be.layout == "dip_q":
+        if isinstance(w, QuantizedDipWeight):
+            if w.scheme != be.scheme:
+                raise ValueError(
+                    f"backend {be.name!r} consumes scheme {be.scheme!r} but "
+                    f"the weight is quantized as {w.scheme!r} — requantize "
+                    "from the float weight (api.quant.quantize)"
+                )
+            qw = w
+        else:
+            # one-off convenience, mirroring the dip-layout path: models
+            # hoist this through quantize() at parameter init instead
+            qw = quant.quantize(w, be.scheme)
+        xk = _validated_dip_x(x, qw)
+        return _quantized_dispatch(be, xk, qw, block_m, block_n, block_k, interpret)
+
+    if isinstance(w, QuantizedDipWeight):
+        # non-quantized backend: fold the scales back in once and take the
+        # backend's normal path (the GSPMD/XLA route for quantized weights).
+        # Dequantize AT the activation dtype — an unconditional f32 weight
+        # would silently promote every output (and the residual stream
+        # behind it) to f32.
+        deq_dtype = (
+            x.dtype if jnp.issubdtype(x.dtype, jnp.floating) else jnp.float32
+        )
+        w = quant.dequantize(w, deq_dtype)
 
     if be.layout == "dip":
         dw = as_dip_weight(w)
-        storage = dw.data
-        if storage.ndim != 2:
-            raise ValueError(
-                f"matmul weight must be 2-D (got storage {storage.shape}); "
-                "index the stacked axis first"
-            )
-        kp = storage.shape[-2]
-        xdim = x.shape[-1]
-        # validate against the LOGICAL d_in (not the padded storage): padding
-        # rows are zero, so accepting a wider or narrower x would silently
-        # compute with dropped or zero-imputed features.
-        if xdim != dw.d_in:
-            raise ValueError(
-                f"x contraction {xdim} does not match DipWeight d_in={dw.d_in} "
-                f"(storage {storage.shape})"
-            )
-        xk = _pad_dim(x, -1, dw.perm_tile)  # match the stored padding of K
-        if xk.shape[-1] != kp:
-            raise ValueError(
-                f"x contraction {xdim} does not match dip storage "
-                f"{storage.shape} (d_in={dw.d_in})"
-            )
+        xk = _validated_dip_x(x, dw)
         return _tiled_dispatch(
-            be, xk, storage, dw.d_out, dw.perm_tile,
+            be, xk, dw.data, dw.d_out, dw.perm_tile,
             block_m, block_n, block_k, interpret,
         )
 
@@ -303,6 +442,7 @@ def matmul(
 # built-in backends
 def _register_builtins() -> None:
     from repro.kernels.dip_matmul import dip_matmul_pallas
+    from repro.kernels.dip_matmul_q import dip_matmul_q_pallas
     from repro.kernels.dip_systolic import dip_systolic_pallas
     from repro.kernels.ws_matmul import ws_matmul_pallas
 
@@ -332,6 +472,12 @@ def _register_builtins() -> None:
             x2, p2, block_m=block_m, array_n=perm_tile, interpret=interpret
         )
 
+    def quant_fn(x2, q2, ws, *, block_m, block_n, block_k, perm_tile, interpret):
+        return dip_matmul_q_pallas(
+            x2, q2, ws, block_m=block_m, block_n=block_n, block_k=block_k,
+            perm_tile=perm_tile, interpret=interpret,
+        )
+
     register_backend(
         "xla", xla_fn, layout="natural", tiled=False,
         description="XLA/GSPMD dot (default; de-shears DipWeight as a gather)",
@@ -347,4 +493,15 @@ def _register_builtins() -> None:
     register_backend(
         "pallas_systolic", systolic_fn, layout="dip",
         description="wavefront-emulation Pallas kernel (validation path)",
+    )
+    register_backend(
+        "dip_int8w", quant_fn, layout="dip_q", scheme="int8",
+        description="W8A8-dynamic int8 kernel: per-row int8 acts x "
+                    "per-column int8 weights, int32 accumulation, fused "
+                    "scale-on-output (ADiP-style mixed precision)",
+    )
+    register_backend(
+        "dip_fp8", quant_fn, layout="dip_q", scheme="fp8_e4m3",
+        description="fp8-e4m3-weight kernel: device-gated compute width "
+                    "with emulated (f32) fallback, fused scale-on-output",
     )

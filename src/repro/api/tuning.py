@@ -314,3 +314,9 @@ register_tuning((256, 256, 512), dtype="bfloat16", source="builtin")
 register_tuning((256, 256, 512), dtype="int8", source="builtin")
 register_tuning((128, PERM_TILE, PERM_TILE), backend="pallas_systolic",
                 source="builtin")
+# quantized backends (keyed on the ACTIVATION dtype at dispatch): int8
+# weight blocks are 4x narrower than f32 at the same geometry, but the
+# accumulator stays int32/f32 at full (block_m x block_n) width — deepen K,
+# keep the output tile at the f32 default.
+register_tuning((256, 256, 512), backend="dip_int8w", source="builtin")
+register_tuning((256, 256, 512), backend="dip_fp8", source="builtin")

@@ -108,8 +108,22 @@ class DipWeight:
         return wn[..., : self.d_in, : self.d_out]
 
     def astype(self, dtype) -> "DipWeight":
-        if jnp.dtype(dtype) == jnp.dtype(self.data.dtype):
+        """Cast the permutated storage (a pure elementwise cast — the
+        permutation commutes with it, so no re-permutation is needed).
+
+        Float-to-float only: a bare cast to an integer target silently
+        truncates toward zero with no scales, which is never what a
+        quantization caller wants — they get pointed at the real thing.
+        """
+        dtype = jnp.dtype(dtype)
+        if dtype == jnp.dtype(self.data.dtype):
             return self
+        if not jnp.issubdtype(dtype, jnp.floating):
+            raise TypeError(
+                f"DipWeight.astype({dtype.name}) would truncate storage "
+                "without scales; use repro.api.quant.quantize(w, "
+                "scheme=...) to build a QuantizedDipWeight instead"
+            )
         return DipWeight(self.data.astype(dtype), self.d_in, self.d_out, self.perm_tile)
 
     def with_data(self, data: Any) -> "DipWeight":

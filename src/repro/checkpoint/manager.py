@@ -35,7 +35,7 @@ from typing import Any, Dict, List, Optional
 import jax
 import numpy as np
 
-from repro.api import DipWeight
+from repro.api import DipWeight, QuantizedDipWeight
 
 __all__ = ["CheckpointManager", "save_pytree", "restore_pytree"]
 
@@ -48,24 +48,50 @@ def _flatten_with_paths(tree):
 
 
 def _dip_index(tree) -> Dict[str, Dict]:
-    """path -> logical-shape metadata for every ``DipWeight`` node.
+    """path -> logical-shape metadata for every ``DipWeight`` /
+    ``QuantizedDipWeight`` node.
 
-    ``DipWeight`` is a pytree node, so its permutated storage serializes
-    through the ordinary leaf path (``.../wq/.data``); this records the
-    metadata alongside so manifests are self-describing and restore can
-    verify the logical shape survives (padding is part of the type, not a
-    convention the reader must re-derive).
+    Both are pytree nodes, so their storage (and, for quantized weights, the
+    per-output-channel scales) serializes through the ordinary leaf paths
+    (``.../wq/.data``, ``.../wq/.scale``); this records the metadata
+    alongside so manifests are self-describing and restore can verify the
+    logical shape — and the quantization scheme — survive (padding and
+    scheme are part of the type, not a convention the reader must
+    re-derive).
     """
     flat, _ = jax.tree_util.tree_flatten_with_path(
-        tree, is_leaf=lambda x: isinstance(x, DipWeight)
+        tree, is_leaf=lambda x: isinstance(x, (DipWeight, QuantizedDipWeight))
     )
     out: Dict[str, Dict] = {}
     for path, node in flat:
-        if isinstance(node, DipWeight):
+        if isinstance(node, QuantizedDipWeight):
+            out["/".join(str(k) for k in path)] = {
+                "d_in": node.d_in, "d_out": node.d_out,
+                "perm_tile": node.perm_tile, "scheme": node.scheme,
+            }
+        elif isinstance(node, DipWeight):
             out["/".join(str(k) for k in path)] = {
                 "d_in": node.d_in, "d_out": node.d_out, "perm_tile": node.perm_tile,
             }
     return out
+
+
+def _npy_safe(arr: np.ndarray) -> np.ndarray:
+    """``np.save`` round-trips only builtin numpy dtypes; ml_dtypes payloads
+    (bfloat16 params, fp8 quantized storage) silently degrade to raw void
+    records.  Write those as same-width unsigned views — the manifest keeps
+    the real dtype and :func:`restore_pytree` re-views on load."""
+    if arr.dtype.isbuiltin:
+        return arr
+    return arr.view(np.dtype(f"u{arr.dtype.itemsize}"))
+
+
+def _restore_dtype(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    if str(arr.dtype) == dtype_name:
+        return arr
+    import jax.numpy as jnp  # resolves ml_dtypes names (float8_*, bfloat16)
+
+    return arr.view(np.dtype(jnp.dtype(dtype_name)))
 
 
 def save_pytree(path: str, tree: Any, *, meta: Optional[Dict] = None) -> None:
@@ -77,7 +103,7 @@ def save_pytree(path: str, tree: Any, *, meta: Optional[Dict] = None) -> None:
     index: List[Dict] = []
     for i, (p, arr) in enumerate(zip(paths, host_leaves)):
         fname = f"leaf_{i:05d}.npy"
-        np.save(os.path.join(tmp, fname), arr)
+        np.save(os.path.join(tmp, fname), _npy_safe(arr))
         index.append({"path": p, "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)})
     manifest = {"leaves": index, "meta": meta or {}, "dip_weights": _dip_index(tree)}
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
@@ -114,6 +140,7 @@ def restore_pytree(path: str, like: Any, *, shardings: Any = None) -> Any:
     out = []
     for p, leaf, sh in zip(paths, leaves, shard_leaves):
         arr = np.load(os.path.join(path, by_path[p]["file"]))
+        arr = _restore_dtype(arr, by_path[p]["dtype"])
         if sh is not None:
             out.append(jax.device_put(arr, sh))
         else:

@@ -58,10 +58,14 @@ class ArchConfig:
     param_dtype: str = "float32"
     compute_dtype: str = "bfloat16"
     matmul_backend: str = "xla"      # registered repro.api backend name
-                                     # (xla | ws | pallas_dip | pallas_systolic | plugins)
+                                     # (xla | ws | pallas_dip | pallas_systolic
+                                     #  | dip_int8w | dip_fp8 | plugins)
     dip_weights: bool = False        # force DiP permutated weight storage even
                                      # for natural-layout backends (e.g. dip
                                      # checkpoints served through XLA/GSPMD)
+    quantization: str = "none"       # weight-quantization scheme for the DiP
+                                     # projections: none | int8 | fp8_e4m3
+                                     # (inference-only; see docs/quantization.md)
     remat: str = "block"             # none | block  (remat each scanned block)
     # notes for DESIGN.md §Arch-applicability
     notes: str = ""
@@ -79,15 +83,26 @@ class ArchConfig:
         return -(-self.vocab_size // mult) * mult
 
     @property
+    def quant_scheme(self) -> Optional[str]:
+        """Validated quantization scheme name, or None when unquantized."""
+        if self.quantization == "none":
+            return None
+        from repro.api import quant  # deferred: keep config import light
+
+        return quant.scheme_info(self.quantization).name
+
+    @property
     def uses_dip_storage(self) -> bool:
-        """Whether linear weights are held as ``api.DipWeight`` pytree nodes:
-        either forced (``dip_weights``) or required by the backend's declared
+        """Whether linear weights are held as permutated-storage pytree nodes
+        (``api.DipWeight`` / ``api.QuantizedDipWeight``): forced
+        (``dip_weights``), implied by quantization (quantized storage is
+        permutated by construction), or required by the backend's declared
         layout (the dip-consuming Pallas kernels)."""
-        if self.dip_weights:
+        if self.dip_weights or self.quantization != "none":
             return True
         from repro import api  # deferred: keep config import light
 
-        return api.backend_layout(self.matmul_backend) == "dip"
+        return api.backend_layout(self.matmul_backend) in ("dip", "dip_q")
 
     @property
     def is_moe(self) -> bool:

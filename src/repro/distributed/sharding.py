@@ -33,7 +33,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.api import DipWeight
+from repro.api import DipWeight, QuantizedDipWeight
 
 __all__ = ["ShardingPolicy", "make_policy"]
 
@@ -167,6 +167,12 @@ class ShardingPolicy:
         def walk(t, name=None):
             if isinstance(t, dict):
                 return {k: walk(v, k) for k, v in t.items()}
+            if isinstance(t, QuantizedDipWeight):
+                spec = self.param_pspec(name, tuple(t.data.shape))
+                # per-output-channel scales follow the storage's N sharding;
+                # the broadcast K dim (width 1) stays unsharded
+                scale_spec = P(*spec[:-2], None, spec[-1])
+                return t.with_data(self.named(spec), self.named(scale_spec))
             if isinstance(t, DipWeight):
                 return t.with_data(
                     self.named(self.param_pspec(name, tuple(t.data.shape)))

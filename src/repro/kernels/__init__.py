@@ -8,6 +8,7 @@ design.
 
 from repro.kernels import ref
 from repro.kernels.dip_matmul import dip_matmul_pallas
+from repro.kernels.dip_matmul_q import dip_matmul_q_pallas
 from repro.kernels.dip_systolic import dip_systolic_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.ws_matmul import ws_matmul_pallas
@@ -15,6 +16,7 @@ from repro.kernels.ws_matmul import ws_matmul_pallas
 __all__ = [
     "ref",
     "dip_matmul_pallas",
+    "dip_matmul_q_pallas",
     "dip_systolic_pallas",
     "flash_attention_pallas",
     "ws_matmul_pallas",

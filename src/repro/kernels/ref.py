@@ -12,7 +12,15 @@ import jax.numpy as jnp
 
 from repro.core import permute
 
-__all__ = ["acc_dtype_for", "ws_matmul_ref", "dip_matmul_ref", "dip_systolic_ref"]
+__all__ = [
+    "acc_dtype_for",
+    "ws_matmul_ref",
+    "dip_matmul_ref",
+    "dip_systolic_ref",
+    "quantize_acts_int8",
+    "dip_matmul_int8w_ref",
+    "dip_matmul_fp8_ref",
+]
 
 
 def acc_dtype_for(*args: jax.Array) -> jnp.dtype:
@@ -41,3 +49,48 @@ def dip_systolic_ref(x: jax.Array, p: jax.Array, *, perm_tile: int = 64) -> jax.
     """Wavefront-emulation semantics — mathematically identical to the fast
     path; kept separate so both kernels are pinned to an explicit oracle."""
     return dip_matmul_ref(x, p, perm_tile=perm_tile)
+
+
+# ---------------------------------------------------------------------------
+# quantized-path oracles (kernels/dip_matmul_q.py).  The activation-side
+# quantizer lives here so the kernel wrapper and the oracle share ONE
+# definition — parity between them is then exact int32 arithmetic plus
+# identically-ordered float32 scaling.
+def quantize_acts_int8(x: jax.Array):
+    """Dynamic symmetric per-row int8 activation quantization.
+
+    Returns ``(q, scale)`` with ``q`` int8 of x's shape and ``scale``
+    float32 ``(..., 1)`` such that ``q * scale ~= x``.  All-zero rows get a
+    floor scale instead of a 0/0.
+    """
+    x32 = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x32), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dip_matmul_int8w_ref(
+    x: jax.Array, q: jax.Array, w_scale: jax.Array, *, perm_tile: int = 64
+) -> jax.Array:
+    """W8A8-dynamic semantics: per-row int8 acts x per-column int8 weights,
+    exact int32 accumulation, fused f32 scale-on-output.
+
+    ``q``: int8 DiP-permutated storage (K, N); ``w_scale``: (1, N) f32.
+    """
+    xq, x_scale = quantize_acts_int8(x)
+    w = permute.unpermute_tiled(q, perm_tile)
+    acc = jnp.matmul(xq, w, preferred_element_type=jnp.int32)
+    out = acc.astype(jnp.float32) * x_scale * w_scale.astype(jnp.float32)
+    return out.astype(x.dtype if jnp.issubdtype(x.dtype, jnp.floating) else jnp.float32)
+
+
+def dip_matmul_fp8_ref(
+    x: jax.Array, q: jax.Array, w_scale: jax.Array, *, perm_tile: int = 64
+) -> jax.Array:
+    """fp8-weight semantics: fp8 storage upcast, f32 accumulation, fused
+    per-column scale-on-output; activations stay in their float dtype."""
+    w = permute.unpermute_tiled(q, perm_tile).astype(jnp.float32)
+    acc = jnp.matmul(x.astype(jnp.float32), w, preferred_element_type=jnp.float32)
+    out = acc * w_scale.astype(jnp.float32)
+    return out.astype(x.dtype if jnp.issubdtype(x.dtype, jnp.floating) else jnp.float32)

@@ -27,6 +27,9 @@ def main():
     ap.add_argument("--max-seq", type=int, default=256)
     ap.add_argument("--dip", action="store_true",
                     help="store weights DiP-permutated + use the Pallas kernel")
+    ap.add_argument("--quantize", choices=("int8", "fp8_e4m3"), default=None,
+                    help="quantize the DiP projections and serve through the "
+                         "matching quantized kernel (dip_int8w / dip_fp8)")
     ap.add_argument("--autotune", action="store_true",
                     help="measure block-size candidates for this config's "
                          "projections before serving (tiled backends only)")
@@ -39,6 +42,14 @@ def main():
         import dataclasses
         cfg = dataclasses.replace(cfg, matmul_backend="pallas_dip",
                                   compute_dtype="float32")
+    if args.quantize:
+        import dataclasses
+        from repro.api import quant
+        cfg = dataclasses.replace(
+            cfg, quantization=args.quantize,
+            matmul_backend=quant.scheme_info(args.quantize).backend,
+            compute_dtype="float32",
+        )
     if args.autotune:
         # registers measured tuning entries before the first forward traces,
         # so every jitted dispatch below picks them up

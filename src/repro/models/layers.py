@@ -30,7 +30,7 @@ __all__ = [
 
 def linear(
     x: jax.Array,
-    w: Union[jax.Array, api.DipWeight],
+    w: Union[jax.Array, api.DipWeight, api.QuantizedDipWeight],
     b: Optional[jax.Array] = None,
     *,
     backend: Optional[str] = None,
@@ -39,10 +39,14 @@ def linear(
     """``x @ W (+ b)`` through the registered matmul backend.
 
     The output width comes from the weight itself (``DipWeight.d_out`` for
-    permutated storage — the padding bookkeeping lives in the type).
+    permutated storage — the padding bookkeeping lives in the type).  A
+    ``QuantizedDipWeight`` keeps its reduced-precision storage + scales as-is
+    (only the activations take the compute dtype); with ``backend=None`` it
+    dispatches straight to its scheme's quantized kernel.
     """
     x = x.astype(compute_dtype)
-    w = w.astype(compute_dtype)
+    if not isinstance(w, api.QuantizedDipWeight):
+        w = w.astype(compute_dtype)
     out = api.matmul(x, w, backend=backend)
     if b is not None:
         out = out + b.astype(out.dtype)

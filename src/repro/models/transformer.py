@@ -37,6 +37,7 @@ __all__ = [
     "param_template",
     "init_params",
     "param_specs",
+    "quantize_params",
     "forward",
     "init_cache",
     "loss_fn",
@@ -163,14 +164,38 @@ def _map_template(t, fn):
 
 def param_specs(cfg) -> Dict[str, Any]:
     """ShapeDtypeStruct pytree — used by the dry-run (no allocation).
-    DiP-stored linears appear as ``DipWeight`` nodes wrapping the spec of
+    DiP-stored linears appear as ``DipWeight`` (or, under
+    ``cfg.quantization``, ``QuantizedDipWeight``) nodes wrapping the spec of
     their (padded) storage, mirroring ``init_params`` exactly."""
+    scheme = cfg.quant_scheme
 
     def mk(shape, dt, fan, dip=None):
+        if dip is not None and scheme is not None:
+            info = api.quant.scheme_info(scheme)
+            data = jax.ShapeDtypeStruct(shape, jnp.dtype(info.storage_dtype))
+            scale = jax.ShapeDtypeStruct(shape[:-2] + (1, shape[-1]), jnp.float32)
+            return api.QuantizedDipWeight(data, scale, *dip, scheme=scheme)
         spec = jax.ShapeDtypeStruct(shape, jnp.dtype(dt))
         return api.DipWeight(spec, *dip) if dip is not None else spec
 
     return _map_template(param_template(cfg), mk)
+
+
+def quantize_params(params: Dict[str, Any], scheme: str) -> Dict[str, Any]:
+    """Quantize every DiP-stored projection to ``scheme`` storage.
+
+    Only ``DipWeight`` nodes are quantized (embeddings, norms, biases, and
+    the SSM scalars stay float — they are not DiP-array operands); already
+    quantized nodes pass through ``quant.quantize`` untouched.  This is the
+    offline calibration step: run it once at init / checkpoint load, never
+    per forward.
+    """
+    dip_types = (api.DipWeight, api.QuantizedDipWeight)
+    return jax.tree_util.tree_map(
+        lambda t: api.quant.quantize(t, scheme) if isinstance(t, dip_types) else t,
+        params,
+        is_leaf=lambda t: isinstance(t, dip_types),
+    )
 
 
 def init_params(key: jax.Array, cfg) -> Dict[str, Any]:
@@ -222,6 +247,8 @@ def init_params(key: jax.Array, cfg) -> Dict[str, Any]:
     if cfg.qkv_bias and "bq" in params.get("layers", {}):
         for nm in ("bq", "bk", "bv"):
             params["layers"][nm] = jnp.zeros_like(params["layers"][nm])
+    if cfg.quant_scheme is not None:
+        params = quantize_params(params, cfg.quant_scheme)
     return params
 
 

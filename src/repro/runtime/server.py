@@ -47,7 +47,12 @@ class Server:
     def __init__(self, cfg, scfg: ServerConfig, params, *, policy=None):
         self.cfg = cfg
         self.scfg = scfg
-        api.get_backend(cfg.matmul_backend)  # fail fast on unknown backends
+        be = api.get_backend(cfg.matmul_backend)  # fail fast on unknown backends
+        if be.layout == "dip_q" and cfg.quant_scheme != be.scheme:
+            raise ValueError(
+                f"backend {be.name!r} consumes {be.scheme!r}-quantized weights "
+                f"but cfg.quantization={cfg.quantization!r}"
+            )
         self.params = params
         constrain = policy.constrain if policy is not None else (lambda x, t: x)
         self._decode = jax.jit(tf_model.decode_step_fn(cfg, constrain=constrain))

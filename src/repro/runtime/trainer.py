@@ -68,6 +68,15 @@ class Trainer:
         self.cfg = cfg
         self.tcfg = tcfg
         api.get_backend(cfg.matmul_backend)  # fail fast on unknown backends
+        if cfg.quant_scheme is not None:
+            # quantized storage is a frozen inference artifact: its int8/fp8
+            # payload has no usable cotangent, so training would silently
+            # freeze every projection — reject up front
+            raise ValueError(
+                f"cfg.quantization={cfg.quantization!r} is inference-only; "
+                "train in float and quantize the checkpoint for serving "
+                "(models.transformer.quantize_params)"
+            )
         self.opt = optimizer or AdamW(lr=3e-4)
         self.mesh = mesh
         self.policy = policy

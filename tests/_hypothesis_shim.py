@@ -64,7 +64,16 @@ except ImportError:
                     drawn = {k: s.draw(rng) for k, s in strats.items()}
                     fn(*args, **drawn, **kwargs)
 
-            # pytest must not see the strategy parameters as fixtures
+            # pytest must not see the strategy parameters as fixtures, but it
+            # MUST still see the remaining ones (pytest.mark.parametrize
+            # resolves names against the visible signature) — expose the
+            # original signature minus the strategy-drawn parameters
+            import inspect
+
+            sig = inspect.signature(fn)
+            runner.__signature__ = sig.replace(parameters=[
+                p for name, p in sig.parameters.items() if name not in strats
+            ])
             del runner.__wrapped__
             runner.hypothesis_fallback = True
             return runner

@@ -76,6 +76,22 @@ def test_dip_weight_is_a_pytree_through_jit_and_grad():
     assert isinstance(back, api.DipWeight) and back.d_out == dw.d_out
 
 
+def test_dip_weight_astype_rejects_non_float_targets():
+    """A bare int8 cast would truncate storage without scales — the error
+    must point at the real quantization path (api.quant.quantize)."""
+    _, w = _mats()
+    dw = api.DipWeight.from_natural(w)
+    for bad in ("int8", "int32", "uint8"):
+        with pytest.raises(TypeError, match="quant.quantize"):
+            dw.astype(bad)
+    # float targets stay a plain storage cast; same-dtype is the identity
+    assert dw.astype(jnp.bfloat16).dtype == jnp.bfloat16
+    assert dw.astype(jnp.float32) is dw
+    # and the pointed-at path actually accepts what astype rejects
+    qw = api.quant.quantize(dw, "int8")
+    assert qw.dtype == jnp.int8 and qw.shape == dw.shape
+
+
 # ------------------------------------------------------ registry dispatch ---
 @pytest.mark.parametrize("backend", ["xla", "ws", "pallas_dip", "pallas_systolic"])
 @pytest.mark.parametrize("dtype", ["float32", "bfloat16"])

@@ -270,6 +270,86 @@ def test_cli_config_shapes_listing(clean_table, fake_measure, tmp_path, capsys):
     assert "distinct projections" in out and "lm_head" in out
 
 
+# ------------------------------------------------- quantized backends -------
+def test_builtin_entries_exist_for_quantized_backends():
+    """The table ships K-deepened builtins for dip_int8w/dip_fp8 (the int32
+    accumulator already costs full width; operand blocks are narrow)."""
+    for backend in ("dip_int8w", "dip_fp8"):
+        blocks = api.lookup_blocks(backend, 1024, 1024, 1024, jnp.bfloat16)
+        assert blocks.block_k == 512, backend
+        # activation-dtype keyed: f32 activations hit the same backend rule
+        assert api.lookup_blocks(backend, 1024, 1024, 1024, jnp.float32).block_k == 512
+
+
+def test_measured_entry_outranks_builtin_for_quantized_backends(clean_table):
+    """Precedence: a measured exact-shape entry must beat the builtin rule
+    for its (backend, dtype, shape) and ONLY that key."""
+    before = api.lookup_blocks("dip_int8w", 64, 128, 256, jnp.bfloat16)
+    assert tuple(before) == (64, 256, 128)  # builtin, clamped to the problem
+    tuning.register_measured(
+        (8, 64, 64), backend="dip_int8w", dtype="bfloat16",
+        m=64, k=128, n=256, persist=False,
+    )
+    assert tuple(api.lookup_blocks("dip_int8w", 64, 128, 256, jnp.bfloat16)) == (8, 64, 64)
+    # other dtype, other quantized backend, other shape: still the builtin
+    assert tuple(api.lookup_blocks("dip_int8w", 64, 128, 256, jnp.float32)) == (64, 256, 128)
+    assert tuple(api.lookup_blocks("dip_fp8", 64, 128, 256, jnp.bfloat16)) == (64, 256, 128)
+    assert tuple(api.lookup_blocks("dip_int8w", 32, 128, 256, jnp.bfloat16)) == (32, 256, 128)
+
+
+@pytest.mark.parametrize("backend,dtype", [("dip_int8w", "bfloat16"), ("dip_fp8", "float32")])
+def test_cache_roundtrip_quantized_backend_names(
+    tmp_path, clean_table, fake_measure, backend, dtype
+):
+    """write (autotune, dtype-keyed) -> fresh load -> lookup hits the winner
+    under the new backend names, keyed on the PADDED storage dims."""
+    cache = tmp_path / "tuning-q.json"
+    res = autotune.autotune_shape(
+        backend, 64, 100, 200, dtype, register=True, persist=True,
+        cache_path=cache,
+    )
+    entry = tuning._TABLE[0]
+    assert (entry.source, entry.backend, entry.dtype) == ("measured", backend, dtype)
+    assert (entry.min_k, entry.max_k, entry.min_n, entry.max_n) == (128, 128, 256, 256)
+
+    # simulate a fresh process: pre-test table + cache reload
+    tuning._TABLE[:] = clean_table
+    assert tuning.load_cache(cache) == 1
+    got = api.lookup_blocks(backend, 64, 128, 256, jnp.dtype(dtype))
+    assert got == res.best.blocks
+    # the cached entry is dtype-keyed: the other activation dtype falls back
+    other = jnp.float32 if dtype == "bfloat16" else jnp.bfloat16
+    assert tuple(api.lookup_blocks(backend, 64, 128, 256, other)) == (64, 256, 128)
+    payload = json.loads(cache.read_text())
+    assert payload["entries"][0]["backend"] == backend
+    assert payload["entries"][0]["dtype"] == dtype
+
+
+def test_autotune_operands_for_quantized_backends():
+    """_operands hands quantized backends exactly what a serving call site
+    holds: float activations in the requested dtype + a QuantizedDipWeight
+    of the backend's scheme."""
+    x, w = autotune._operands("dip_int8w", jnp.bfloat16, 16, 64, 128)
+    assert x.dtype == jnp.bfloat16
+    assert isinstance(w, api.QuantizedDipWeight) and w.scheme == "int8"
+    assert w.storage_shape == (64, 128) and w.dtype == jnp.int8
+    x, w = autotune._operands("dip_fp8", jnp.float32, 16, 64, 128)
+    assert isinstance(w, api.QuantizedDipWeight) and w.scheme == "fp8_e4m3"
+
+
+def test_autotune_shape_quantized_backend_end_to_end(clean_table):
+    """Un-stubbed measurement through the real dip_int8w dispatch (interpret
+    mode): the whole candidate->measure->register loop must run."""
+    res = autotune.autotune_shape(
+        "dip_int8w", 16, 64, 64, "float32",
+        iters=1, warmup=1, interpret=True, max_candidates=2,
+        register=True, persist=False,
+    )
+    assert len(res.measurements) >= 1
+    assert all(m.time_us > 0 for m in res.measurements)
+    assert api.lookup_blocks("dip_int8w", 16, 64, 64, jnp.float32) == res.best.blocks
+
+
 # --------------------------------------------------------- config shapes ----
 def test_matmul_shapes_match_param_template_dip_metadata():
     """Every DipWeight the model materializes must be covered by the shape

@@ -1,0 +1,393 @@
+"""Cross-backend conformance harness: the acceptance bar for new backends.
+
+Every registered matmul backend x supported operand dtype must
+
+  * match its pure-jnp oracle in ``kernels/ref.py`` on *aligned and ragged*
+    shapes (property-generated through ``tests/_hypothesis_shim`` — real
+    hypothesis when installed, the deterministic fallback otherwise), within
+    the per-dtype tolerances documented in ``docs/quantization.md``;
+  * honour autodiff where the backend is differentiable (activation grads
+    everywhere, weight grads on the float backends — quantized storage is a
+    frozen artifact, its cotangent is zero by design);
+  * keep the pytree / jit / scan invariants for BOTH weight types
+    (``DipWeight`` and ``QuantizedDipWeight``).
+
+A backend that cannot pass this file must not be registered as a builtin.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from _hypothesis_shim import given, settings, st
+
+from repro import api
+from repro.kernels import ref
+
+# ---------------------------------------------------------------------------
+# the conformance matrix: backend -> operand (activation) dtypes it supports.
+# xla omits int8 deliberately: a bare jnp.matmul accumulates int8 in int8
+# (overflow) — integer workloads go through the tiled kernels.
+CONFORMANCE = {
+    "xla": ("float32", "bfloat16"),
+    "ws": ("float32", "bfloat16", "int8"),
+    "pallas_dip": ("float32", "bfloat16", "int8"),
+    "pallas_systolic": ("float32", "int8"),
+    "dip_int8w": ("float32", "bfloat16"),
+    "dip_fp8": ("float32", "bfloat16"),
+}
+
+# parity tolerance vs the oracle, keyed on activation dtype.  The quantized
+# backends compare against their *quantized* oracles, where the integer
+# arithmetic is exact and only f32 epilogue rounding differs.
+TOL = {
+    "float32": dict(atol=2e-3, rtol=2e-3),
+    "bfloat16": dict(atol=0.5, rtol=0.05),
+    "int8": dict(atol=0, rtol=0),
+}
+
+# shape pools mix tile-aligned and ragged (non-multiple-of-64) dims; kept
+# small so interpret-mode jit caches hit across drawn examples.
+MS = (1, 8, 17, 64)
+KS = (64, 100, 128)
+NS = (64, 127, 130, 192)
+
+
+def _operands(m, k, n, dtype, seed):
+    r = np.random.default_rng(seed)
+    if dtype == "int8":
+        x = r.integers(-20, 21, (m, k)).astype(np.int8)
+        w = r.integers(-20, 21, (k, n)).astype(np.int8)
+        return jnp.asarray(x), jnp.asarray(w)
+    x = r.normal(0, 1, (m, k)).astype(np.float32)
+    w = r.normal(0, 1, (k, n)).astype(np.float32)
+    return jnp.asarray(x).astype(dtype), jnp.asarray(w).astype(dtype)
+
+
+def _weight_for(backend, w):
+    """The weight object a call site would hold for this backend."""
+    be = api.get_backend(backend)
+    if be.layout == "dip_q":
+        return api.quant.quantize(w.astype(jnp.float32), be.scheme)
+    if be.layout == "dip":
+        return api.DipWeight.from_natural(w)
+    return w
+
+
+def _oracle(backend, x, wobj, w):
+    """kernels/ref.py oracle for one dispatch, cropped to the logical shape."""
+    be = api.get_backend(backend)
+    if be.layout == "natural":
+        return ref.ws_matmul_ref(x, w)
+    n = wobj.d_out
+    xk = jnp.pad(x, [(0, 0), (0, (-x.shape[-1]) % wobj.perm_tile)])
+    if be.layout == "dip":
+        return ref.dip_matmul_ref(xk, wobj.data, perm_tile=wobj.perm_tile)[..., :n]
+    if be.scheme == "int8":
+        return ref.dip_matmul_int8w_ref(
+            xk, wobj.data, wobj.scale, perm_tile=wobj.perm_tile
+        )[..., :n]
+    return ref.dip_matmul_fp8_ref(
+        xk, wobj.data, wobj.scale, perm_tile=wobj.perm_tile
+    )[..., :n]
+
+
+def test_matrix_covers_every_builtin_backend():
+    missing = set(CONFORMANCE) - set(api.list_backends())
+    assert not missing, f"matrix names unregistered backends: {missing}"
+    builtin = {"xla", "ws", "pallas_dip", "pallas_systolic", "dip_int8w", "dip_fp8"}
+    assert builtin <= set(CONFORMANCE), "a builtin backend escaped conformance"
+
+
+# ----------------------------------------------------------------- parity ---
+@pytest.mark.parametrize(
+    "backend,dtype",
+    [(b, d) for b, dts in CONFORMANCE.items() for d in dts],
+)
+@settings(max_examples=5)
+@given(
+    m=st.sampled_from(MS),
+    k=st.sampled_from(KS),
+    n=st.sampled_from(NS),
+    seed=st.integers(0, 2**16),
+)
+def test_backend_matches_oracle(backend, dtype, m, k, n, seed):
+    x, w = _operands(m, k, n, dtype, seed)
+    wobj = _weight_for(backend, w)
+    got = api.matmul(x, wobj, backend=backend)
+    want = _oracle(backend, x, wobj, w)
+    assert got.shape == (m, n)
+    if api.get_backend(backend).layout == "dip_q":
+        # kernel vs quantized oracle: integer/f32 arithmetic is exact, only
+        # epilogue rounding (and the output-dtype cast) differs
+        tol = (
+            dict(atol=1e-3, rtol=1e-3) if dtype == "float32"
+            else dict(atol=0.1, rtol=0.02)
+        )
+    else:
+        tol = TOL[dtype]
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **tol,
+        err_msg=f"{backend}/{dtype} {m}x{k}x{n} seed={seed}",
+    )
+
+
+@pytest.mark.parametrize("scheme,bound", [("int8", 0.02), ("fp8_e4m3", 0.05)])
+def test_quantized_accuracy_vs_float_reference_documented_bound(scheme, bound):
+    """Acceptance: quantized matmul vs the float32 reference within the
+    accuracy expectation documented in docs/quantization.md (normalized
+    worst-case deviation on well-conditioned random operands)."""
+    r = np.random.default_rng(7)
+    for m, k, n in [(32, 128, 192), (17, 100, 130)]:
+        x = jnp.asarray(r.normal(0, 1, (m, k)).astype(np.float32))
+        w = jnp.asarray(r.normal(0, 1, (k, n)).astype(np.float32))
+        qw = api.quant.quantize(w, scheme)
+        got = api.matmul(x, qw)
+        want = np.asarray(ref.ws_matmul_ref(x, w))
+        dev = np.abs(np.asarray(got) - want).max() / np.abs(want).max()
+        assert dev < bound, f"{scheme} {m}x{k}x{n}: deviation {dev:.4f}"
+
+
+@settings(max_examples=5)
+@given(
+    k=st.sampled_from(KS),
+    n=st.sampled_from(NS),
+    scheme=st.sampled_from(sorted(api.quant.SCHEMES)),
+    seed=st.integers(0, 2**16),
+)
+def test_quantize_dequantize_error_within_per_channel_bound(k, n, scheme, seed):
+    """Elementwise |dequant(quantize(w)) - w| <= the per-channel bound
+    api.quant.max_abs_error_bound documents (half a step / half a ulp)."""
+    r = np.random.default_rng(seed)
+    w = jnp.asarray(r.normal(0, 1, (k, n)).astype(np.float32))
+    qw = api.quant.quantize(w, scheme)
+    back = api.quant.dequantize_natural(qw)
+    err = np.abs(np.asarray(back) - np.asarray(w))
+    bound = np.asarray(api.quant.max_abs_error_bound(qw))  # (n,)
+    assert (err <= bound[None, :] + 1e-7).all()
+
+
+def test_quantize_of_dipweight_equals_quantize_of_natural():
+    r = np.random.default_rng(3)
+    w = jnp.asarray(r.normal(0, 1, (100, 130)).astype(np.float32))
+    qa = api.quant.quantize(w, "int8")
+    qb = api.quant.quantize(api.DipWeight.from_natural(w), "int8")
+    np.testing.assert_array_equal(np.asarray(qa.data), np.asarray(qb.data))
+    np.testing.assert_allclose(np.asarray(qa.scale), np.asarray(qb.scale))
+
+
+def test_scheme_mismatch_and_requantization_are_rejected():
+    w = jnp.ones((64, 64), jnp.float32)
+    qw = api.quant.quantize(w, "fp8_e4m3")
+    with pytest.raises(ValueError, match="consumes scheme"):
+        api.matmul(jnp.ones((4, 64), jnp.float32), qw, backend="dip_int8w")
+    with pytest.raises(ValueError, match="requantiz"):
+        api.quant.quantize(qw, "int8")
+    assert api.quant.quantize(qw, "fp8_e4m3") is qw  # same scheme passes through
+    with pytest.raises(ValueError, match="unknown quantization scheme"):
+        api.quant.quantize(w, "int4")
+
+
+def test_every_backend_accepts_a_quantized_weight():
+    """Dispatch is weight-type aware: non-quantized backends dequantize a
+    QuantizedDipWeight to their declared layout instead of crashing."""
+    r = np.random.default_rng(5)
+    x = jnp.asarray(r.normal(0, 1, (16, 100)).astype(np.float32))
+    w = jnp.asarray(r.normal(0, 1, (100, 130)).astype(np.float32))
+    qw = api.quant.quantize(w, "int8")
+    want = np.asarray(api.matmul(x, api.quant.dequantize(qw), backend="xla"))
+    for backend in sorted(CONFORMANCE):
+        if api.get_backend(backend).layout == "dip_q":
+            continue
+        got = np.asarray(api.matmul(x, qw, backend=backend))
+        np.testing.assert_allclose(got, want, atol=2e-3, rtol=2e-3,
+                                   err_msg=backend)
+
+
+# -------------------------------------------------------------- gradients ---
+@pytest.mark.parametrize("backend", sorted(CONFORMANCE))
+def test_activation_gradients_match_xla(backend):
+    """d/dx through every backend == the natively-differentiated XLA path.
+
+    A *linear* functional (sum(out * c)) pins the output cotangent to a
+    constant, so the comparison isolates the VJP rule from forward-value
+    differences (the quantized forward is approximate by design)."""
+    r = np.random.default_rng(11)
+    x = jnp.asarray(r.normal(0, 1, (16, 100)).astype(np.float32))
+    w = jnp.asarray(r.normal(0, 1, (100, 130)).astype(np.float32))
+    c = jnp.asarray(r.normal(0, 1, (16, 130)).astype(np.float32))
+    wobj = _weight_for(backend, w)
+    be = api.get_backend(backend)
+    # the quantized VJP is straight-through w.r.t. the DEQUANTIZED weight
+    w_ref = api.quant.dequantize(wobj) if be.layout == "dip_q" else w
+
+    g = jax.grad(lambda xx: jnp.sum(api.matmul(xx, wobj, backend=backend) * c))(x)
+    g_ref = jax.grad(lambda xx: jnp.sum(api.matmul(xx, w_ref, backend="xla") * c))(x)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("backend", ["ws", "pallas_dip", "pallas_systolic"])
+def test_weight_gradients_match_xla_on_float_backends(backend):
+    r = np.random.default_rng(13)
+    x = jnp.asarray(r.normal(0, 1, (16, 100)).astype(np.float32))
+    w = jnp.asarray(r.normal(0, 1, (100, 130)).astype(np.float32))
+    c = jnp.asarray(r.normal(0, 1, (16, 130)).astype(np.float32))
+    wobj = _weight_for(backend, w)
+    dw_xla = jax.grad(
+        lambda d: jnp.sum(api.matmul(x, d, backend="xla") * c)
+    )(api.DipWeight.from_natural(w))
+    dw = jax.grad(lambda d: jnp.sum(api.matmul(x, d, backend=backend) * c))(wobj)
+    if isinstance(wobj, api.DipWeight):
+        assert isinstance(dw, api.DipWeight)
+        np.testing.assert_allclose(
+            np.asarray(dw.data), np.asarray(dw_xla.data), atol=1e-4, rtol=1e-4
+        )
+    else:  # natural-layout backend: plain array cotangent
+        np.testing.assert_allclose(
+            np.asarray(dw), np.asarray(dw_xla.to_natural()), atol=1e-4, rtol=1e-4
+        )
+
+
+def test_quantized_weight_cotangent_is_zero_not_garbage():
+    """grad w.r.t. a QuantizedDipWeight's float leaves is exactly zero (the
+    storage is frozen); the integer storage has no tangent at all."""
+    x = jnp.asarray(np.random.default_rng(17).normal(0, 1, (8, 64)), jnp.float32)
+    qw = api.quant.quantize(
+        jnp.asarray(np.random.default_rng(18).normal(0, 1, (64, 64)), jnp.float32),
+        "fp8_e4m3",
+    )
+    g = jax.grad(lambda q: jnp.sum(api.matmul(x, q)), allow_int=True)(qw)
+    assert isinstance(g, api.QuantizedDipWeight)
+    assert not np.asarray(jnp.abs(g.scale)).any()
+
+
+# ------------------------------------------- pytree / jit / scan invariants --
+def _mk_weights(stacked: bool):
+    r = np.random.default_rng(21)
+    shape = (3, 100, 130) if stacked else (100, 130)
+    w = jnp.asarray(r.normal(0, 1, shape).astype(np.float32))
+    return {
+        "dip": api.DipWeight.from_natural(w),
+        "quant_int8": api.quant.quantize(w, "int8"),
+        "quant_fp8": api.quant.quantize(w, "fp8_e4m3"),
+    }
+
+
+@pytest.mark.parametrize("kind", ["dip", "quant_int8", "quant_fp8"])
+def test_pytree_flatten_roundtrip_preserves_type_and_metadata(kind):
+    wobj = _mk_weights(stacked=False)[kind]
+    leaves, treedef = jax.tree_util.tree_flatten(wobj)
+    assert len(leaves) == (1 if kind == "dip" else 2)
+    back = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert type(back) is type(wobj)
+    assert (back.d_in, back.d_out, back.perm_tile) == (100, 130, 64)
+    if kind != "dip":
+        assert back.scheme == wobj.scheme
+    # eval_shape routes ShapeDtypeStructs through the same container
+    spec = jax.eval_shape(lambda t: t, wobj)
+    assert type(spec) is type(wobj)
+    assert spec.data.shape == wobj.data.shape
+
+
+@pytest.mark.parametrize("kind", ["dip", "quant_int8", "quant_fp8"])
+def test_jit_boundary_and_scan_match_unjitted_per_layer_calls(kind):
+    stacked = _mk_weights(stacked=True)[kind]
+    x = jnp.asarray(np.random.default_rng(22).normal(0, 1, (8, 100)), jnp.float32)
+
+    @jax.jit
+    def f(xx, wobj):
+        return api.matmul(xx, wobj)
+
+    def body(carry, lw):
+        return carry, f(x, lw)
+
+    _, scanned = jax.lax.scan(body, 0, stacked)
+    assert scanned.shape == (3, 8, 130)
+    for i in range(3):
+        sliced = jax.tree_util.tree_map(lambda t: t[i], stacked)
+        assert type(sliced) is type(stacked)
+        np.testing.assert_allclose(
+            np.asarray(scanned[i]), np.asarray(api.matmul(x, sliced)),
+            atol=1e-5, rtol=1e-5,
+        )
+
+
+@pytest.mark.parametrize("scheme", sorted(api.quant.SCHEMES))
+def test_checkpoint_roundtrip_quantized_weight_bit_exact(tmp_path, scheme):
+    """save -> restore keeps storage and scales bit-exact, the scheme in the
+    manifest, and matmul parity after restore; a scheme mismatch on restore
+    is detected, not silently mis-dequantized."""
+    from repro.checkpoint import restore_pytree, save_pytree
+
+    r = np.random.default_rng(23)
+    w = jnp.asarray(r.normal(0, 1, (100, 130)).astype(np.float32))
+    qw = api.quant.quantize(w, scheme)
+    tree = {"w": qw}
+    path = str(tmp_path / "ck")
+    save_pytree(path, tree)
+
+    got = restore_pytree(path, jax.eval_shape(lambda: tree))["w"]
+    assert isinstance(got, api.QuantizedDipWeight) and got.scheme == scheme
+    np.testing.assert_array_equal(
+        np.asarray(got.data).view(np.uint8), np.asarray(qw.data).view(np.uint8)
+    )
+    np.testing.assert_array_equal(np.asarray(got.scale), np.asarray(qw.scale))
+    x = jnp.asarray(r.normal(0, 1, (4, 100)).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(api.matmul(x, got)), np.asarray(api.matmul(x, qw)),
+        atol=1e-6, rtol=1e-6,
+    )
+
+    other = "fp8_e4m3" if scheme == "int8" else "int8"
+    bad = {"w": api.QuantizedDipWeight(
+        jax.eval_shape(lambda: tree)["w"].data,
+        jax.eval_shape(lambda: tree)["w"].scale,
+        100, 130, scheme=other,
+    )}
+    with pytest.raises(ValueError, match="metadata mismatch"):
+        restore_pytree(path, bad)
+
+
+def test_dequantized_fallback_keeps_activation_dtype():
+    """A quantized weight through a non-quantized backend must not promote
+    the output: dequantization happens AT the activation dtype, so bf16
+    serving stays bf16 exactly like the float-weight path."""
+    x = jnp.ones((4, 64), jnp.bfloat16)
+    w = jnp.ones((64, 64), jnp.float32)
+    qw = api.quant.quantize(w, "int8")
+    for backend in ("xla", "ws", "pallas_dip"):
+        got = api.matmul(x, qw, backend=backend)
+        want = api.matmul(x, api.DipWeight.from_natural(w).astype(jnp.bfloat16),
+                          backend=backend)
+        assert got.dtype == want.dtype == jnp.bfloat16, backend
+
+
+def test_quantize_params_validates_scheme_on_requantization():
+    """quantize_params routes already-quantized nodes through quant.quantize:
+    same scheme passes through untouched, a mismatch raises instead of
+    silently leaving a mixed-scheme model."""
+    from repro.models.transformer import quantize_params
+
+    dw = api.DipWeight.from_natural(jnp.ones((64, 64), jnp.float32))
+    qw = api.quant.quantize(jnp.ones((64, 64), jnp.float32), "fp8_e4m3")
+    out = quantize_params({"a": dw, "b": qw}, "fp8_e4m3")
+    assert out["a"].scheme == "fp8_e4m3" and out["b"] is qw
+    with pytest.raises(ValueError, match="requantiz"):
+        quantize_params({"a": dw, "b": qw}, "int8")
+
+
+def test_contraction_validation_matches_float_path():
+    """Quantized dispatch validates x against the LOGICAL d_in exactly like
+    the float dip path (no silent zero-imputation into padding rows)."""
+    qw = api.quant.quantize(jnp.ones((100, 130), jnp.float32), "int8")
+    with pytest.raises(ValueError, match="contraction"):
+        api.matmul(jnp.ones((4, 128), jnp.float32), qw)  # padded width
+    with pytest.raises(ValueError, match="contraction"):
+        api.matmul(jnp.ones((4, 96), jnp.float32), qw)   # too narrow
+    with pytest.raises(ValueError, match="2-D"):
+        api.matmul(
+            jnp.ones((4, 100), jnp.float32),
+            api.quant.quantize(jnp.ones((2, 100, 130), jnp.float32), "int8"),
+        )

@@ -21,6 +21,16 @@ SHAPES = [
 ]
 DTYPES = ["float32", "bfloat16", "int8"]
 
+# every M/K/N combination of off-tile dims the padding shim must absorb:
+# sub-tile K/N, one-past-tile, odd everything, and aligned-K/ragged-M-N
+UNALIGNED_SHAPES = [
+    (33, 65, 127),
+    (7, 30, 100),
+    (65, 191, 66),
+    (129, 64, 130),
+    (16, 127, 64),
+]
+
 
 def _mats(m, k, n, dtype, seed=0):
     r = np.random.default_rng(seed)
@@ -73,6 +83,37 @@ def test_ws_baseline_kernel(shape):
     np.testing.assert_allclose(np.asarray(got), x @ w, atol=1e-3, rtol=1e-3)
 
 
+@pytest.mark.parametrize("shape", UNALIGNED_SHAPES)
+@pytest.mark.parametrize(
+    "backend", ["ws", "pallas_dip", "pallas_systolic", "dip_int8w", "dip_fp8"]
+)
+def test_unaligned_shape_parity_all_tiled_backends(shape, backend):
+    """M/K/N not multiples of the perm tile: dispatch pads, kernels stay
+    parity-exact vs their oracle, output is cropped to the logical shape."""
+    m, k, n = shape
+    x, w = _mats(m, k, n, "float32")
+    x, w = jnp.asarray(x), jnp.asarray(w)
+    xk = jnp.pad(x, [(0, 0), (0, (-k) % 64)])
+    if backend in ("dip_int8w", "dip_fp8"):
+        qw = api.quant.quantize(w, api.get_backend(backend).scheme)
+        got = api.matmul(x, qw, backend=backend)
+        oracle = (
+            ref.dip_matmul_int8w_ref if backend == "dip_int8w"
+            else ref.dip_matmul_fp8_ref
+        )
+        want = oracle(xk, qw.data, qw.scale)[..., :n]
+        tol = dict(atol=1e-3, rtol=1e-3)
+    else:
+        dw = api.DipWeight.from_natural(w)
+        got = api.matmul(x, dw, backend=backend)
+        want = ref.dip_matmul_ref(xk, dw.data)[..., :n]
+        tol = dict(atol=1e-3, rtol=1e-3)
+    assert got.shape == (m, n)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **tol
+    )
+
+
 def test_batched_inputs():
     r = np.random.default_rng(1)
     x = r.normal(size=(3, 5, 256)).astype(np.float32)
@@ -99,6 +140,44 @@ def test_block_shape_sweep():
                     np.asarray(got), want, atol=1e-3, rtol=1e-3,
                     err_msg=f"blocks ({bm},{bk},{bn})",
                 )
+
+
+def test_quantized_kernel_block_shape_sweep():
+    """dip_matmul_q must be correct for every legal BlockSpec tiling — the
+    int32 accumulation and the (M,1)x(1,N) scale epilogue are block-local,
+    so no tiling may change the result beyond f32 epilogue rounding."""
+    from repro.kernels.dip_matmul_q import dip_matmul_q_pallas
+
+    m, k, n = 128, 128, 128
+    x, w = _mats(m, k, n, "float32")
+    qw = api.quant.quantize(jnp.asarray(w), "int8")
+    want = ref.dip_matmul_int8w_ref(jnp.asarray(x), qw.data, qw.scale)
+    for bm in (64, 128):
+        for bk in (64, 128):
+            for bn in (64, 128):
+                got = dip_matmul_q_pallas(
+                    jnp.asarray(x), qw.data, qw.scale,
+                    block_m=bm, block_k=bk, block_n=bn, interpret=True,
+                )
+                np.testing.assert_allclose(
+                    np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-4,
+                    err_msg=f"blocks ({bm},{bk},{bn})",
+                )
+
+
+def test_quantized_kernel_int32_accumulation_is_exact():
+    """The W8A8 path accumulates in int32 EXACTLY (ADiP's claim): pin every
+    quantization scale to 1.0 (amax = 127 per row/column) so the kernel's
+    output is the raw integer matmul — which f32 holds exactly below 2^24."""
+    r = np.random.default_rng(9)
+    xi = r.integers(-127, 128, (32, 128)).astype(np.float32)
+    wi = r.integers(-127, 128, (128, 64)).astype(np.float32)
+    xi[:, 0], wi[0, :] = 127, 127  # per-row / per-column amax -> scale 1.0
+    qw = api.quant.quantize(jnp.asarray(wi), "int8")
+    np.testing.assert_array_equal(np.asarray(qw.scale[..., :64]), 1.0)
+    got = np.asarray(api.matmul(jnp.asarray(xi), qw, backend="dip_int8w"))
+    want = xi.astype(np.int64) @ wi.astype(np.int64)
+    np.testing.assert_array_equal(got.astype(np.int64), want)
 
 
 def test_deshear_ablation_matches_ws_kernel():
