@@ -1,22 +1,42 @@
 """Kernel micro-benchmarks (beyond paper): wall-time of the jit'd DiP ops on
-this host plus the structural de-shear overhead ablation.
+this host plus the structural de-shear overhead ablation and the
+fused-vs-unfused epilogue comparison.
 
 On CPU the Pallas kernels run in interpret mode, so absolute times are not
 TPU-representative; what IS meaningful here: (a) the XLA-path DiP storage
 format overhead (unpermute-then-dot vs plain dot — the fast path the
-framework uses when not on TPU), and (b) interpret-mode parity checks that
-accompany the timing so a regression cannot silently pass.
+framework uses when not on TPU), (b) interpret-mode parity checks that
+accompany the timing so a regression cannot silently pass, and (c) the
+*structural* fused-epilogue evidence — the fused SwiGLU dispatch issues ONE
+kernel launch where the unfused path issues three ops (two matmul launches
+plus the elementwise silu*mul), counted directly in the jaxpr.
+
+Every run writes ``BENCH_kernels.json`` (schema below) so the perf
+trajectory is machine-readable across PRs; the CI ``bench-smoke`` job runs
+``python benchmarks/kernels_bench.py --compare-epilogues --tiny`` and
+validates the file with :func:`validate_bench_json`.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
+import pathlib
 import time
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro import api
+
+BENCH_SCHEMA_VERSION = 1
+DEFAULT_JSON = "BENCH_kernels.json"
+
+# epilogues exercised by the fused-vs-unfused comparison (every variant with
+# at least one extra operand or a second weight; "none" is the baseline)
+_COMPARE_EPILOGUES = ("bias", "bias_silu", "swiglu", "residual")
 
 
 def _time(fn, *args, iters=20):
@@ -28,8 +48,198 @@ def _time(fn, *args, iters=20):
     return (time.perf_counter() - t0) / iters * 1e6  # us
 
 
-def run(csv_rows):
+# ---------------------------------------------------------------------------
+# structural evidence: kernel launches per dispatch, counted in the jaxpr
+def count_pallas_calls(fn, *args) -> int:
+    """Number of pallas_call equations a traced call would launch (recursing
+    through pjit/custom_vjp/scan sub-jaxprs)."""
+    closed = jax.make_jaxpr(fn)(*args)
+
+    def walk(jaxpr) -> int:
+        total = 0
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "pallas_call":
+                total += 1
+            for sub in jax.core.jaxprs_in_params(eqn.params):
+                total += walk(sub)
+        return total
+
+    return walk(closed.jaxpr)
+
+
+# ---------------------------------------------------------------------------
+# fused-vs-unfused epilogue comparison
+def compare_epilogues(
+    *,
+    backend: str = "pallas_dip",
+    m: int = 64,
+    k: int = 256,
+    n: int = 256,
+    iters: int = 3,
+    interpret: Optional[bool] = None,
+    verbose: bool = True,
+) -> dict:
+    """Time every fused epilogue against its decomposed (unfused) form on
+    the same backend and count kernel launches for both.
+
+    Returns the machine-readable dict recorded under ``epilogue_compare`` in
+    ``BENCH_kernels.json``.  Parity against the shared f32 epilogue
+    arithmetic is asserted alongside the timings, so a fused-path regression
+    cannot silently pass the benchmark.
+    """
+    if interpret is None:
+        interpret = api.default_interpret()
+    r = np.random.default_rng(0)
+    x = jnp.asarray(r.normal(0, 1, (m, k)).astype(np.float32))
+    wg = jnp.asarray(r.normal(0, 1, (k, n)).astype(np.float32))
+    wu = jnp.asarray(r.normal(0, 1, (k, n)).astype(np.float32))
+    bias = jnp.asarray(r.normal(0, 1, (n,)).astype(np.float32))
+    resid = jnp.asarray(r.normal(0, 1, (m, n)).astype(np.float32))
+
+    be = api.get_backend(backend)
+    if be.layout == "dip_q":
+        wrap = lambda w: api.quant.quantize(w, be.scheme)
+    elif be.layout == "dip":
+        wrap = api.DipWeight.from_natural
+    else:
+        wrap = lambda w: w
+    g, u = wrap(wg), wrap(wu)
+
+    def operands_for(epilogue):
+        if epilogue == "swiglu":
+            return (g, u), ()
+        if epilogue.startswith("bias"):
+            return g, (bias,)
+        return g, (resid,)
+
+    def fused_fn(epilogue):
+        w, eops = operands_for(epilogue)
+        return jax.jit(lambda: api.matmul(
+            x, w, backend=backend, epilogue=epilogue, epilogue_operands=eops,
+            interpret=interpret,
+        ))
+
+    def unfused_fn(epilogue):
+        # the decomposed form every call site used before this subsystem:
+        # separate matmul launch(es) + elementwise glue through HBM
+        def f():
+            if epilogue == "swiglu":
+                zg = api.matmul(x, g, backend=backend, interpret=interpret)
+                zu = api.matmul(x, u, backend=backend, interpret=interpret)
+                return (jax.nn.silu(zg.astype(jnp.float32))
+                        * zu.astype(jnp.float32)).astype(zg.dtype)
+            z = api.matmul(x, g, backend=backend, interpret=interpret)
+            z32 = z.astype(jnp.float32)
+            if epilogue == "bias":
+                out = z32 + bias
+            elif epilogue == "bias_silu":
+                out = jax.nn.silu(z32 + bias)
+            else:
+                out = z32 + resid
+            return out.astype(z.dtype)
+        return jax.jit(f)
+
+    results = []
+    for epilogue in _COMPARE_EPILOGUES:
+        fused, unfused = fused_fn(epilogue), unfused_fn(epilogue)
+        got, want = fused(), unfused()
+        np.testing.assert_allclose(   # parity rides with the timing
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            atol=2e-3, rtol=2e-3,
+        )
+        t_fused = _time(fused, iters=iters)
+        t_unfused = _time(unfused, iters=iters)
+        n_fused = count_pallas_calls(fused)
+        n_unfused = count_pallas_calls(unfused)
+        rec = {
+            "epilogue": epilogue,
+            "fused_us": round(t_fused, 1),
+            "unfused_us": round(t_unfused, 1),
+            "speedup": round(t_unfused / t_fused, 3),
+            "fused_pallas_calls": n_fused,
+            "unfused_pallas_calls": n_unfused,
+        }
+        results.append(rec)
+        if verbose:
+            ops = "3 ops (2 matmul + silu*mul)" if epilogue == "swiglu" else \
+                  f"{n_unfused} launch(es) + elementwise"
+            print(f"  {epilogue:>9}: fused {t_fused:9.1f} us "
+                  f"({n_fused} kernel launch) vs unfused {t_unfused:9.1f} us "
+                  f"({ops}) -> {rec['speedup']:.2f}x")
+    if be.tiled:
+        swiglu = next(r_ for r_ in results if r_["epilogue"] == "swiglu")
+        assert swiglu["fused_pallas_calls"] == 1, (
+            f"fused swiglu must be ONE kernel launch, traced "
+            f"{swiglu['fused_pallas_calls']}"
+        )
+        assert swiglu["unfused_pallas_calls"] >= 2, "unfused swiglu lost its launches?"
+    return {
+        "backend": backend,
+        "shape": [m, k, n],
+        "mode": "interpret" if interpret else "compiled",
+        "results": results,
+    }
+
+
+# ---------------------------------------------------------------------------
+# machine-readable output
+def write_bench_json(path, csv_rows, epilogue_compare: Optional[dict]) -> pathlib.Path:
+    p = pathlib.Path(path)
+    payload = {
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "generated_by": "benchmarks/kernels_bench.py",
+        "jax_backend": jax.default_backend(),
+        "entries": [
+            {"name": name, "us_per_call": round(float(us), 1), "derived": str(derived)}
+            for name, us, derived in csv_rows
+        ],
+    }
+    if epilogue_compare is not None:
+        payload["epilogue_compare"] = epilogue_compare
+    p.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    return p
+
+
+def validate_bench_json(path) -> dict:
+    """Schema check for BENCH_kernels.json; returns the parsed payload.
+    Raises ValueError on any violation (run by the CI bench-smoke job)."""
+    payload = json.loads(pathlib.Path(path).read_text())
+
+    def need(cond, msg):
+        if not cond:
+            raise ValueError(f"BENCH_kernels.json schema violation: {msg}")
+
+    need(payload.get("schema_version") == BENCH_SCHEMA_VERSION,
+         f"schema_version != {BENCH_SCHEMA_VERSION}")
+    need(isinstance(payload.get("entries"), list), "entries must be a list")
+    for e in payload["entries"]:
+        need(isinstance(e.get("name"), str) and e["name"], "entry without name")
+        need(isinstance(e.get("us_per_call"), (int, float)), f"{e.get('name')}: bad us_per_call")
+    if "epilogue_compare" in payload:
+        ec = payload["epilogue_compare"]
+        need(isinstance(ec.get("backend"), str), "epilogue_compare.backend")
+        need(isinstance(ec.get("shape"), list) and len(ec["shape"]) == 3,
+             "epilogue_compare.shape must be [m, k, n]")
+        need(isinstance(ec.get("results"), list) and ec["results"],
+             "epilogue_compare.results empty")
+        for rec in ec["results"]:
+            for key in ("epilogue", "fused_us", "unfused_us", "speedup",
+                        "fused_pallas_calls", "unfused_pallas_calls"):
+                need(key in rec, f"epilogue_compare result missing {key!r}")
+        swiglu = [r for r in ec["results"] if r["epilogue"] == "swiglu"]
+        need(bool(swiglu), "epilogue_compare must include the swiglu headline")
+        need(swiglu[0]["fused_pallas_calls"] <= 1,
+             "fused swiglu recorded more than one kernel launch")
+    return payload
+
+
+# ---------------------------------------------------------------------------
+def run(csv_rows, *, out_json=DEFAULT_JSON):
     print("\n== kernel micro-benchmarks (CPU host; Pallas in interpret mode) ==")
+    # the harness (benchmarks/run.py) shares one csv_rows across modules;
+    # BENCH_kernels.json must record only THIS module's rows or the tracked
+    # perf trajectory diffs spurious fig5/table4 entries across invocations
+    first_own_row = len(csv_rows)
     r = np.random.default_rng(0)
     m, k, n = 512, 1024, 1024
     x = jnp.asarray(r.normal(size=(m, k)).astype(np.float32))
@@ -117,8 +327,65 @@ def run(csv_rows):
     print(f"Pallas dip_int8w 64x256x256 (interpret):  {t_q_pallas:9.1f} us "
           f"(Python emulation; vs float pallas_dip {t_pallas:9.1f} us)")
 
+    # fused-vs-unfused epilogue deltas (the flush-stage fusion subsystem)
+    print("fused-vs-unfused epilogues (pallas_dip 64x256x256, interpret):")
+    ec = compare_epilogues(backend="pallas_dip", m=64, k=256, n=256, iters=2)
+    for rec in ec["results"]:
+        csv_rows.append((f"kern_epilogue_{rec['epilogue']}_fused",
+                         rec["fused_us"],
+                         f"vs_unfused_{rec['speedup']:.2f}x_"
+                         f"launches_{rec['fused_pallas_calls']}v{rec['unfused_pallas_calls']}"))
+
     csv_rows.append(("kern_xla_plain_matmul", t_plain, f"{2*m*k*n/ (t_plain*1e-6) /1e9:.1f}GFLOP/s"))
     csv_rows.append(("kern_xla_dip_storage", t_dip_xla, f"overhead_{overhead:+.1f}%"))
     csv_rows.append(("kern_pallas_interpret", t_pallas, "interpret_mode"))
     csv_rows.append(("kern_pallas_int8w_interpret", t_q_pallas, "interpret_mode"))
     csv_rows.append(("kern_autotune_best", t_best, f"tuned_vs_incumbent_{speedup:.2f}x"))
+
+    path = write_bench_json(out_json, csv_rows[first_own_row:], ec)
+    validate_bench_json(path)
+    print(f"machine-readable record: {path}")
+
+
+# ---------------------------------------------------------------------------
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python benchmarks/kernels_bench.py",
+        description="DiP kernel micro-benchmarks; writes BENCH_kernels.json.",
+    )
+    ap.add_argument("--compare-epilogues", action="store_true",
+                    help="run ONLY the fused-vs-unfused epilogue comparison")
+    ap.add_argument("--backend", default="pallas_dip",
+                    help="backend for --compare-epilogues (default pallas_dip)")
+    ap.add_argument("--tiny", action="store_true",
+                    help="tiny interpret-friendly shape (CI smoke)")
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--out", default=DEFAULT_JSON,
+                    help=f"output JSON path (default {DEFAULT_JSON})")
+    args = ap.parse_args(argv)
+
+    csv_rows: List = []
+    if args.compare_epilogues:
+        m, k, n = (32, 64, 64) if args.tiny else (64, 256, 256)
+        print(f"== fused-vs-unfused epilogues ({args.backend} {m}x{k}x{n}) ==")
+        ec = compare_epilogues(
+            backend=args.backend, m=m, k=k, n=n, iters=args.iters,
+        )
+        swiglu = next(r for r in ec["results"] if r["epilogue"] == "swiglu")
+        print(f"fused SwiGLU: {swiglu['fused_pallas_calls']} kernel launch "
+              f"(vs three ops unfused: {swiglu['unfused_pallas_calls']} matmul "
+              f"launches + elementwise glue)")
+        for rec in ec["results"]:
+            csv_rows.append((f"kern_epilogue_{rec['epilogue']}_fused",
+                             rec["fused_us"], f"vs_unfused_{rec['speedup']:.2f}x"))
+        path = write_bench_json(args.out, csv_rows, ec)
+        validate_bench_json(path)
+        print(f"machine-readable record: {path}")
+        return 0
+
+    run(csv_rows, out_json=args.out)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

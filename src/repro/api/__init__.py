@@ -14,7 +14,10 @@ Two first-class concepts (see ``docs/api.md``):
   ``pallas_systolic`` / ``dip_int8w`` / ``dip_fp8``) with block sizes drawn
   from a per-shape/dtype tuning table; dispatch is weight-type aware, so a
   quantized weight routes to its scheme's kernel with zero call-site
-  changes.
+  changes.  ``matmul(..., epilogue=...)`` fuses bias / activation / SwiGLU /
+  residual into the kernels' accumulator flush where the backend supports
+  it and decomposes (same semantics, unfused) where it does not — see
+  ``docs/api.md`` §Fused epilogues and ``kernels/epilogue.py``.
 
 The tuning table is self-optimizing: ``repro.api.autotune`` (a module-level
 CLI, not imported here to keep this package light) measures candidate block
@@ -24,7 +27,9 @@ that ``repro.api.tuning`` reloads on first lookup — see ``docs/tuning.md``.
 
 from repro.api.registry import (
     DEFAULT_BACKEND,
+    EPILOGUES,
     MatmulBackend,
+    backend_epilogues,
     backend_layout,
     default_interpret,
     get_backend,
@@ -50,11 +55,13 @@ __all__ = [
     "as_dip_weight",
     "quant",
     "QuantizedDipWeight",
+    "EPILOGUES",
     "MatmulBackend",
     "register_backend",
     "get_backend",
     "list_backends",
     "backend_layout",
+    "backend_epilogues",
     "matmul",
     "default_interpret",
     "BlockConfig",

@@ -79,6 +79,7 @@ class ShapeResult:
     n: int
     measurements: Tuple[Measurement, ...]
     incumbent: BlockConfig  # what lookup_blocks returned before this run
+    epilogue: str = "none"  # fused epilogue the workload was timed with
 
     @property
     def best(self) -> Measurement:
@@ -101,19 +102,32 @@ def _timer() -> float:
     return time.perf_counter()
 
 
-def estimate_vmem_bytes(blocks: BlockConfig, dtype, out_dtype=None) -> int:
+def estimate_vmem_bytes(
+    blocks: BlockConfig, dtype, out_dtype=None, epilogue: str = "none"
+) -> int:
     """Working-set estimate for one tiled-kernel grid step.
 
     x (bm, bk) and w (bk, bn) operand blocks are double-buffered by the
     Pallas pipeline; the accumulator scratch is f32/i32 (4 bytes) at
-    (bm, bn); the output block is written once per K sweep.
+    (bm, bn); the output block is written once per K sweep.  Fused epilogues
+    shift the set: a dual-weight ``swiglu`` streams a second (bk, bn) weight
+    block and keeps a second accumulator; ``residual`` streams an extra
+    (bm, bn) operand block; the (1, bn) bias row is noise.
     """
+    from repro.kernels import epilogue as _epi
+
     item = jnp.dtype(dtype).itemsize
     out_item = jnp.dtype(out_dtype).itemsize if out_dtype is not None else item
     bm, bn, bk = blocks.block_m, blocks.block_n, blocks.block_k
     operands = 2 * (bm * bk + bk * bn) * item
     acc = bm * bn * 4
     out = 2 * bm * bn * out_item
+    spec = _epi.spec(epilogue)
+    if spec.dual_weight:
+        operands += 2 * bk * bn * item  # second weight stream
+        acc += bm * bn * 4              # second accumulator
+    if spec.residual:
+        operands += 2 * bm * bn * out_item
     return operands + acc + out
 
 
@@ -128,6 +142,7 @@ def candidate_blocks(
     vmem_budget: Optional[int] = None,
     max_candidates: Optional[int] = None,
     incumbent: Optional[BlockConfig] = None,
+    epilogue: str = "none",
 ) -> List[BlockConfig]:
     """Aligned, VMEM-feasible candidates for one workload.
 
@@ -135,7 +150,8 @@ def candidate_blocks(
     entry or the heuristic) is always candidate 0, so a tuning run can only
     improve on the status quo.  ``pallas_systolic`` pins K/N at the physical
     array dimension (the kernel tiles the wavefront per 64-wide array), so
-    only M varies there.
+    only M varies there.  ``epilogue`` feeds the VMEM working-set filter
+    (a fused swiglu/residual shrinks the feasible block space).
     """
     if max_candidates is not None and max_candidates < 1:
         raise ValueError(f"max_candidates must be >= 1, got {max_candidates}")
@@ -145,7 +161,9 @@ def candidate_blocks(
     out_dtype = jnp.dtype(jnp.int32) if dtype.kind in "iu" else dtype
     budget = vmem_budget or int(VMEM_BYTES * DEFAULT_VMEM_FRACTION)
     if incumbent is None:
-        incumbent = tuning.lookup_blocks(backend, m, k, n, dtype, perm_tile=perm_tile)
+        incumbent = tuning.lookup_blocks(
+            backend, m, k, n, dtype, perm_tile=perm_tile, epilogue=epilogue
+        )
 
     raw: List[BlockConfig] = [incumbent]
     if registry.get_backend(backend).name == "pallas_systolic":
@@ -163,46 +181,69 @@ def candidate_blocks(
         if cand in seen:
             continue
         seen.add(cand)
-        if cand != incumbent and estimate_vmem_bytes(cand, dtype, out_dtype) > budget:
+        if cand != incumbent and estimate_vmem_bytes(
+            cand, dtype, out_dtype, epilogue
+        ) > budget:
             continue
         out.append(cand)
     if max_candidates is not None and len(out) > max_candidates:
         # keep the incumbent plus the largest-working-set survivors (deep
         # blocks amortize the de-shear best; tiny blocks rarely win)
         rest = sorted(
-            out[1:], key=lambda c: estimate_vmem_bytes(c, dtype, out_dtype),
+            out[1:],
+            key=lambda c: estimate_vmem_bytes(c, dtype, out_dtype, epilogue),
             reverse=True,
         )
         out = out[:1] + rest[: max_candidates - 1]
     return out
 
 
-def _operands(backend: str, dtype, m: int, k: int, n: int, seed: int = 0):
-    """Random activation + weight pair in the layout the backend consumes.
+def _operands(backend: str, dtype, m: int, k: int, n: int, seed: int = 0,
+              epilogue: str = "none"):
+    """Random (activation, weight, epilogue_operands) triple in the layout
+    the backend consumes.
 
     For quantized (dip_q) backends ``dtype`` is the *activation* dtype — the
     weight is quantized to the backend's declared scheme, exactly as a
-    serving call site would hold it.
+    serving call site would hold it.  For the dual-weight ``swiglu``
+    epilogue the weight is the (gate, up) pair ``api.matmul`` expects; for
+    bias/residual epilogues representative operands are generated.
     """
+    from repro.kernels import epilogue as _epi
+
     r = np.random.default_rng(seed)
     dtype = jnp.dtype(dtype)
     be = registry.get_backend(backend)
-    if be.layout == "dip_q":
-        from repro.api import quant
+    spec = _epi.spec(epilogue)
 
-        x = jnp.asarray(r.normal(0, 1, (m, k)).astype(np.float32)).astype(dtype)
-        w = jnp.asarray(r.normal(0, 1, (k, n)).astype(np.float32))
-        return x, quant.quantize(w, be.scheme)
-    if dtype == jnp.dtype(jnp.int8):
-        x = r.integers(-128, 128, (m, k)).astype(np.int8)
-        w = r.integers(-128, 128, (k, n)).astype(np.int8)
+    def one_weight(seed_w):
+        rw = np.random.default_rng(seed_w)
+        if be.layout == "dip_q":
+            from repro.api import quant
+
+            w = jnp.asarray(rw.normal(0, 1, (k, n)).astype(np.float32))
+            return quant.quantize(w, be.scheme)
+        if dtype == jnp.dtype(jnp.int8):
+            w = jnp.asarray(rw.integers(-128, 128, (k, n)).astype(np.int8))
+        else:
+            w = jnp.asarray(rw.normal(0, 1, (k, n)).astype(dtype))
+        return DipWeight.from_natural(w) if be.layout == "dip" else w
+
+    if dtype == jnp.dtype(jnp.int8) and be.layout != "dip_q":
+        x = jnp.asarray(r.integers(-128, 128, (m, k)).astype(np.int8))
     else:
-        x = r.normal(0, 1, (m, k)).astype(dtype)
-        w = r.normal(0, 1, (k, n)).astype(dtype)
-    x, w = jnp.asarray(x), jnp.asarray(w)
-    if be.layout == "dip":
-        return x, DipWeight.from_natural(w)
-    return x, w
+        x = jnp.asarray(r.normal(0, 1, (m, k)).astype(np.float32)).astype(dtype)
+
+    w = one_weight(seed + 1)
+    if spec.dual_weight:
+        w = (w, one_weight(seed + 2))
+    eops = ()
+    if spec.bias:
+        eops = (jnp.asarray(r.normal(0, 1, (n,)).astype(np.float32)),)
+    elif spec.residual:
+        out_dtype = dtype if dtype.kind == "f" else jnp.dtype(jnp.float32)
+        eops = (jnp.asarray(r.normal(0, 1, (m, n)).astype(np.float32)).astype(out_dtype),)
+    return x, w, eops
 
 
 def measure_candidate(
@@ -214,11 +255,14 @@ def measure_candidate(
     iters: int = 3,
     warmup: int = 1,
     interpret: Optional[bool] = None,
+    epilogue: str = "none",
+    epilogue_operands=(),
 ) -> float:
     """Mean wall time (us) over ``iters`` compiled-and-warmed dispatches."""
     def dispatch():
         return registry.matmul(
-            x, w, backend=backend,
+            x, w, backend=backend, epilogue=epilogue,
+            epilogue_operands=epilogue_operands,
             block_m=blocks.block_m, block_n=blocks.block_n,
             block_k=blocks.block_k, interpret=interpret,
         )
@@ -240,6 +284,7 @@ def autotune_shape(
     n: int,
     dtype="float32",
     *,
+    epilogue: str = "none",
     iters: int = 3,
     warmup: int = 1,
     interpret: Optional[bool] = None,
@@ -250,7 +295,12 @@ def autotune_shape(
     cache_path=None,
     verbose: bool = False,
 ) -> ShapeResult:
-    """Measure candidates for one workload; register + persist the winner."""
+    """Measure candidates for one workload; register + persist the winner.
+
+    ``epilogue`` tunes the FUSED dispatch (and keys the measured entry on
+    it): fused kernels shift the VMEM working set, so a geometry measured
+    unfused must not be assumed optimal — or even feasible — fused.
+    """
     be = registry.get_backend(backend)
     if not be.tiled:
         raise ValueError(
@@ -263,17 +313,18 @@ def autotune_shape(
         # carries K/N zero-padded to the perm-tile grid), so the entry must be
         # keyed — and candidates generated — in that domain or it never hits
         lk, ln = DipWeight.storage_dims(k, n)
-    incumbent = tuning.lookup_blocks(be.name, lm, lk, ln, dtype)
+    incumbent = tuning.lookup_blocks(be.name, lm, lk, ln, dtype, epilogue=epilogue)
     cands = candidate_blocks(
         be.name, dtype, lm, lk, ln,
         vmem_budget=vmem_budget, max_candidates=max_candidates,
-        incumbent=incumbent,
+        incumbent=incumbent, epilogue=epilogue,
     )
-    x, w = _operands(be.name, dtype, m, k, n)
+    x, w, eops = _operands(be.name, dtype, m, k, n, epilogue=epilogue)
     measurements = []
     for cand in cands:
         t = measure_candidate(
-            be.name, x, w, cand, iters=iters, warmup=warmup, interpret=interpret
+            be.name, x, w, cand, iters=iters, warmup=warmup,
+            interpret=interpret, epilogue=epilogue, epilogue_operands=eops,
         )
         measurements.append(Measurement(cand, t))
         if verbose:
@@ -281,11 +332,13 @@ def autotune_shape(
     result = ShapeResult(
         backend=be.name, dtype=dtype_name, m=m, k=k, n=n,
         measurements=tuple(measurements), incumbent=incumbent,
+        epilogue=epilogue,
     )
     if register:
         tuning.register_measured(
             result.best.blocks, backend=be.name, dtype=dtype_name,
-            m=lm, k=lk, n=ln, time_us=result.best.time_us,
+            m=lm, k=lk, n=ln, epilogue=epilogue,
+            time_us=result.best.time_us,
             persist=persist, path=cache_path,
         )
     return result
@@ -362,6 +415,9 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="M dimension (tokens per dispatch) for --config shapes")
     ap.add_argument("--dtype", default=None,
                     help="operand dtype (default: config compute_dtype or float32)")
+    ap.add_argument("--epilogue", default="none",
+                    help="fused epilogue to tune the dispatch with (part of "
+                         "the tuning key; default: none)")
     ap.add_argument("--iters", type=int, default=3)
     ap.add_argument("--warmup", type=int, default=1)
     ap.add_argument("--max-candidates", type=int, default=None,
@@ -414,9 +470,10 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
 
     mode = "interpret" if interpret else "compiled"
     print(f"[autotune] backend={args.backend} dtype={jnp.dtype(dtype).name} "
-          f"mode={mode} iters={args.iters} shapes={len(shapes)}")
+          f"epilogue={args.epilogue} mode={mode} iters={args.iters} "
+          f"shapes={len(shapes)}")
     results = autotune_shapes(
-        args.backend, shapes, dtype,
+        args.backend, shapes, dtype, epilogue=args.epilogue,
         iters=args.iters, warmup=args.warmup, interpret=interpret,
         max_candidates=max_candidates, vmem_budget=args.vmem_budget,
         persist=not args.no_persist, cache_path=args.cache_path,

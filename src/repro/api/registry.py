@@ -1,9 +1,9 @@
 """Pluggable matmul-backend registry and the single dispatching entry point.
 
-``matmul(x, w, *, backend=None)`` is the one matmul surface the rest of the
-system calls — models, serving, training, benchmarks.  Backends are
-registered under a name (``register_backend``) and declare the weight layout
-they consume:
+``matmul(x, w, *, backend=None, epilogue=None)`` is the one matmul surface
+the rest of the system calls — models, serving, training, benchmarks.
+Backends are registered under a name (``register_backend``) and declare the
+weight layout they consume:
 
     layout="natural"   plain (K, N) weights; a ``DipWeight`` argument is
                        de-sheared first (a jnp gather — the distributed /
@@ -36,19 +36,31 @@ quantized backend, and any *other* backend given a quantized weight
 dequantizes it to the layout it consumes (the GSPMD/XLA path for serving
 quantized checkpoints through plain dots).
 
+Fused epilogues (``kernels/epilogue.py``): backends declare which epilogues
+their kernels fuse into the accumulator flush (``MatmulBackend.epilogues``).
+``matmul(..., epilogue="bias_silu", epilogue_operands=(b,))`` dispatches the
+fused kernel when the backend supports it and **decomposes** otherwise —
+the unfused matmul(s) followed by the same f32 epilogue arithmetic — so the
+``xla``/GSPMD path keeps working unchanged and results agree across paths.
+``epilogue="swiglu"`` takes a weight *pair* ``w=(w_gate, w_up)`` and fuses
+both projections plus the gating product into one kernel launch.
+
 Tiled backends share one padding/batching shim and a per-backend
 ``custom_vjp`` (Pallas kernels have no JVP rule; the backward runs plain XLA
 matmuls, with the cotangent re-permutated for dip-layout storage — the
 permutation is orthogonal, so ``d/dP f(unperm(P)) = perm(d/dW f(W))``).
-Block sizes come from the tuning table (repro.api.tuning) unless the caller
-pins them.
+Fused-epilogue backwards recompute the pre-activation from the saved matmul
+residuals (one extra XLA matmul per weight) and differentiate the epilogue
+exactly — gradients match the decomposed path to f32 tolerance.  Block
+sizes come from the tuning table (repro.api.tuning, keyed on the epilogue
+too) unless the caller pins them.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, Dict, List, Optional, Union
+from typing import Callable, Dict, FrozenSet, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 import jax
@@ -58,6 +70,7 @@ from repro.api import quant, tuning
 from repro.api.quant import QuantizedDipWeight
 from repro.api.weights import PERM_TILE, DipWeight, as_dip_weight
 from repro.core import permute
+from repro.kernels import epilogue as epilogue_lib
 
 __all__ = [
     "MatmulBackend",
@@ -65,12 +78,16 @@ __all__ = [
     "get_backend",
     "list_backends",
     "backend_layout",
+    "backend_epilogues",
     "matmul",
     "default_interpret",
     "DEFAULT_BACKEND",
+    "EPILOGUES",
 ]
 
 DEFAULT_BACKEND = "xla"
+
+EPILOGUES = epilogue_lib.EPILOGUES
 
 _LAYOUTS = ("natural", "dip", "dip_q")
 
@@ -97,36 +114,70 @@ def _flatten_batch(x: jax.Array):
     return x.reshape((-1, x.shape[-1])), lead
 
 
+def _f32(t: jax.Array) -> jax.Array:
+    return t.astype(jnp.float32)
+
+
+def _epilogue_recompute(epilogue: str, x32, wns32, eops32):
+    """Recompute ``epilogue(x @ w ...)`` from the saved matmul residuals in
+    f32 — the backward differentiates THIS with jax.vjp, so fused gradients
+    are the exact gradients of the fused math (pre-activations recomputed,
+    never stored)."""
+    zs = [jnp.matmul(x32, wn) for wn in wns32]
+    if epilogue_lib.spec(epilogue).dual_weight:
+        return epilogue_lib.apply(epilogue, zs[0], zs[1])
+    return epilogue_lib.apply(epilogue, zs[0], *eops32)
+
+
 def _build_tiled_caller(fn: Callable, layout: str):
     """custom_vjp wrapper around one 2-D padded kernel invocation.
 
-    Pallas calls with scratch accumulators have no jvp rule, so the backward
-    runs plain XLA matmuls.  For dip-layout storage the weight cotangent is
-    the permutated gradient of the natural weight.
+    ``ws`` is the tuple of weight storages (two for the dual-weight
+    ``swiglu`` epilogue) and ``eops`` the tuple of non-weight epilogue
+    operands (bias row / residual block), both already padded.  Pallas calls
+    with scratch accumulators have no jvp rule, so the backward recomputes
+    the pre-activation(s) with plain XLA matmuls and differentiates the
+    shared epilogue definition.  For dip-layout storage the weight cotangent
+    is the permutated gradient of the natural weight.
     """
 
-    @functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
-    def call(x2, w2, opts):
-        block_m, block_n, block_k, perm_tile, interpret = opts
-        return fn(
-            x2, w2, block_m=block_m, block_n=block_n, block_k=block_k,
+    @functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+    def call(x2, ws, eops, opts):
+        block_m, block_n, block_k, perm_tile, interpret, epilogue = opts
+        kw = dict(
+            block_m=block_m, block_n=block_n, block_k=block_k,
             perm_tile=perm_tile, interpret=interpret,
         )
+        if epilogue != "none":
+            kw["epilogue"] = epilogue
+        return fn(x2, ws[0], *ws[1:], *eops, **kw)
 
-    def fwd(x2, w2, opts):
-        return call(x2, w2, opts), (x2, w2)
+    def fwd(x2, ws, eops, opts):
+        return call(x2, ws, eops, opts), (x2, ws, eops)
 
     def bwd(opts, res, g):
-        perm_tile = opts[3]
-        x2, w2 = res
-        wn = permute.unpermute_tiled(w2, perm_tile) if layout == "dip" else w2
-        g32 = g.astype(jnp.float32)
-        dx = jnp.matmul(g32, wn.astype(jnp.float32).T).astype(x2.dtype)
-        dwn = jnp.matmul(x2.astype(jnp.float32).T, g32)
-        dw = (
-            permute.permute_tiled(dwn, perm_tile) if layout == "dip" else dwn
-        ).astype(w2.dtype)
-        return dx, dw
+        perm_tile, epilogue = opts[3], opts[5]
+        x2, ws, eops = res
+        wns32 = tuple(
+            _f32(permute.unpermute_tiled(w, perm_tile) if layout == "dip" else w)
+            for w in ws
+        )
+        eops32 = tuple(_f32(e) for e in eops)
+        _, vjp = jax.vjp(
+            lambda x, wns, eo: _epilogue_recompute(epilogue, x, wns, eo),
+            _f32(x2), wns32, eops32,
+        )
+        dx, dwns, deops = vjp(_f32(g))
+        dws = tuple(
+            (permute.permute_tiled(dwn, perm_tile) if layout == "dip" else dwn
+             ).astype(w.dtype)
+            for dwn, w in zip(dwns, ws)
+        )
+        return (
+            dx.astype(x2.dtype),
+            dws,
+            tuple(d.astype(e.dtype) for d, e in zip(deops, eops)),
+        )
 
     call.defvjp(fwd, bwd)
     return call
@@ -135,36 +186,58 @@ def _build_tiled_caller(fn: Callable, layout: str):
 def _build_quantized_caller(fn: Callable):
     """custom_vjp wrapper for quantized (dip_q) kernels.
 
+    ``qws`` is a tuple of ``(storage, scale)`` pairs (two for ``swiglu``).
     Forward runs the quantized kernel; backward differentiates through the
     *dequantized* weight (straight-through w.r.t. the activations — the
-    standard inference-time treatment).  The quantized storage and its
-    scales are frozen artifacts of an offline calibration, so their
-    cotangents are zero: float0 for integer storage (JAX's tangent dtype for
-    ints), zeros of the storage dtype for fp8.
+    standard inference-time treatment) and through the epilogue exactly.
+    The quantized storage and its scales are frozen artifacts of an offline
+    calibration, so their cotangents are zero: float0 for integer storage
+    (JAX's tangent dtype for ints), zeros of the storage dtype for fp8.
     """
 
     @functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
-    def call(x2, q2, ws, opts):
-        block_m, block_n, block_k, perm_tile, interpret = opts
-        return fn(
-            x2, q2, ws, block_m=block_m, block_n=block_n, block_k=block_k,
+    def call(x2, qws, eops, opts):
+        block_m, block_n, block_k, perm_tile, interpret, epilogue = opts
+        kw = dict(
+            block_m=block_m, block_n=block_n, block_k=block_k,
             perm_tile=perm_tile, interpret=interpret,
         )
+        if epilogue != "none":
+            kw["epilogue"] = epilogue
+        (q0, s0), rest = qws[0], qws[1:]
+        extra = tuple(t for pair in rest for t in pair) + tuple(eops)
+        return fn(x2, q0, s0, *extra, **kw)
 
-    def fwd(x2, q2, ws, opts):
-        return call(x2, q2, ws, opts), (x2, q2, ws)
+    def fwd(x2, qws, eops, opts):
+        return call(x2, qws, eops, opts), (x2, qws, eops)
 
     def bwd(opts, res, g):
-        perm_tile = opts[3]
-        x2, q2, ws = res
-        wn = permute.unpermute_tiled(q2, perm_tile).astype(jnp.float32) * ws
-        dx = jnp.matmul(g.astype(jnp.float32), wn.T).astype(x2.dtype)
-        dq = (
-            np.zeros(q2.shape, jax.dtypes.float0)
-            if jnp.issubdtype(q2.dtype, jnp.integer)
-            else jnp.zeros(q2.shape, q2.dtype)
+        perm_tile, epilogue = opts[3], opts[5]
+        x2, qws, eops = res
+        wns32 = tuple(
+            _f32(permute.unpermute_tiled(q, perm_tile)) * _f32(s)
+            for q, s in qws
         )
-        return dx, dq, jnp.zeros(ws.shape, ws.dtype)
+        eops32 = tuple(_f32(e) for e in eops)
+        _, vjp = jax.vjp(
+            lambda x, eo: _epilogue_recompute(epilogue, x, wns32, eo),
+            _f32(x2), eops32,
+        )
+        dx, deops = vjp(_f32(g))
+
+        def zero_storage(q):
+            if jnp.issubdtype(q.dtype, jnp.integer):
+                return np.zeros(q.shape, jax.dtypes.float0)
+            return jnp.zeros(q.shape, q.dtype)
+
+        dqws = tuple(
+            (zero_storage(q), jnp.zeros(s.shape, s.dtype)) for q, s in qws
+        )
+        return (
+            dx.astype(x2.dtype),
+            dqws,
+            tuple(d.astype(e.dtype) for d, e in zip(deops, eops)),
+        )
 
     call.defvjp(fwd, bwd)
     return call
@@ -178,18 +251,23 @@ class MatmulBackend:
 
     ``fn`` contract for tiled backends (``tiled=True``)::
 
-        fn(x2, w2, *, block_m, block_n, block_k, perm_tile, interpret) -> out2
+        fn(x2, w2, *epilogue_operands, block_m, block_n, block_k,
+           perm_tile, interpret[, epilogue]) -> out2
 
-    with 2-D operands already padded to block multiples.  Quantized backends
-    (``layout="dip_q"``) take one extra positional operand::
+    with 2-D operands already padded to block multiples.  ``epilogue`` is
+    only passed when it is not ``"none"`` (so epilogue-unaware backends keep
+    the historical contract); ``epilogue_operands`` then carries the second
+    weight for ``swiglu``, the (1, Np) bias row, or the (Mp, Np) residual.
+    Quantized backends (``layout="dip_q"``) take the scale after the
+    storage::
 
-        fn(x2, q2, w_scale, *, block_m, block_n, block_k, perm_tile,
-           interpret) -> out2
+        fn(x2, q2, w_scale, *epilogue_operands, ...) -> out2
 
-    with ``q2`` the quantized permutated storage and ``w_scale`` the (1, Np)
-    per-output-channel scales.  Non-tiled backends (``tiled=False``, e.g.
-    ``xla``) receive ``fn(x, w_natural)`` with the original leading batch
-    dims and must be natively differentiable.
+    where for ``swiglu`` the operands are ``(q_up, w_scale_up)``.  Non-tiled
+    backends (``tiled=False``, e.g. ``xla``) receive ``fn(x, w_natural)``
+    with the original leading batch dims and must be natively
+    differentiable; they cannot fuse epilogues (``matmul`` decomposes for
+    them).
     """
 
     name: str
@@ -199,6 +277,7 @@ class MatmulBackend:
     description: str = ""
     caller: Optional[Callable] = None  # custom_vjp'd tiled invocation
     scheme: Optional[str] = None       # quantization scheme (dip_q layouts)
+    epilogues: FrozenSet[str] = frozenset({"none"})  # fused-epilogue support
 
 
 _REGISTRY: Dict[str, MatmulBackend] = {}
@@ -223,6 +302,7 @@ def register_backend(
     tiled: bool = True,
     description: str = "",
     scheme: Optional[str] = None,
+    epilogues: Sequence[str] = ("none",),
     overwrite: bool = False,
 ):
     """Register a matmul backend (usable as a decorator).
@@ -230,12 +310,15 @@ def register_backend(
     New kernels and precisions plug in here instead of growing another
     ``elif`` ladder at every call site.  Quantized backends declare
     ``layout="dip_q"`` plus the ``scheme`` they consume (see
-    ``repro.api.quant.SCHEMES``).
+    ``repro.api.quant.SCHEMES``).  ``epilogues`` lists the fused-epilogue
+    variants the kernel applies in its flush (``kernels/epilogue.py``);
+    ``matmul`` decomposes any epilogue the backend does not declare.
     """
     if fn is None:
         return functools.partial(
             register_backend, name, layout=layout, tiled=tiled,
-            description=description, scheme=scheme, overwrite=overwrite,
+            description=description, scheme=scheme, epilogues=epilogues,
+            overwrite=overwrite,
         )
     if layout not in _LAYOUTS:
         raise ValueError(f"layout must be one of {_LAYOUTS}, got {layout!r}")
@@ -251,6 +334,15 @@ def register_backend(
         raise ValueError(
             f"scheme={scheme!r} is only meaningful for dip_q-layout backends"
         )
+    for e in epilogues:
+        epilogue_lib.spec(e)  # raises on unknown names
+    epilogue_set = frozenset(epilogues) | {"none"}
+    if not tiled and epilogue_set != {"none"}:
+        raise ValueError(
+            "non-tiled backends cannot fuse epilogues (there is no flush "
+            "stage to fuse into) — matmul decomposes for them; drop the "
+            "epilogues declaration"
+        )
     _ensure_builtins()
     if name in _REGISTRY and not overwrite:
         raise ValueError(f"backend {name!r} already registered (overwrite=True to replace)")
@@ -263,6 +355,7 @@ def register_backend(
     _REGISTRY[name] = MatmulBackend(
         name=name, layout=layout, fn=fn, tiled=tiled,
         description=description, caller=caller, scheme=scheme,
+        epilogues=epilogue_set,
     )
     return fn
 
@@ -288,31 +381,59 @@ def backend_layout(name: Optional[str] = None) -> str:
     return get_backend(name).layout
 
 
+def backend_epilogues(name: Optional[str] = None) -> List[str]:
+    """Epilogues the named backend fuses in-kernel (always includes
+    "none"); anything else is decomposed by ``matmul``."""
+    return sorted(get_backend(name).epilogues)
+
+
 # --------------------------------------------------------------------------
 # dispatch
 def _tiled_dispatch(
     be: MatmulBackend,
     x: jax.Array,
-    w2: jax.Array,
+    ws: Tuple[jax.Array, ...],
     out_cols: int,
     perm_tile: int,
     block_m: Optional[int],
     block_n: Optional[int],
     block_k: Optional[int],
     interpret: Optional[bool],
+    epilogue: str,
+    operands: Tuple[jax.Array, ...],
 ) -> jax.Array:
     if interpret is None:
         interpret = default_interpret()
     x2, lead = _flatten_batch(x)
-    m, k, n = x2.shape[0], w2.shape[-2], w2.shape[-1]
-    blocks = tuning.lookup_blocks(be.name, m, k, n, x2.dtype, perm_tile=perm_tile)
+    m, k, n = x2.shape[0], ws[0].shape[-2], ws[0].shape[-1]
+    blocks = tuning.lookup_blocks(
+        be.name, m, k, n, x2.dtype, perm_tile=perm_tile, epilogue=epilogue
+    )
     bm = block_m or blocks.block_m
     bn = block_n or blocks.block_n
     bk = block_k or blocks.block_k
     x2 = _pad_dim(_pad_dim(x2, 0, bm), 1, bk)
-    w2 = _pad_dim(_pad_dim(w2, 0, bk), 1, bn)
-    out = be.caller(x2, w2, (bm, bn, bk, perm_tile, interpret))
+    ws2 = tuple(_pad_dim(_pad_dim(w, 0, bk), 1, bn) for w in ws)
+    eops2 = _padded_epilogue_operands(epilogue, operands, out_cols, bm, bn)
+    out = be.caller(x2, ws2, eops2, (bm, bn, bk, perm_tile, interpret, epilogue))
     return out[:m, :out_cols].reshape(lead + (out_cols,))
+
+
+def _padded_epilogue_operands(
+    epilogue: str, operands: Tuple[jax.Array, ...], out_cols: int,
+    bm: int, bn: int,
+) -> Tuple[jax.Array, ...]:
+    """Bias rides as a (1, Np) row, residual as an (Mp, Np) block; padding
+    is zeros (cropped from the output; the activation of a padded region is
+    computed and discarded — no NaN sources at 0)."""
+    spec = epilogue_lib.spec(epilogue)
+    if spec.bias:
+        b = operands[0].reshape(1, out_cols)
+        return (_pad_dim(b, 1, bn),)
+    if spec.residual:
+        r2 = operands[0].reshape(-1, out_cols)
+        return (_pad_dim(_pad_dim(r2, 0, bm), 1, bn),)
+    return ()
 
 
 def _validated_dip_x(x: jax.Array, dw) -> jax.Array:
@@ -344,70 +465,206 @@ def _validated_dip_x(x: jax.Array, dw) -> jax.Array:
 def _quantized_dispatch(
     be: MatmulBackend,
     x: jax.Array,
-    qw: QuantizedDipWeight,
+    qws: Tuple[QuantizedDipWeight, ...],
     block_m: Optional[int],
     block_n: Optional[int],
     block_k: Optional[int],
     interpret: Optional[bool],
+    epilogue: str,
+    operands: Tuple[jax.Array, ...],
 ) -> jax.Array:
     if interpret is None:
         interpret = default_interpret()
+    qw = qws[0]
     x2, lead = _flatten_batch(x)
-    q2, ws = qw.data, qw.scale
+    q2 = qw.data
     m, k, n = x2.shape[0], q2.shape[-2], q2.shape[-1]
     # keyed on the ACTIVATION dtype: that is what varies per call site; the
     # storage dtype is fixed by the backend's scheme
-    blocks = tuning.lookup_blocks(be.name, m, k, n, x2.dtype, perm_tile=qw.perm_tile)
+    blocks = tuning.lookup_blocks(
+        be.name, m, k, n, x2.dtype, perm_tile=qw.perm_tile, epilogue=epilogue
+    )
     bm = block_m or blocks.block_m
     bn = block_n or blocks.block_n
     bk = block_k or blocks.block_k
     x2 = _pad_dim(_pad_dim(x2, 0, bm), 1, bk)
-    q2 = _pad_dim(_pad_dim(q2, 0, bk), 1, bn)
-    ws = _pad_dim(ws, 1, bn)  # padded columns are zero storage; scale value moot
-    out = be.caller(x2, q2, ws, (bm, bn, bk, qw.perm_tile, interpret))
+    pairs = tuple(
+        # padded columns are zero storage; scale value moot
+        (_pad_dim(_pad_dim(w.data, 0, bk), 1, bn), _pad_dim(w.scale, 1, bn))
+        for w in qws
+    )
+    eops2 = _padded_epilogue_operands(epilogue, operands, qw.d_out, bm, bn)
+    out = be.caller(x2, pairs, eops2, (bm, bn, bk, qw.perm_tile, interpret, epilogue))
     return out[:m, : qw.d_out].reshape(lead + (qw.d_out,))
+
+
+def _logical_dims(w) -> Tuple[int, int]:
+    if isinstance(w, (DipWeight, QuantizedDipWeight)):
+        return w.d_in, w.d_out
+    if getattr(w, "ndim", None) != 2:
+        raise ValueError(f"matmul weight must be 2-D, got shape {getattr(w, 'shape', None)}")
+    return int(w.shape[-2]), int(w.shape[-1])
+
+
+def _check_epilogue_inputs(x, weights, epilogue: str, operands) -> None:
+    """Shape/type validation shared by the fused and decomposed paths."""
+    spec = epilogue_lib.spec(epilogue)
+    if spec.dual_weight:
+        wg, wu = weights
+        if type(wg) is not type(wu):
+            raise ValueError(
+                f"epilogue {epilogue!r} weight pair must share a type, got "
+                f"{type(wg).__name__} / {type(wu).__name__}"
+            )
+        if _logical_dims(wg) != _logical_dims(wu):
+            raise ValueError(
+                f"epilogue {epilogue!r} weight pair must share logical dims, "
+                f"got {_logical_dims(wg)} / {_logical_dims(wu)}"
+            )
+        if isinstance(wg, QuantizedDipWeight) and wg.scheme != wu.scheme:
+            raise ValueError(
+                f"epilogue {epilogue!r} weight pair must share a quantization "
+                f"scheme, got {wg.scheme!r} / {wu.scheme!r}"
+            )
+    d_out = _logical_dims(weights[0])[1]
+    if spec.bias:
+        b = operands[0]
+        if b.shape not in ((d_out,), (1, d_out)):
+            raise ValueError(
+                f"epilogue {epilogue!r} bias must be ({d_out},) or (1, {d_out}), "
+                f"got {b.shape}"
+            )
+    if spec.residual:
+        r = operands[0]
+        want = tuple(x.shape[:-1]) + (d_out,)
+        if tuple(r.shape) != want:
+            raise ValueError(
+                f"epilogue {epilogue!r} residual must match the output shape "
+                f"{want}, got {r.shape}"
+            )
+
+
+def _decomposed_epilogue(
+    be: MatmulBackend,
+    x: jax.Array,
+    weights,
+    epilogue: str,
+    operands,
+    block_m, block_n, block_k, interpret,
+) -> jax.Array:
+    """Unfused fallback for backends without in-kernel epilogue support:
+    the plain matmul(s) through the same backend, then the SAME f32 epilogue
+    arithmetic (kernels/epilogue.py) as an ordinary jnp expression — XLA is
+    free to fuse it; semantics and gradients match the fused path."""
+    outs = [
+        matmul(
+            x, w, backend=be.name, block_m=block_m, block_n=block_n,
+            block_k=block_k, interpret=interpret,
+        )
+        for w in weights
+    ]
+    if epilogue_lib.spec(epilogue).dual_weight:
+        aux = (_f32(outs[1]),)
+    else:
+        aux = tuple(_f32(op) for op in operands)
+    # same output-dtype rule as the fused kernels: the epilogue computes in
+    # f32, so an integer-accumulating matmul yields a FLOAT result (casting
+    # back to int here would silently truncate and diverge from fused paths)
+    out_dtype = (
+        outs[0].dtype if jnp.issubdtype(outs[0].dtype, jnp.floating)
+        else jnp.float32
+    )
+    return epilogue_lib.apply(epilogue, _f32(outs[0]), *aux).astype(out_dtype)
 
 
 def matmul(
     x: jax.Array,
-    w: Union[jax.Array, DipWeight, QuantizedDipWeight],
+    w: Union[jax.Array, DipWeight, QuantizedDipWeight, tuple, list],
     *,
     backend: Optional[str] = None,
+    epilogue: Optional[str] = None,
+    epilogue_operands: Sequence[jax.Array] = (),
     block_m: Optional[int] = None,
     block_n: Optional[int] = None,
     block_k: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
-    """``x @ w`` through a registered backend.
+    """``epilogue(x @ w)`` through a registered backend.
 
     ``x``: (..., d_in); ``w``: natural (d_in, d_out) array, ``DipWeight``,
-    or ``QuantizedDipWeight``.  Returns (..., d_out).  The weight is adapted
-    to the backend's declared layout (a ``QuantizedDipWeight`` with no
-    explicit backend dispatches to its scheme's quantized kernel; other
-    backends receive it dequantized); block sizes default to the tuning
-    table; ``interpret`` defaults to compiled-on-TPU / interpreted-elsewhere.
+    or ``QuantizedDipWeight`` — or a pair of those for the dual-weight
+    ``swiglu`` epilogue.  Returns (..., d_out).  The weight is adapted to
+    the backend's declared layout (a ``QuantizedDipWeight`` with no explicit
+    backend dispatches to its scheme's quantized kernel; other backends
+    receive it dequantized); block sizes default to the tuning table (keyed
+    on the epilogue too); ``interpret`` defaults to compiled-on-TPU /
+    interpreted-elsewhere.
+
+    ``epilogue`` (default ``"none"``) selects a fused flush-stage epilogue
+    (``kernels/epilogue.py``): ``bias`` / ``bias_gelu`` / ``bias_silu``
+    take ``epilogue_operands=(b,)``; ``residual`` takes ``(r,)`` of the
+    output's shape; ``swiglu`` takes the weight pair through ``w`` and no
+    operands.  Backends that do not fuse the requested epilogue decompose
+    to the unfused path with identical semantics.
     """
-    if backend is None and isinstance(w, QuantizedDipWeight):
-        backend = w.default_backend
+    epilogue = epilogue or "none"
+    spec = epilogue_lib.spec(epilogue)
+    operands = tuple(epilogue_operands)
+
+    if spec.dual_weight:
+        if not (isinstance(w, (tuple, list)) and len(w) == 2):
+            raise ValueError(
+                f"epilogue {epilogue!r} consumes a (w_gate, w_up) weight pair"
+            )
+        weights = tuple(w)
+    else:
+        if isinstance(w, (tuple, list)):
+            raise ValueError(
+                f"a weight pair is only valid with the dual-weight 'swiglu' "
+                f"epilogue (got epilogue={epilogue!r})"
+            )
+        weights = (w,)
+    n_expected = 0 if spec.dual_weight else spec.n_operands
+    if len(operands) != n_expected:
+        raise ValueError(
+            f"epilogue {epilogue!r} takes {n_expected} epilogue_operands, "
+            f"got {len(operands)}"
+        )
+
+    if backend is None and isinstance(weights[0], QuantizedDipWeight):
+        backend = weights[0].default_backend
     be = get_backend(backend)
 
-    if be.layout == "dip_q":
-        if isinstance(w, QuantizedDipWeight):
-            if w.scheme != be.scheme:
-                raise ValueError(
-                    f"backend {be.name!r} consumes scheme {be.scheme!r} but "
-                    f"the weight is quantized as {w.scheme!r} — requantize "
-                    "from the float weight (api.quant.quantize)"
-                )
-            qw = w
-        else:
-            # one-off convenience, mirroring the dip-layout path: models
-            # hoist this through quantize() at parameter init instead
-            qw = quant.quantize(w, be.scheme)
-        xk = _validated_dip_x(x, qw)
-        return _quantized_dispatch(be, xk, qw, block_m, block_n, block_k, interpret)
+    if epilogue != "none":
+        _check_epilogue_inputs(x, weights, epilogue, operands)
+        if epilogue not in be.epilogues:
+            return _decomposed_epilogue(
+                be, x, weights, epilogue, operands,
+                block_m, block_n, block_k, interpret,
+            )
 
-    if isinstance(w, QuantizedDipWeight):
+    if be.layout == "dip_q":
+        qws = []
+        for wi in weights:
+            if isinstance(wi, QuantizedDipWeight):
+                if wi.scheme != be.scheme:
+                    raise ValueError(
+                        f"backend {be.name!r} consumes scheme {be.scheme!r} but "
+                        f"the weight is quantized as {wi.scheme!r} — requantize "
+                        "from the float weight (api.quant.quantize)"
+                    )
+                qws.append(wi)
+            else:
+                # one-off convenience, mirroring the dip-layout path: models
+                # hoist this through quantize() at parameter init instead
+                qws.append(quant.quantize(wi, be.scheme))
+        xk = _validated_dip_x(x, qws[0])
+        return _quantized_dispatch(
+            be, xk, tuple(qws), block_m, block_n, block_k, interpret,
+            epilogue, operands,
+        )
+
+    if any(isinstance(wi, QuantizedDipWeight) for wi in weights):
         # non-quantized backend: fold the scales back in once and take the
         # backend's normal path (the GSPMD/XLA route for quantized weights).
         # Dequantize AT the activation dtype — an unconditional f32 weight
@@ -416,25 +673,36 @@ def matmul(
         deq_dtype = (
             x.dtype if jnp.issubdtype(x.dtype, jnp.floating) else jnp.float32
         )
-        w = quant.dequantize(w, deq_dtype)
-
-    if be.layout == "dip":
-        dw = as_dip_weight(w)
-        xk = _validated_dip_x(x, dw)
-        return _tiled_dispatch(
-            be, xk, dw.data, dw.d_out, dw.perm_tile,
-            block_m, block_n, block_k, interpret,
+        weights = tuple(
+            quant.dequantize(wi, deq_dtype)
+            if isinstance(wi, QuantizedDipWeight) else wi
+            for wi in weights
         )
 
-    wn = w.to_natural() if isinstance(w, DipWeight) else w
-    if wn.ndim != 2:
-        raise ValueError(f"matmul weight must be 2-D, got {wn.shape}")
-    if x.shape[-1] != wn.shape[-2]:
-        raise ValueError(f"contraction mismatch: x {x.shape} @ w {wn.shape}")
+    if be.layout == "dip":
+        dws = tuple(as_dip_weight(wi) for wi in weights)
+        xk = _validated_dip_x(x, dws[0])
+        return _tiled_dispatch(
+            be, xk, tuple(dw.data for dw in dws), dws[0].d_out,
+            dws[0].perm_tile, block_m, block_n, block_k, interpret,
+            epilogue, operands,
+        )
+
+    wns = tuple(
+        wi.to_natural() if isinstance(wi, DipWeight) else wi for wi in weights
+    )
+    for wn in wns:
+        if wn.ndim != 2:
+            raise ValueError(f"matmul weight must be 2-D, got {wn.shape}")
+        if x.shape[-1] != wn.shape[-2]:
+            raise ValueError(f"contraction mismatch: x {x.shape} @ w {wn.shape}")
     if not be.tiled:
-        return be.fn(x, wn)
+        # non-tiled backends never fuse (registration enforces it), so any
+        # epilogue was decomposed above
+        return be.fn(x, wns[0])
     return _tiled_dispatch(
-        be, x, wn, wn.shape[-1], PERM_TILE, block_m, block_n, block_k, interpret
+        be, x, wns, wns[0].shape[-1], PERM_TILE, block_m, block_n, block_k,
+        interpret, epilogue, operands,
     )
 
 
@@ -453,29 +721,35 @@ def _register_builtins() -> None:
         # (2x collective + activation bytes; §Perf iteration 3).
         return jnp.matmul(x, wn)
 
-    def ws_fn(x2, w2, *, block_m, block_n, block_k, perm_tile, interpret):
+    def ws_fn(x2, w2, *eops, block_m, block_n, block_k, perm_tile, interpret,
+              epilogue="none"):
         del perm_tile
         return ws_matmul_pallas(
-            x2, w2, block_m=block_m, block_n=block_n, block_k=block_k,
-            interpret=interpret,
+            x2, w2, *eops, block_m=block_m, block_n=block_n, block_k=block_k,
+            interpret=interpret, epilogue=epilogue,
         )
 
-    def dip_fn(x2, p2, *, block_m, block_n, block_k, perm_tile, interpret):
+    def dip_fn(x2, p2, *eops, block_m, block_n, block_k, perm_tile, interpret,
+               epilogue="none"):
         return dip_matmul_pallas(
-            x2, p2, block_m=block_m, block_n=block_n, block_k=block_k,
-            perm_tile=perm_tile, interpret=interpret,
+            x2, p2, *eops, block_m=block_m, block_n=block_n, block_k=block_k,
+            perm_tile=perm_tile, interpret=interpret, epilogue=epilogue,
         )
 
-    def systolic_fn(x2, p2, *, block_m, block_n, block_k, perm_tile, interpret):
+    def systolic_fn(x2, p2, *eops, block_m, block_n, block_k, perm_tile,
+                    interpret, epilogue="none"):
         del block_n, block_k
         return dip_systolic_pallas(
-            x2, p2, block_m=block_m, array_n=perm_tile, interpret=interpret
+            x2, p2, *eops, block_m=block_m, array_n=perm_tile,
+            interpret=interpret, epilogue=epilogue,
         )
 
-    def quant_fn(x2, q2, ws, *, block_m, block_n, block_k, perm_tile, interpret):
+    def quant_fn(x2, q2, ws, *eops, block_m, block_n, block_k, perm_tile,
+                 interpret, epilogue="none"):
         return dip_matmul_q_pallas(
-            x2, q2, ws, block_m=block_m, block_n=block_n, block_k=block_k,
-            perm_tile=perm_tile, interpret=interpret,
+            x2, q2, ws, *eops, block_m=block_m, block_n=block_n,
+            block_k=block_k, perm_tile=perm_tile, interpret=interpret,
+            epilogue=epilogue,
         )
 
     register_backend(
@@ -483,25 +757,27 @@ def _register_builtins() -> None:
         description="XLA/GSPMD dot (default; de-shears DipWeight as a gather)",
     )
     register_backend(
-        "ws", ws_fn, layout="natural",
+        "ws", ws_fn, layout="natural", epilogues=EPILOGUES,
         description="weight-stationary tiled Pallas kernel (baseline)",
     )
     register_backend(
-        "pallas_dip", dip_fn, layout="dip",
+        "pallas_dip", dip_fn, layout="dip", epilogues=EPILOGUES,
         description="fused de-shear + MXU Pallas kernel (paper fast path)",
     )
     register_backend(
-        "pallas_systolic", systolic_fn, layout="dip",
+        "pallas_systolic", systolic_fn, layout="dip", epilogues=EPILOGUES,
         description="wavefront-emulation Pallas kernel (validation path)",
     )
     register_backend(
         "dip_int8w", quant_fn, layout="dip_q", scheme="int8",
+        epilogues=EPILOGUES,
         description="W8A8-dynamic int8 kernel: per-row int8 acts x "
                     "per-column int8 weights, int32 accumulation, fused "
                     "scale-on-output (ADiP-style mixed precision)",
     )
     register_backend(
         "dip_fp8", quant_fn, layout="dip_q", scheme="fp8_e4m3",
+        epilogues=EPILOGUES,
         description="fp8-e4m3-weight kernel: device-gated compute width "
                     "with emulated (f32) fallback, fused scale-on-output",
     )

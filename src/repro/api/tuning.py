@@ -59,6 +59,13 @@ class TuningEntry:
     ``max_*`` bound the rule from above (applies while m <= max_m, ...);
     ``min_*`` from below.  Measured entries pin both to the benchmarked
     problem so they never leak onto shapes that were not timed.
+
+    ``epilogue`` is part of the key: a fused epilogue shifts the VMEM
+    working set (a dual-weight ``swiglu`` doubles the streamed weight bytes
+    and adds a second accumulator; ``residual`` streams an extra (bm, bn)
+    block), so a block geometry measured unfused must not leak onto fused
+    dispatches.  ``None`` matches any epilogue (heuristic built-ins);
+    measured entries pin the exact epilogue they were timed with.
     """
 
     blocks: BlockConfig
@@ -70,12 +77,15 @@ class TuningEntry:
     min_m: Optional[int] = None
     min_k: Optional[int] = None
     min_n: Optional[int] = None
+    epilogue: Optional[str] = None      # None = any epilogue
     source: str = "user"                # user | measured | cache | builtin
 
-    def matches(self, backend: str, dtype: str, m: int, k: int, n: int) -> bool:
+    def matches(self, backend: str, dtype: str, m: int, k: int, n: int,
+                epilogue: str = "none") -> bool:
         return (
             (self.backend is None or self.backend == backend)
             and (self.dtype is None or self.dtype == dtype)
+            and (self.epilogue is None or self.epilogue == epilogue)
             and (self.max_m is None or m <= self.max_m)
             and (self.max_k is None or k <= self.max_k)
             and (self.max_n is None or n <= self.max_n)
@@ -99,6 +109,7 @@ def register_tuning(
     min_m: Optional[int] = None,
     min_k: Optional[int] = None,
     min_n: Optional[int] = None,
+    epilogue: Optional[str] = None,
     source: str = "user",
 ) -> TuningEntry:
     """Add a tuning rule (most recently registered wins on overlap).
@@ -109,7 +120,8 @@ def register_tuning(
     entry = TuningEntry(
         blocks=BlockConfig(*blocks), backend=backend, dtype=dtype,
         max_m=max_m, max_k=max_k, max_n=max_n,
-        min_m=min_m, min_k=min_k, min_n=min_n, source=source,
+        min_m=min_m, min_k=min_k, min_n=min_n, epilogue=epilogue,
+        source=source,
     )
     _TABLE.insert(0, entry)
     return entry
@@ -137,13 +149,14 @@ def clamp_blocks(
 
 
 def lookup_blocks(
-    backend: str, m: int, k: int, n: int, dtype, *, perm_tile: int = PERM_TILE
+    backend: str, m: int, k: int, n: int, dtype, *, perm_tile: int = PERM_TILE,
+    epilogue: str = "none",
 ) -> BlockConfig:
     """Resolve block sizes for one dispatch (before caller overrides)."""
     _ensure_cache_loaded()
     dtype_name = jnp.dtype(dtype).name
     for entry in _TABLE:
-        if entry.matches(backend, dtype_name, m, k, n):
+        if entry.matches(backend, dtype_name, m, k, n, epilogue):
             return clamp_blocks(entry.blocks, m, k, n, perm_tile)
     # heuristic fallback: MXU-aligned 256 cube, shrunk to the problem
     return clamp_blocks(BlockConfig(256, 256, 256), m, k, n, perm_tile)
@@ -188,7 +201,10 @@ def cache_path(path: Union[str, pathlib.Path, None] = None) -> pathlib.Path:
 
 
 def _record_key(rec: dict) -> tuple:
-    return (rec["backend"], rec["dtype"], rec["m"], rec["k"], rec["n"])
+    # older caches predate the epilogue axis; their records were measured on
+    # the unfused path, so they key (and match) as epilogue="none"
+    return (rec["backend"], rec["dtype"], rec.get("epilogue", "none"),
+            rec["m"], rec["k"], rec["n"])
 
 
 def _read_cache(path: pathlib.Path) -> List[dict]:
@@ -236,21 +252,23 @@ def register_measured(
     m: int,
     k: int,
     n: int,
+    epilogue: str = "none",
     time_us: Optional[float] = None,
     persist: bool = True,
     path: Union[str, pathlib.Path, None] = None,
 ) -> TuningEntry:
-    """Register an autotuned winner: an exact-shape rule, optionally mirrored
-    to the on-disk cache so it survives restarts."""
+    """Register an autotuned winner: an exact-shape (and exact-epilogue)
+    rule, optionally mirrored to the on-disk cache so it survives restarts."""
     entry = register_tuning(
         blocks, backend=backend, dtype=dtype,
         max_m=m, max_k=k, max_n=n, min_m=m, min_k=k, min_n=n,
-        source="measured",
+        epilogue=epilogue, source="measured",
     )
     if persist:
         bc = entry.blocks
         rec = {
             "backend": backend, "dtype": dtype, "m": m, "k": k, "n": n,
+            "epilogue": epilogue,
             "block_m": bc.block_m, "block_n": bc.block_n, "block_k": bc.block_k,
         }
         if time_us is not None:
@@ -271,6 +289,7 @@ def load_cache(path: Union[str, pathlib.Path, None] = None) -> int:
             backend=rec["backend"], dtype=rec["dtype"],
             max_m=rec["m"], max_k=rec["k"], max_n=rec["n"],
             min_m=rec["m"], min_k=rec["k"], min_n=rec["n"],
+            epilogue=rec.get("epilogue", "none"),
             source="cache",
         )
         for rec in _read_cache(p)

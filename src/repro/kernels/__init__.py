@@ -6,7 +6,7 @@ compiles through Mosaic.  See each module's docstring for the VMEM/BlockSpec
 design.
 """
 
-from repro.kernels import ref
+from repro.kernels import epilogue, ref
 from repro.kernels.dip_matmul import dip_matmul_pallas
 from repro.kernels.dip_matmul_q import dip_matmul_q_pallas
 from repro.kernels.dip_systolic import dip_systolic_pallas
@@ -14,6 +14,7 @@ from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.ws_matmul import ws_matmul_pallas
 
 __all__ = [
+    "epilogue",
     "ref",
     "dip_matmul_pallas",
     "dip_matmul_q_pallas",

@@ -17,6 +17,13 @@ Block layout (grid = (M/bm, N/bn, K/bk), K innermost for accumulation):
 
 All of bm/bk/bn default to MXU-aligned multiples of 128; bk and bn must be
 multiples of the permutation tile (64).
+
+Fused epilogues (kernels/epilogue.py) ride the accumulator flush: the
+``k == num_programs - 1`` step applies bias / activation / residual to the
+f32 accumulator while it is still in VMEM, so the activated result is the
+only (M, N) tensor that reaches HBM.  ``swiglu`` is dual-weight: the gate
+and up projections stream over the same x block with two accumulators — one
+read of x, no intermediate gate/up arrays.
 """
 
 from __future__ import annotations
@@ -28,34 +35,49 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels import common
+from repro.kernels import epilogue as epi
 from repro.kernels.ref import acc_dtype_for
 
 __all__ = ["dip_matmul_pallas"]
 
 
-def _kernel(x_ref, p_ref, o_ref, acc_ref, *, perm_tile: int, fuse_deshear: bool):
+def _kernel(x_ref, p_ref, *rest, perm_tile: int, fuse_deshear: bool,
+            epilogue: str):
+    spec = epi.spec(epilogue)
+    extra = rest[: spec.n_operands]
+    o_ref = rest[spec.n_operands]
+    acc_refs = rest[spec.n_operands + 1:]
     k = pl.program_id(2)
 
     @pl.when(k == 0)
     def _zero():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+        for acc in acc_refs:
+            acc[...] = jnp.zeros_like(acc)
 
+    x = x_ref[...]
     w = common.deshear_block(p_ref[...], perm_tile) if fuse_deshear else p_ref[...]
-    acc_ref[...] += jnp.dot(x_ref[...], w, preferred_element_type=acc_ref.dtype)
+    acc_refs[0][...] += jnp.dot(x, w, preferred_element_type=acc_refs[0].dtype)
+    if spec.dual_weight:  # up projection over the SAME x block
+        wu = (
+            common.deshear_block(extra[0][...], perm_tile)
+            if fuse_deshear else extra[0][...]
+        )
+        acc_refs[1][...] += jnp.dot(x, wu, preferred_element_type=acc_refs[1].dtype)
 
     @pl.when(k == pl.num_programs(2) - 1)
     def _flush():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        epi.kernel_flush(epilogue, o_ref, acc_refs, extra)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("block_m", "block_n", "block_k", "perm_tile", "interpret", "out_dtype", "fuse_deshear"),
+    static_argnames=("block_m", "block_n", "block_k", "perm_tile", "interpret",
+                     "out_dtype", "fuse_deshear", "epilogue"),
 )
 def dip_matmul_pallas(
     x: jax.Array,
     p: jax.Array,
-    *,
+    *epilogue_operands: jax.Array,
     block_m: int = 256,
     block_n: int = 256,
     block_k: int = 256,
@@ -63,13 +85,18 @@ def dip_matmul_pallas(
     interpret: bool = False,
     out_dtype=None,
     fuse_deshear: bool = True,
+    epilogue: str = "none",
 ):
-    """``x @ unpermute_tiled(p)`` with the de-shear fused into the MXU loop.
+    """``epilogue(x @ unpermute_tiled(p))`` with the de-shear fused into the
+    MXU loop and the epilogue fused into the accumulator flush.
 
-    Shapes must already be padded to block multiples (ops.py handles padding);
-    ``p`` is the DiP-permutated weight (K, N).  With ``fuse_deshear=False``
-    the kernel is a plain WS tiled matmul (used as the baseline and for
-    pre-desheared weights).
+    Shapes must already be padded to block multiples (the registry dispatch
+    shim handles padding); ``p`` is the DiP-permutated weight (K, N).  With
+    ``fuse_deshear=False`` the kernel is a plain WS tiled matmul (used as
+    the baseline and for pre-desheared weights).  ``epilogue_operands`` per
+    variant: ``(p_up,)`` for ``swiglu`` (a second (K, N) weight), ``(b,)``
+    of shape (1, N) for the bias variants, ``(r,)`` of shape (M, N) for
+    ``residual`` — see kernels/epilogue.py.
     """
     m, kdim = x.shape
     k2, n = p.shape
@@ -80,23 +107,46 @@ def dip_matmul_pallas(
                          f"({block_m},{block_k},{block_n})")
     if block_k % perm_tile or block_n % perm_tile:
         raise ValueError("block_k/block_n must be multiples of the permutation tile")
+    spec = epi.spec(epilogue)
+    epi.validate_operands(
+        epilogue, epilogue_operands, m=m, n=n, w_shape=p.shape, w_dtype=p.dtype
+    )
 
     acc_dtype = acc_dtype_for(x, p)
-    out_dtype = out_dtype or (x.dtype if acc_dtype == jnp.float32 else acc_dtype)
+    if epilogue == "none":
+        out_dtype = out_dtype or (x.dtype if acc_dtype == jnp.float32 else acc_dtype)
+    else:
+        # epilogue arithmetic is f32 on the widened accumulator: the output
+        # is float even when the matmul accumulates in int32
+        out_dtype = out_dtype or (
+            x.dtype if jnp.issubdtype(x.dtype, jnp.floating) else jnp.float32
+        )
     grid = (m // block_m, n // block_n, kdim // block_k)
 
+    extra_in = list(epilogue_operands)
+    extra_specs = epi.operand_block_specs(
+        epilogue, block_m=block_m, block_n=block_n, block_k=block_k
+    )
+    scratch = [common.VMEM((block_m, block_n), acc_dtype)]
+    if spec.dual_weight:
+        scratch.append(common.VMEM((block_m, block_n), acc_dtype))
+
     return pl.pallas_call(
-        functools.partial(_kernel, perm_tile=perm_tile, fuse_deshear=fuse_deshear),
+        functools.partial(
+            _kernel, perm_tile=perm_tile, fuse_deshear=fuse_deshear,
+            epilogue=epilogue,
+        ),
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
             pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+            *extra_specs,
         ],
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
-        scratch_shapes=[common.VMEM((block_m, block_n), acc_dtype)],
+        scratch_shapes=scratch,
         compiler_params=common.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(x, p)
+    )(x, p, *extra_in)

@@ -1,0 +1,251 @@
+"""Shared epilogue library for the fused matmul kernels.
+
+The paper's dataflow wins by keeping the operand stream and the array in
+lockstep — no synchronization FIFOs between producer and consumer.  Our TPU
+analogue of that synchronization tax is the HBM round-trip between a
+projection and the elementwise ops glued to it: an unfused ``linear`` writes
+its (M, N) result to HBM only for XLA to immediately re-read it for the bias
+add, activation, SwiGLU gate, or residual add.  Every tiled kernel in this
+package already owns the natural fusion point — the ``k == num_programs - 1``
+accumulator flush — so the epilogue is applied there, on the f32 accumulator
+block that is still in VMEM, and the activated result is the only thing that
+ever reaches HBM.
+
+One definition serves three consumers:
+
+* the Pallas kernels apply :func:`apply` to their accumulator block inside
+  the flush (``kernels/dip_matmul.py`` / ``dip_systolic.py`` /
+  ``dip_matmul_q.py``);
+* the pure-jnp oracles in ``kernels/ref.py`` apply the *same* function to
+  the full matmul result, so fused-vs-reference parity is exact epilogue
+  arithmetic plus the one output cast;
+* the registry's decomposed fallback (``api.matmul`` on a backend without
+  epilogue support, e.g. ``xla``/GSPMD) applies it after an unfused matmul.
+
+Variants (``EPILOGUES``):
+
+    none        identity (the historical flush)
+    bias        z + b                         operands: (b,)  — (N,) bias
+    bias_gelu   gelu(z + b)                   operands: (b,)
+    bias_silu   silu(z + b)                   operands: (b,)
+    swiglu      silu(z_gate) * z_up           dual-weight: w = (w_gate, w_up)
+    residual    z + r                         operands: (r,) — (M, N) residual
+
+``swiglu`` is the headline: a dual-weight kernel computes the gate and up
+projections over the same ``x`` block in one pass (one read of ``x``, two
+accumulators, one write of the activated product — no intermediate gate/up
+arrays in HBM).  All epilogue arithmetic happens in float32 on the
+accumulator; integer-accumulating kernels (int8 operands) widen the int32
+accumulator first, so any epilogue other than ``none`` produces a float
+output.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = [
+    "EPILOGUES",
+    "EpilogueSpec",
+    "spec",
+    "n_operands",
+    "apply",
+    "validate_operands",
+    "operand_block_specs",
+    "kernel_flush",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class EpilogueSpec:
+    """Static description of one epilogue variant.
+
+    ``dual_weight`` kernels consume a (gate, up) weight pair over the same
+    activation block and keep two accumulators; ``bias`` / ``residual``
+    describe the extra non-weight operand the flush reads ((1, N) bias row
+    vs (M, N) residual block); ``activation`` is applied after the bias add.
+    """
+
+    name: str
+    dual_weight: bool = False
+    bias: bool = False
+    residual: bool = False
+    activation: Optional[str] = None  # None | "gelu" | "silu"
+
+    @property
+    def n_operands(self) -> int:
+        """Extra operands beyond (x, w): the up-projection weight for
+        dual-weight epilogues, the bias row, or the residual block."""
+        return int(self.dual_weight) + int(self.bias) + int(self.residual)
+
+
+EPILOGUES: Tuple[str, ...] = (
+    "none",
+    "bias",
+    "bias_gelu",
+    "bias_silu",
+    "swiglu",
+    "residual",
+)
+
+_SPECS = {
+    "none": EpilogueSpec("none"),
+    "bias": EpilogueSpec("bias", bias=True),
+    "bias_gelu": EpilogueSpec("bias_gelu", bias=True, activation="gelu"),
+    "bias_silu": EpilogueSpec("bias_silu", bias=True, activation="silu"),
+    "swiglu": EpilogueSpec("swiglu", dual_weight=True),
+    "residual": EpilogueSpec("residual", residual=True),
+}
+
+
+def spec(name: Optional[str]) -> EpilogueSpec:
+    """Resolve an epilogue name (``None`` means ``"none"``); raises on
+    unknown names so a typo fails at dispatch, not silently unfused."""
+    try:
+        return _SPECS[name or "none"]
+    except KeyError:
+        raise ValueError(
+            f"unknown epilogue {name!r}; supported: {list(EPILOGUES)}"
+        ) from None
+
+
+def n_operands(name: Optional[str]) -> int:
+    return spec(name).n_operands
+
+
+def _activate(kind: Optional[str], z: jax.Array) -> jax.Array:
+    if kind is None:
+        return z
+    if kind == "gelu":
+        # tanh-approximate gelu: jnp-only, lowers through Mosaic (no erf)
+        return jax.nn.gelu(z, approximate=True)
+    if kind == "silu":
+        return jax.nn.silu(z)
+    raise ValueError(f"unknown epilogue activation {kind!r}")
+
+
+def apply(name: Optional[str], z: jax.Array, *operands: jax.Array) -> jax.Array:
+    """Apply one epilogue to the f32 pre-activation ``z``.
+
+    ``z`` is the (block of the) matmul accumulator, already in float32.  For
+    ``swiglu``, ``z`` is the *gate* pre-activation and ``operands`` is
+    ``(z_up,)`` — the up-projection accumulator; for the bias variants
+    ``operands`` is ``(b,)`` broadcastable over rows; for ``residual`` it is
+    ``(r,)`` of z's shape.  Everything stays float32; the single cast to the
+    output dtype is the caller's job (the kernel flush / the reference).
+    """
+    s = spec(name)
+    if len(operands) != s.n_operands:
+        raise ValueError(
+            f"epilogue {s.name!r} takes {s.n_operands} operand(s), "
+            f"got {len(operands)}"
+        )
+    if s.dual_weight:
+        (z_up,) = operands
+        return jax.nn.silu(z) * z_up
+    if s.bias:
+        (b,) = operands
+        z = z + b
+    z = _activate(s.activation, z)
+    if s.residual:
+        (r,) = operands
+        z = z + r
+    return z
+
+
+# ---------------------------------------------------------------------------
+# shared kernel-side plumbing: ONE operand contract and ONE flush across the
+# three fused kernels (dip_matmul / dip_systolic / dip_matmul_q), so a new
+# epilogue variant or a contract change cannot drift between them.
+def validate_operands(
+    name: Optional[str],
+    operands,
+    *,
+    m: int,
+    n: int,
+    w_shape,
+    w_dtype,
+    with_scales: bool = False,
+) -> None:
+    """Check a kernel's ``epilogue_operands`` against the shared contract:
+    ``(p_up[, scale_up])`` matching the gate weight for ``swiglu`` (scales
+    on the quantized kernels, ``with_scales=True``), a (1, N) bias row, or
+    an (M, N) residual block."""
+    s = spec(name)
+    expected = 2 if (s.dual_weight and with_scales) else s.n_operands
+    if len(operands) != expected:
+        raise ValueError(
+            f"epilogue {s.name!r} takes {expected} operand(s), "
+            f"got {len(operands)}"
+        )
+    if s.dual_weight:
+        pu = operands[0]
+        if tuple(pu.shape) != tuple(w_shape) or pu.dtype != w_dtype:
+            raise ValueError(
+                f"swiglu up-weight must match the gate weight "
+                f"{tuple(w_shape)}:{w_dtype}, got {pu.shape}:{pu.dtype}"
+            )
+        if with_scales and operands[1].shape != (1, n):
+            raise ValueError(
+                f"up scales must be (1, {n}), got {operands[1].shape}"
+            )
+    elif s.bias and operands[0].shape != (1, n):
+        raise ValueError(
+            f"bias operand must be (1, {n}), got {operands[0].shape}"
+        )
+    elif s.residual and operands[0].shape != (m, n):
+        raise ValueError(
+            f"residual operand must be ({m}, {n}), got {operands[0].shape}"
+        )
+
+
+def operand_block_specs(
+    name: Optional[str],
+    *,
+    block_m: int,
+    block_n: int,
+    block_k: int,
+    with_scales: bool = False,
+):
+    """BlockSpecs for the validated epilogue operands, in the kernels'
+    shared ``(i, j, k)`` grid convention: the dual-weight up projection
+    streams like the gate weight ((bk, bn) at (k, j); plus its (1, bn)
+    scale row on the quantized kernels), bias rides as a (1, bn) row,
+    residual as the output-aligned (bm, bn) block.  The wavefront kernel
+    passes its ``array_n`` for both block_n and block_k."""
+    s = spec(name)
+    if s.dual_weight:
+        specs = [pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j))]
+        if with_scales:
+            specs.append(pl.BlockSpec((1, block_n), lambda i, j, k: (0, j)))
+        return specs
+    if s.bias:
+        return [pl.BlockSpec((1, block_n), lambda i, j, k: (0, j))]
+    if s.residual:
+        return [pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j))]
+    return []
+
+
+def kernel_flush(name: Optional[str], o_ref, acc_refs, extra_refs) -> None:
+    """The float kernels' accumulator flush: ``none`` writes the accumulator
+    straight through (the historical fast path); anything else widens to
+    f32, applies :func:`apply`, and casts ONCE to the output dtype.  For
+    dual-weight epilogues the up-projection pre-activation is the second
+    accumulator; otherwise the extra operand refs feed the epilogue.
+    (The quantized kernel has its own flush — its scale-on-output composes
+    before the epilogue.)"""
+    if (name or "none") == "none":
+        o_ref[...] = acc_refs[0][...].astype(o_ref.dtype)
+        return
+    s = spec(name)
+    z = acc_refs[0][...].astype(jnp.float32)
+    if s.dual_weight:
+        aux = (acc_refs[1][...].astype(jnp.float32),)
+    else:
+        aux = tuple(op[...].astype(jnp.float32) for op in extra_refs)
+    o_ref[...] = apply(name, z, *aux).astype(o_ref.dtype)

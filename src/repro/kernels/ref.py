@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import permute
+from repro.kernels import epilogue as _epi
 
 __all__ = [
     "acc_dtype_for",
@@ -20,6 +21,11 @@ __all__ = [
     "quantize_acts_int8",
     "dip_matmul_int8w_ref",
     "dip_matmul_fp8_ref",
+    "epilogue_ref",
+    "ws_matmul_epilogue_ref",
+    "dip_matmul_epilogue_ref",
+    "dip_matmul_int8w_epilogue_ref",
+    "dip_matmul_fp8_epilogue_ref",
 ]
 
 
@@ -94,3 +100,96 @@ def dip_matmul_fp8_ref(
     acc = jnp.matmul(x.astype(jnp.float32), w, preferred_element_type=jnp.float32)
     out = acc * w_scale.astype(jnp.float32)
     return out.astype(x.dtype if jnp.issubdtype(x.dtype, jnp.floating) else jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# fused-epilogue oracles (kernels/epilogue.py applied at the flush).  The
+# epilogue arithmetic itself is ONE definition shared with the kernels —
+# ``epilogue_ref`` is literally ``kernels.epilogue.apply`` — so parity
+# between a fused kernel and its oracle is the matmul semantics above plus
+# identically-ordered f32 epilogue math and the single output cast.
+epilogue_ref = _epi.apply
+
+
+def _f32(t: jax.Array) -> jax.Array:
+    return t.astype(jnp.float32)
+
+
+def _epilogue_out_dtype(x: jax.Array):
+    """Epilogues compute in f32, so the fused output is float even for
+    integer-accumulating kernels (matches the kernel wrappers)."""
+    return x.dtype if jnp.issubdtype(x.dtype, jnp.floating) else jnp.float32
+
+
+def ws_matmul_epilogue_ref(
+    x: jax.Array, w: jax.Array, *, epilogue: str = "none", operands=()
+) -> jax.Array:
+    """Natural-layout fused semantics: ``epilogue(x @ w)``.  For ``swiglu``
+    ``operands`` is ``(w_up,)`` (natural layout); for bias/residual the
+    broadcastable bias row / the (M, N) residual."""
+    z = _f32(ws_matmul_ref(x, w))
+    spec = _epi.spec(epilogue)
+    if spec.dual_weight:
+        aux = (_f32(ws_matmul_ref(x, operands[0])),)
+    else:
+        aux = tuple(_f32(op) for op in operands)
+    return _epi.apply(epilogue, z, *aux).astype(_epilogue_out_dtype(x))
+
+
+def dip_matmul_epilogue_ref(
+    x: jax.Array, p: jax.Array, *, epilogue: str = "none", operands=(),
+    perm_tile: int = 64
+) -> jax.Array:
+    """DiP fast-path fused semantics: ``epilogue(x @ unpermute_tiled(p))``.
+    For ``swiglu`` ``operands`` is ``(p_up,)`` in permutated storage."""
+    z = _f32(dip_matmul_ref(x, p, perm_tile=perm_tile))
+    spec = _epi.spec(epilogue)
+    if spec.dual_weight:
+        aux = (_f32(dip_matmul_ref(x, operands[0], perm_tile=perm_tile)),)
+    else:
+        aux = tuple(_f32(op) for op in operands)
+    return _epi.apply(epilogue, z, *aux).astype(_epilogue_out_dtype(x))
+
+
+def dip_matmul_int8w_epilogue_ref(
+    x: jax.Array, q: jax.Array, w_scale: jax.Array, *, epilogue: str = "none",
+    operands=(), perm_tile: int = 64
+) -> jax.Array:
+    """W8A8-dynamic fused semantics: the epilogue composes AFTER the rank-1
+    scale-on-output.  For ``swiglu`` ``operands`` is ``(q_up, w_scale_up)``
+    — both projections consume the SAME quantized-activation block (x is
+    quantized once for the pair, exactly as the kernel does)."""
+    xq, x_scale = quantize_acts_int8(x)
+    spec = _epi.spec(epilogue)
+
+    def z_of(qs, ws):
+        w = permute.unpermute_tiled(qs, perm_tile)
+        acc = jnp.matmul(xq, w, preferred_element_type=jnp.int32)
+        return _f32(acc) * x_scale * _f32(ws)
+
+    z = z_of(q, w_scale)
+    if spec.dual_weight:
+        aux = (z_of(operands[0], operands[1]),)
+    else:
+        aux = tuple(_f32(op) for op in operands)
+    return _epi.apply(epilogue, z, *aux).astype(_epilogue_out_dtype(x))
+
+
+def dip_matmul_fp8_epilogue_ref(
+    x: jax.Array, q: jax.Array, w_scale: jax.Array, *, epilogue: str = "none",
+    operands=(), perm_tile: int = 64
+) -> jax.Array:
+    """fp8-weight fused semantics: per-column scale then epilogue, all f32."""
+    spec = _epi.spec(epilogue)
+
+    def z_of(qs, ws):
+        w = permute.unpermute_tiled(qs, perm_tile).astype(jnp.float32)
+        acc = jnp.matmul(_f32(x), w, preferred_element_type=jnp.float32)
+        return acc * _f32(ws)
+
+    z = z_of(q, w_scale)
+    if spec.dual_weight:
+        aux = (z_of(operands[0], operands[1]),)
+    else:
+        aux = tuple(_f32(op) for op in operands)
+    return _epi.apply(epilogue, z, *aux).astype(_epilogue_out_dtype(x))

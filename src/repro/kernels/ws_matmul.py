@@ -19,7 +19,12 @@ __all__ = ["ws_matmul_pallas"]
 
 
 @functools.wraps(dip_matmul_pallas)
-def ws_matmul_pallas(x: jax.Array, w: jax.Array, **kwargs):
-    """Plain tiled matmul ``x @ w`` (weights in natural layout)."""
+def ws_matmul_pallas(x: jax.Array, w: jax.Array, *epilogue_operands, **kwargs):
+    """Plain tiled matmul ``x @ w`` (weights in natural layout).
+
+    Fused epilogues pass through unchanged (``epilogue_operands`` carries the
+    up-projection weight / bias row / residual block, kernels/epilogue.py) —
+    the flush-stage fusion is orthogonal to the de-shear ablation.
+    """
     kwargs.setdefault("fuse_deshear", False)
-    return dip_matmul_pallas(x, w, **kwargs)
+    return dip_matmul_pallas(x, w, *epilogue_operands, **kwargs)

@@ -142,8 +142,17 @@ def gqa_attention(
     kv_chunk: int = 0,
     constrain: Constrain = _id,
     unroll: bool = False,
+    rope=None,                     # precomputed layers.rope_tables (hoisted)
+    residual: Optional[jax.Array] = None,  # fused into the out-projection
 ) -> Tuple[jax.Array, Optional[Dict]]:
-    """Full GQA block: projections + RoPE + cache update + attention + out."""
+    """Full GQA block: projections + RoPE + cache update + attention + out.
+
+    ``rope`` takes the per-forward cos/sin tables so layers stop recomputing
+    them; ``residual`` fuses the block's ``x + attn(x)`` into the
+    out-projection's flush-stage epilogue (the returned tensor then IS the
+    updated residual stream).  QKV biases ride the projections' fused bias
+    epilogue.
+    """
     b, s, _ = x.shape
     h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
     lk = dict(backend=cfg.matmul_backend, compute_dtype=x.dtype)
@@ -151,8 +160,8 @@ def gqa_attention(
     k = layers.linear(x, p["wk"], p.get("bk"), **lk).reshape(b, s, kv, hd)
     v = layers.linear(x, p["wv"], p.get("bv"), **lk).reshape(b, s, kv, hd)
 
-    q = layers.apply_rope(q, positions, cfg.rope_theta)
-    k = layers.apply_rope(k, positions, cfg.rope_theta)
+    q = layers.apply_rope(q, positions, cfg.rope_theta, tables=rope)
+    k = layers.apply_rope(k, positions, cfg.rope_theta, tables=rope)
     q = constrain(q, "q_bthd")
     k = constrain(k, "kv_bthd")
     v = constrain(v, "kv_bthd")
@@ -179,6 +188,17 @@ def gqa_attention(
         new_cache = {"k": ck, "v": cv, "pos": pos + s}
 
     out = out.reshape(b, s, h * hd)
+    if residual is not None:
+        # The fused sum IS the mid-block residual — left to propagation like
+        # the explicit `x + a` was (constraining the sum forces an extra
+        # scatter/gather pair per layer — §Perf iter 4, refuted).  The pin
+        # the unfused path puts on the projection output alone is
+        # unreachable once the add happens inside the kernel; propagation
+        # stays bounded by the pins on `residual` (previous block end) and
+        # on the block output downstream.
+        out = layers.linear(out, p["wo"], epilogue="residual",
+                            epilogue_operands=(residual,), **lk)
+        return out, new_cache
     out = layers.linear(out, p["wo"], **lk)
     return constrain(out, "act_btd"), new_cache
 
@@ -202,6 +222,8 @@ def mla_attention(
     kv_chunk: int = 0,
     constrain: Constrain = _id,
     unroll: bool = False,
+    rope=None,                     # precomputed layers.rope_tables (hoisted)
+    residual: Optional[jax.Array] = None,  # fused into the out-projection
 ) -> Tuple[jax.Array, Optional[Dict]]:
     """DeepSeek-V2 multi-head latent attention.
 
@@ -223,11 +245,13 @@ def mla_attention(
 
     q = layers.linear(x, p["wq"], **lk).reshape(b, s, h, dn + dr)
     q_nope, q_rope = q[..., :dn], q[..., dn:]
-    q_rope = layers.apply_rope(q_rope, positions, cfg.rope_theta)
+    q_rope = layers.apply_rope(q_rope, positions, cfg.rope_theta, tables=rope)
 
     c_kv = layers.linear(x, p["w_dkv"], **lk)                               # (B,S,r)
     k_rope = layers.linear(x, p["w_krope"], **lk)                           # (B,S,dr) shared
-    k_rope = layers.apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+    k_rope = layers.apply_rope(
+        k_rope[:, :, None, :], positions, cfg.rope_theta, tables=rope
+    )[:, :, 0, :]
 
     # the absorbed form contracts these per-head — natural layout required
     w_uk = _natural(p["w_uk"]).astype(x.dtype).reshape(r, h, dn)
@@ -266,5 +290,10 @@ def mla_attention(
         new_cache = {"c_kv": cc, "k_rope": cr, "pos": pos + s}
 
     out = out.reshape(b, s, h * dv_)
+    if residual is not None:
+        # fused mid-block residual: left to propagation (see gqa_attention)
+        out = layers.linear(out, p["wo"], epilogue="residual",
+                            epilogue_operands=(residual,), **lk)
+        return out, new_cache
     out = layers.linear(out, p["wo"], **lk)
     return constrain(out, "act_btd"), new_cache

@@ -23,34 +23,58 @@ __all__ = [
     "rms_norm",
     "swiglu",
     "rope_frequencies",
+    "rope_tables",
     "apply_rope",
     "cross_entropy_loss",
 ]
 
+_BIAS_EPILOGUES = ("bias", "bias_gelu", "bias_silu")
+
 
 def linear(
     x: jax.Array,
-    w: Union[jax.Array, api.DipWeight, api.QuantizedDipWeight],
+    w: Union[jax.Array, api.DipWeight, api.QuantizedDipWeight, tuple, list],
     b: Optional[jax.Array] = None,
     *,
     backend: Optional[str] = None,
     compute_dtype=jnp.bfloat16,
+    epilogue: Optional[str] = None,
+    epilogue_operands=(),
 ) -> jax.Array:
-    """``x @ W (+ b)`` through the registered matmul backend.
+    """``epilogue(x @ W)`` through the registered matmul backend.
 
     The output width comes from the weight itself (``DipWeight.d_out`` for
     permutated storage — the padding bookkeeping lives in the type).  A
     ``QuantizedDipWeight`` keeps its reduced-precision storage + scales as-is
     (only the activations take the compute dtype); with ``backend=None`` it
     dispatches straight to its scheme's quantized kernel.
+
+    ``epilogue`` selects a fused flush-stage epilogue (``api.EPILOGUES``):
+    ``"swiglu"`` takes a ``(w_gate, w_up)`` weight pair, ``"residual"``
+    takes the residual through ``epilogue_operands``.  A bias ``b`` always
+    rides the epilogue path — fused into the kernel flush on backends that
+    support it, applied in the same f32 epilogue arithmetic otherwise — so
+    there is no per-call output-sized ``b.astype`` copy on either path.
     """
     x = x.astype(compute_dtype)
-    if not isinstance(w, api.QuantizedDipWeight):
-        w = w.astype(compute_dtype)
-    out = api.matmul(x, w, backend=backend)
+
+    def adapt(wi):
+        return wi if isinstance(wi, api.QuantizedDipWeight) else wi.astype(compute_dtype)
+
+    w = tuple(adapt(wi) for wi in w) if isinstance(w, (tuple, list)) else adapt(w)
+    operands = tuple(epilogue_operands)
     if b is not None:
-        out = out + b.astype(out.dtype)
-    return out
+        if epilogue is None:
+            epilogue = "bias"
+        elif epilogue not in _BIAS_EPILOGUES:
+            raise ValueError(
+                f"a bias only composes with the bias epilogues "
+                f"{_BIAS_EPILOGUES}, got epilogue={epilogue!r}"
+            )
+        operands = (b,) + operands
+    return api.matmul(
+        x, w, backend=backend, epilogue=epilogue, epilogue_operands=operands
+    )
 
 
 def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
@@ -70,13 +94,32 @@ def rope_frequencies(head_dim: int, theta: float) -> np.ndarray:
     return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float64) / head_dim))
 
 
-def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
-    """Rotate pairs of channels; x: (..., seq, n_heads, head_dim)."""
-    head_dim = x.shape[-1]
+def rope_tables(positions: jax.Array, head_dim: int, theta: float):
+    """``(cos, sin)`` rotation tables for the given absolute positions.
+
+    Computed ONCE per forward and threaded through every layer — the angle
+    table and its cos/sin are position-only, so recomputing them per layer
+    (the historical ``apply_rope`` behavior) was n_layers-1 redundant
+    transcendental sweeps per step.  Shapes broadcast over heads:
+    (..., seq, 1, head_dim/2), float32.
+    """
     inv_freq = jnp.asarray(rope_frequencies(head_dim, theta), dtype=jnp.float32)
     angles = positions.astype(jnp.float32)[..., None] * inv_freq  # (..., seq, hd/2)
-    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
-    sin = jnp.sin(angles)[..., None, :]
+    return jnp.cos(angles)[..., None, :], jnp.sin(angles)[..., None, :]
+
+
+def apply_rope(
+    x: jax.Array, positions: jax.Array, theta: float, *, tables=None
+) -> jax.Array:
+    """Rotate pairs of channels; x: (..., seq, n_heads, head_dim).
+
+    ``tables`` takes precomputed :func:`rope_tables` (the hoisted per-forward
+    path); without it the tables are derived from ``positions`` on the fly —
+    the original signature, kept as a thin wrapper for direct callers.
+    """
+    if tables is None:
+        tables = rope_tables(positions, x.shape[-1], theta)
+    cos, sin = tables
     x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
     out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
     return out.astype(x.dtype)

@@ -35,14 +35,24 @@ __all__ = ["moe_ffn", "dense_ffn", "moe_capacity"]
 
 
 def dense_ffn(
-    x: jax.Array, p: Dict, cfg, *, constrain: Constrain = _id
+    x: jax.Array, p: Dict, cfg, *, constrain: Constrain = _id,
+    residual: jax.Array = None,
 ) -> jax.Array:
-    """SwiGLU MLP (dense archs and MoE shared experts)."""
+    """SwiGLU MLP (dense archs and MoE shared experts).
+
+    The gate and up projections run as ONE dual-weight ``swiglu`` dispatch:
+    on fused backends that is a single kernel reading x once and writing
+    only the activated product (no intermediate gate/up arrays in HBM); on
+    other backends ``api.matmul`` decomposes with identical semantics.
+    ``residual`` fuses the block's skip connection into the down-projection
+    the same way.
+    """
     lk = dict(backend=cfg.matmul_backend, compute_dtype=x.dtype)
-    gate = layers.linear(x, p["w_gate"], **lk)
-    up = layers.linear(x, p["w_up"], **lk)
-    h = layers.swiglu(gate, up)
+    h = layers.linear(x, (p["w_gate"], p["w_up"]), epilogue="swiglu", **lk)
     h = constrain(h, "ffn_hidden")
+    if residual is not None:
+        return layers.linear(h, p["w_down"], epilogue="residual",
+                             epilogue_operands=(residual,), **lk)
     return layers.linear(h, p["w_down"], **lk)
 
 

@@ -76,8 +76,14 @@ def ssd_block(
     *,
     cache: Optional[Dict] = None,
     constrain: Constrain = _id,
+    residual: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[Dict]]:
-    """One Mamba2 block.  Prefill/train: chunked SSD; decode: O(1) update."""
+    """One Mamba2 block.  Prefill/train: chunked SSD; decode: O(1) update.
+
+    ``residual`` fuses the block's skip connection into the out-projection's
+    flush-stage epilogue (the returned tensor then IS the updated residual
+    stream).
+    """
     bsz, seqlen, _ = x.shape
     dims = ssm_dims(cfg)
     di, h, pdim, n = dims["d_inner"], dims["heads"], dims["headdim"], dims["state"]
@@ -187,9 +193,13 @@ def ssd_block(
         else:
             new_cache = None
 
-    # gated RMSNorm + out projection
+    # gated RMSNorm + out projection (skip connection fused into its flush)
     y = y.astype(x.dtype) * jax.nn.silu(z)
     y = layers.rms_norm(y, p["norm"], cfg.norm_eps)
     y = constrain(y, "ssm_inner")
-    out = layers.linear(y, p["out_proj"], **lk)
+    if residual is not None:
+        out = layers.linear(y, p["out_proj"], epilogue="residual",
+                            epilogue_operands=(residual,), **lk)
+    else:
+        out = layers.linear(y, p["out_proj"], **lk)
     return constrain(out, "act_btd"), new_cache

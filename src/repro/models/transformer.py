@@ -253,35 +253,37 @@ def init_params(key: jax.Array, cfg) -> Dict[str, Any]:
 
 
 # ---------------------------------------------------------------- forward ---
-def _transformer_block(x, lp, cfg, *, positions, cache, kv_chunk, constrain,
-                       unroll=False):
+def _transformer_block(x, lp, cfg, *, positions, rope, cache, kv_chunk,
+                       constrain, unroll=False):
     attn_in = layers.rms_norm(x, lp["attn_norm"], cfg.norm_eps)
-    if cfg.use_mla:
-        a, new_cache = attention.mla_attention(
-            attn_in, lp, cfg, positions=positions, cache=cache,
-            kv_chunk=kv_chunk, constrain=constrain, unroll=unroll,
-        )
-    else:
-        a, new_cache = attention.gqa_attention(
-            attn_in, lp, cfg, positions=positions, cache=cache,
-            kv_chunk=kv_chunk, constrain=constrain, unroll=unroll,
-        )
-    x = x + a  # mid-block residual: left to propagation (constraining it
-    # forces an extra scatter/gather pair per layer — §Perf iter 4, refuted)
+    # mid-block residual fused into the attention out-projection's flush
+    # (one HBM write instead of write + re-read + add); the fused result is
+    # left to propagation like the explicit add was (constraining it forces
+    # an extra scatter/gather pair per layer — §Perf iter 4, refuted)
+    attn = attention.mla_attention if cfg.use_mla else attention.gqa_attention
+    x, new_cache = attn(
+        attn_in, lp, cfg, positions=positions, cache=cache,
+        kv_chunk=kv_chunk, constrain=constrain, unroll=unroll,
+        rope=rope, residual=x,
+    )
     ffn_in = layers.rms_norm(x, lp["ffn_norm"], cfg.norm_eps)
     if cfg.is_moe:
         f, aux = moe.moe_ffn(ffn_in, lp, cfg, constrain=constrain)
+        x = x + f
     else:
-        f, aux = moe.dense_ffn(ffn_in, lp, cfg, constrain=constrain), jnp.zeros((), jnp.float32)
+        # skip connection fused into the down-projection
+        x = moe.dense_ffn(ffn_in, lp, cfg, constrain=constrain, residual=x)
+        aux = jnp.zeros((), jnp.float32)
     # the scan carry is saved per layer for backward — constraining it keeps
     # the saved residuals in the sequence-sharded layout (16x less memory)
-    return constrain(x + f, "act_btd"), new_cache, aux
+    return constrain(x, "act_btd"), new_cache, aux
 
 
 def _mamba_block(x, lp, cfg, *, cache, constrain):
     inner_in = layers.rms_norm(x, lp["norm_in"], cfg.norm_eps)
-    y, new_cache = ssm.ssd_block(inner_in, lp, cfg, cache=cache, constrain=constrain)
-    return constrain(x + y, "act_btd"), new_cache
+    # skip connection fused into ssd_block's out-projection
+    return ssm.ssd_block(inner_in, lp, cfg, cache=cache, constrain=constrain,
+                         residual=x)
 
 
 def forward(
@@ -321,13 +323,19 @@ def forward(
             pass  # handled inside _scan_mamba
         aux_total = jnp.zeros((), jnp.float32)
     else:
+        # RoPE cos/sin hoisted out of the per-layer path: position-only, so
+        # ONE table per forward (a scan constant) instead of n_layers
+        # transcendental sweeps
+        rope_dim = cfg.qk_rope_head_dim if cfg.use_mla else cfg.resolved_head_dim
+        rope = layers.rope_tables(positions, rope_dim, cfg.rope_theta)
+
         def block(carry, xs):
             x, aux = carry
             lp, lcache = xs
             if lcache is not None:
                 lcache = dict(lcache, pos=start)  # all layers share the position
             x, new_cache, aux_i = _transformer_block(
-                x, lp, cfg, positions=positions, cache=lcache,
+                x, lp, cfg, positions=positions, rope=rope, cache=lcache,
                 kv_chunk=kv_chunk, constrain=constrain, unroll=unroll,
             )
             if new_cache is not None:
@@ -399,6 +407,8 @@ def _scan_mamba(params, cfg, x, cache, remat, constrain, unroll=False, kv_chunk=
     shared = params["shared_attn"]
     b, s = x.shape[:2]
     positions = pos_now + jnp.arange(s, dtype=jnp.int32)
+    # hoisted RoPE tables for the shared attention block (scan constant)
+    rope = layers.rope_tables(positions, cfg.resolved_head_dim, cfg.rope_theta)
 
     def regroup(t):
         return t.reshape((n_super, ae) + t.shape[1:])
@@ -415,13 +425,13 @@ def _scan_mamba(params, cfg, x, cache, remat, constrain, unroll=False, kv_chunk=
         if sc is not None:
             sc = dict(sc, pos=pos_now)
         attn_in = layers.rms_norm(x, shared["attn_norm"], cfg.norm_eps)
-        a, new_sc = attention.gqa_attention(
+        x, new_sc = attention.gqa_attention(
             attn_in, shared, cfg, positions=positions, cache=sc,
             kv_chunk=kv_chunk, constrain=constrain, unroll=unroll,
+            rope=rope, residual=x,
         )
-        x = x + a
         ffn_in = layers.rms_norm(x, shared["ffn_norm"], cfg.norm_eps)
-        x = x + moe.dense_ffn(ffn_in, shared, cfg, constrain=constrain)
+        x = moe.dense_ffn(ffn_in, shared, cfg, constrain=constrain, residual=x)
         return x, (_strip_pos(new_sc) if new_sc is not None else None)
 
     def superblock(x, xs):

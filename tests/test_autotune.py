@@ -329,12 +329,24 @@ def test_autotune_operands_for_quantized_backends():
     """_operands hands quantized backends exactly what a serving call site
     holds: float activations in the requested dtype + a QuantizedDipWeight
     of the backend's scheme."""
-    x, w = autotune._operands("dip_int8w", jnp.bfloat16, 16, 64, 128)
+    x, w, eops = autotune._operands("dip_int8w", jnp.bfloat16, 16, 64, 128)
     assert x.dtype == jnp.bfloat16
     assert isinstance(w, api.QuantizedDipWeight) and w.scheme == "int8"
     assert w.storage_shape == (64, 128) and w.dtype == jnp.int8
-    x, w = autotune._operands("dip_fp8", jnp.float32, 16, 64, 128)
+    assert eops == ()
+    x, w, eops = autotune._operands("dip_fp8", jnp.float32, 16, 64, 128)
     assert isinstance(w, api.QuantizedDipWeight) and w.scheme == "fp8_e4m3"
+    assert eops == ()
+    # dual-weight epilogue: the weight is the (gate, up) pair matmul expects
+    x, w, eops = autotune._operands(
+        "dip_int8w", jnp.bfloat16, 16, 64, 128, epilogue="swiglu"
+    )
+    assert isinstance(w, tuple) and len(w) == 2 and eops == ()
+    assert all(wi.scheme == "int8" for wi in w)
+    x, w, eops = autotune._operands(
+        "pallas_dip", jnp.float32, 16, 64, 128, epilogue="residual"
+    )
+    assert len(eops) == 1 and eops[0].shape == (16, 128)
 
 
 def test_autotune_shape_quantized_backend_end_to_end(clean_table):

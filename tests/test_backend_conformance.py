@@ -100,6 +100,17 @@ def test_matrix_covers_every_builtin_backend():
     assert builtin <= set(CONFORMANCE), "a builtin backend escaped conformance"
 
 
+def test_epilogue_capability_flags():
+    """Every tiled builtin fuses the full epilogue set in-kernel; xla (and
+    any non-tiled backend) declares none and relies on decomposition."""
+    for backend in CONFORMANCE:
+        be = api.get_backend(backend)
+        if be.tiled:
+            assert set(api.backend_epilogues(backend)) == set(api.EPILOGUES), backend
+        else:
+            assert api.backend_epilogues(backend) == ["none"], backend
+
+
 # ----------------------------------------------------------------- parity ---
 @pytest.mark.parametrize(
     "backend,dtype",
@@ -203,6 +214,272 @@ def test_every_backend_accepts_a_quantized_weight():
         got = np.asarray(api.matmul(x, qw, backend=backend))
         np.testing.assert_allclose(got, want, atol=2e-3, rtol=2e-3,
                                    err_msg=backend)
+
+
+# -------------------------------------------------------------- epilogues ---
+# every backend x epilogue x (representative) dtype against the kernels/ref
+# epilogue oracles.  "none" is covered by test_backend_matches_oracle; the
+# fused variants here exercise the flush-stage fusion AND the decomposition
+# path (xla declares no fused epilogues, so its rows prove the decomposed
+# fallback against the same oracles).
+EPILOGUES_TESTED = ("bias", "bias_gelu", "bias_silu", "swiglu", "residual")
+
+# int8 activations are excluded: any epilogue other than "none" widens the
+# accumulator to f32 and produces a float output, which the pure-int8
+# conformance rows don't model.
+EPILOGUE_DTYPES = {
+    b: tuple(d for d in dts if d != "int8") for b, dts in CONFORMANCE.items()
+}
+
+
+def _epilogue_inputs(backend, epilogue, m, k, n, dtype, seed):
+    """(x, w-or-pair, epilogue_operands) as a call site would hold them."""
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.normal(0, 1, (m, k)).astype(np.float32)).astype(dtype)
+    wg = jnp.asarray(r.normal(0, 1, (k, n)).astype(np.float32)).astype(dtype)
+    wu = jnp.asarray(r.normal(0, 1, (k, n)).astype(np.float32)).astype(dtype)
+    bias = jnp.asarray(r.normal(0, 1, (n,)).astype(np.float32))
+    resid = jnp.asarray(r.normal(0, 1, (m, n)).astype(np.float32)).astype(dtype)
+    if epilogue == "swiglu":
+        return x, (_weight_for(backend, wg), _weight_for(backend, wu)), ()
+    if epilogue.startswith("bias"):
+        return x, _weight_for(backend, wg), (bias,)
+    return x, _weight_for(backend, wg), (resid,)
+
+
+def _epilogue_oracle(backend, x, wobj, epilogue, operands):
+    """kernels/ref.py fused oracle for one dispatch, cropped to logical N."""
+    be = api.get_backend(backend)
+    primary = wobj[0] if isinstance(wobj, tuple) else wobj
+    if be.layout == "natural":
+        ops = (wobj[1],) if epilogue == "swiglu" else operands
+        return ref.ws_matmul_epilogue_ref(x, primary if epilogue != "swiglu" else wobj[0],
+                                          epilogue=epilogue, operands=ops)
+    n = primary.d_out
+    pad_n = (-n) % primary.perm_tile
+    xk = jnp.pad(x, [(0, 0), (0, (-x.shape[-1]) % primary.perm_tile)])
+    pad_cols = lambda t: jnp.pad(t, [(0, 0)] * (t.ndim - 1) + [(0, pad_n)])
+    if epilogue == "swiglu":
+        ops = ((wobj[1].data, wobj[1].scale) if be.layout == "dip_q"
+               else (wobj[1].data,))
+    elif epilogue.startswith("bias"):
+        ops = (pad_cols(operands[0].reshape(1, n)),)
+    else:
+        ops = (pad_cols(operands[0]),)
+    if be.layout == "dip":
+        out = ref.dip_matmul_epilogue_ref(
+            xk, primary.data, epilogue=epilogue, operands=ops,
+            perm_tile=primary.perm_tile,
+        )
+    elif be.scheme == "int8":
+        out = ref.dip_matmul_int8w_epilogue_ref(
+            xk, primary.data, primary.scale, epilogue=epilogue, operands=ops,
+            perm_tile=primary.perm_tile,
+        )
+    else:
+        out = ref.dip_matmul_fp8_epilogue_ref(
+            xk, primary.data, primary.scale, epilogue=epilogue, operands=ops,
+            perm_tile=primary.perm_tile,
+        )
+    return out[..., :n]
+
+
+@pytest.mark.parametrize("epilogue", EPILOGUES_TESTED)
+@pytest.mark.parametrize(
+    "backend,dtype",
+    [(b, d) for b, dts in EPILOGUE_DTYPES.items() for d in dts],
+)
+def test_backend_epilogue_matches_oracle(backend, dtype, epilogue):
+    """Fused-epilogue parity: every backend x epilogue x dtype against the
+    kernels/ref.py fused oracles on an aligned AND a ragged shape."""
+    for m, k, n, seed in ((8, 64, 64, 0), (17, 100, 130, 1)):
+        x, wobj, operands = _epilogue_inputs(backend, epilogue, m, k, n, dtype, seed)
+        got = api.matmul(x, wobj, backend=backend, epilogue=epilogue,
+                         epilogue_operands=operands)
+        want = _epilogue_oracle(backend, x, wobj, epilogue, operands)
+        assert got.shape == (m, n)
+        assert jnp.issubdtype(got.dtype, jnp.floating)
+        if api.get_backend(backend).layout == "dip_q":
+            tol = (dict(atol=2e-3, rtol=2e-3) if dtype == "float32"
+                   else dict(atol=0.1, rtol=0.05))
+        else:
+            tol = TOL[dtype]
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32), **tol,
+            err_msg=f"{backend}/{dtype}/{epilogue} {m}x{k}x{n}",
+        )
+
+
+@pytest.mark.parametrize("epilogue", EPILOGUES_TESTED)
+def test_fused_and_decomposed_paths_agree(epilogue):
+    """The same weights through a fused backend (pallas_dip) and the
+    decomposing backend (xla) must agree — the decomposition rule is
+    'identical semantics, different fusion'."""
+    m, k, n = 17, 100, 130
+    x, wobj, operands = _epilogue_inputs("pallas_dip", epilogue, m, k, n,
+                                         "float32", 3)
+    fused = api.matmul(x, wobj, backend="pallas_dip", epilogue=epilogue,
+                       epilogue_operands=operands)
+    decomposed = api.matmul(x, wobj, backend="xla", epilogue=epilogue,
+                            epilogue_operands=operands)
+    np.testing.assert_allclose(
+        np.asarray(fused), np.asarray(decomposed), atol=2e-3, rtol=2e-3,
+    )
+
+
+@pytest.mark.parametrize("epilogue", EPILOGUES_TESTED)
+@pytest.mark.parametrize("backend", sorted(CONFORMANCE))
+def test_epilogue_gradients_match_decomposed_xla(backend, epilogue):
+    """Grad parity for the custom_vjp recompute path: d/dx, d/d(bias|resid),
+    and d/dw (float backends) through the FUSED kernel must match the
+    natively-differentiated decomposed XLA path.  The fused backward
+    recomputes the pre-activation from the saved matmul residuals — this is
+    the test that keeps that recompute exact."""
+    m, k, n = 16, 100, 130
+    r = np.random.default_rng(29)
+    c = jnp.asarray(r.normal(0, 1, (m, n)).astype(np.float32))
+    x, wobj, operands = _epilogue_inputs(backend, epilogue, m, k, n,
+                                         "float32", 31)
+    be = api.get_backend(backend)
+    if be.layout == "dip_q":
+        # straight-through reference: the DEQUANTIZED weights through xla
+        ref_w = (tuple(api.quant.dequantize(wi) for wi in wobj)
+                 if isinstance(wobj, tuple) else api.quant.dequantize(wobj))
+    else:
+        ref_w = wobj
+
+    def loss(backend_name, w):
+        def f(xx, *ops):
+            out = api.matmul(xx, w, backend=backend_name, epilogue=epilogue,
+                             epilogue_operands=ops)
+            return jnp.sum(out * c)
+        return f
+
+    argnums = tuple(range(1 + len(operands)))
+    g = jax.grad(loss(backend, wobj), argnums=argnums)(x, *operands)
+    g_ref = jax.grad(loss("xla", ref_w), argnums=argnums)(x, *operands)
+    for got, want in zip(g, g_ref):
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), atol=1e-3, rtol=1e-3,
+            err_msg=f"{backend}/{epilogue}",
+        )
+
+    # weight grads on the float backends (quantized storage is frozen)
+    if be.layout in ("natural", "dip") and be.tiled:
+        gw = jax.grad(
+            lambda w: loss(backend, w)(x, *operands)
+        )(wobj)
+        gw_ref = jax.grad(
+            lambda w: loss("xla", w)(x, *operands)
+        )(wobj)
+        for a, b in zip(jax.tree_util.tree_leaves(gw),
+                        jax.tree_util.tree_leaves(gw_ref)):
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), atol=1e-3, rtol=1e-3,
+                err_msg=f"{backend}/{epilogue} weight grad",
+            )
+
+
+@pytest.mark.parametrize("scheme", sorted(api.quant.SCHEMES))
+def test_quantized_scale_bias_activation_composition(scheme):
+    """The quantized flush composes scale-on-output THEN bias THEN
+    activation (kernels/dip_matmul_q.py): assert that exact ordering against
+    a hand-built jnp expression, not just the packaged oracle."""
+    m, k, n = 16, 64, 128
+    r = np.random.default_rng(37)
+    x = jnp.asarray(r.normal(0, 1, (m, k)).astype(np.float32))
+    w = jnp.asarray(r.normal(0, 1, (k, n)).astype(np.float32))
+    bias = jnp.asarray(r.normal(0, 1, (n,)).astype(np.float32))
+    qw = api.quant.quantize(w, scheme)
+    got = api.matmul(x, qw, epilogue="bias_silu", epilogue_operands=(bias,))
+    from repro.core import permute
+    wn = permute.unpermute_tiled(qw.data, qw.perm_tile)
+    if scheme == "int8":
+        xq, xs = ref.quantize_acts_int8(x)
+        z = jnp.matmul(xq, wn, preferred_element_type=jnp.int32).astype(jnp.float32)
+        z = z * xs * qw.scale
+    else:
+        z = jnp.matmul(x, wn.astype(jnp.float32)) * qw.scale
+    want = jax.nn.silu(z + bias)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), atol=2e-3, rtol=2e-3,
+    )
+
+
+def test_decomposed_epilogue_keeps_float_output_for_integer_matmuls():
+    """The decomposition rule is 'identical semantics': an epilogue on an
+    integer-accumulating dispatch yields a FLOAT result on the fused kernels
+    (f32 epilogue arithmetic), so the decomposed path must too — not a
+    silent truncation back to the matmul's integer dtype."""
+    r = np.random.default_rng(43)
+    x = jnp.asarray(r.integers(-1, 2, (8, 64)).astype(np.int8))
+    w = jnp.asarray(r.integers(-1, 2, (64, 64)).astype(np.int8))
+    bias = jnp.asarray(r.normal(0, 1, (64,)).astype(np.float32))
+    fused = api.matmul(x, w, backend="ws", epilogue="bias_silu",
+                       epilogue_operands=(bias,))
+    # ws with block overrides pinned to the problem == the kernel's own
+    # dtype rule; xla decomposes (declares no fused epilogues)
+    decomposed = api.matmul(x.astype(jnp.float32), w.astype(jnp.float32),
+                            backend="xla", epilogue="bias_silu",
+                            epilogue_operands=(bias,))
+    assert fused.dtype == jnp.float32
+    assert decomposed.dtype == jnp.float32
+    np.testing.assert_allclose(
+        np.asarray(fused), np.asarray(decomposed), atol=2e-3, rtol=2e-3,
+    )
+
+
+def test_epilogue_validation_rejects_malformed_inputs():
+    x = jnp.ones((4, 64), jnp.float32)
+    w = jnp.ones((64, 64), jnp.float32)
+    with pytest.raises(ValueError, match="unknown epilogue"):
+        api.matmul(x, w, epilogue="bias_relu")
+    with pytest.raises(ValueError, match="weight pair"):
+        api.matmul(x, w, epilogue="swiglu")
+    with pytest.raises(ValueError, match="only valid with the dual-weight"):
+        api.matmul(x, (w, w), epilogue="bias", epilogue_operands=(jnp.ones((64,)),))
+    with pytest.raises(ValueError, match="epilogue_operands"):
+        api.matmul(x, w, epilogue="bias")
+    with pytest.raises(ValueError, match="bias must be"):
+        api.matmul(x, w, epilogue="bias", epilogue_operands=(jnp.ones((65,)),))
+    with pytest.raises(ValueError, match="residual must match"):
+        api.matmul(x, w, epilogue="residual",
+                   epilogue_operands=(jnp.ones((5, 64)),))
+    with pytest.raises(ValueError, match="share logical dims"):
+        api.matmul(x, (w, jnp.ones((64, 128), jnp.float32)), epilogue="swiglu")
+    with pytest.raises(ValueError, match="share a quantization scheme"):
+        api.matmul(
+            x,
+            (api.quant.quantize(w, "int8"), api.quant.quantize(w, "fp8_e4m3")),
+            backend="xla", epilogue="swiglu",
+        )
+
+
+def test_swiglu_pair_through_scan_and_jit():
+    """The dual-weight dispatch must cross jit/scan boundaries like any
+    other matmul (layer-stacked gate/up pairs scan transparently)."""
+    r = np.random.default_rng(41)
+    wg = jnp.asarray(r.normal(0, 1, (3, 100, 130)).astype(np.float32))
+    wu = jnp.asarray(r.normal(0, 1, (3, 100, 130)).astype(np.float32))
+    sg = api.DipWeight.from_natural(wg)
+    su = api.DipWeight.from_natural(wu)
+    x = jnp.asarray(r.normal(0, 1, (8, 100)).astype(np.float32))
+
+    @jax.jit
+    def f(xx, g, u):
+        return api.matmul(xx, (g, u), backend="pallas_dip", epilogue="swiglu")
+
+    def body(carry, lw):
+        g, u = lw
+        return carry, f(x, g, u)
+
+    _, scanned = jax.lax.scan(body, 0, (sg, su))
+    assert scanned.shape == (3, 8, 130)
+    for i in range(3):
+        want = jax.nn.silu(x @ wg[i]) * (x @ wu[i])
+        np.testing.assert_allclose(
+            np.asarray(scanned[i]), np.asarray(want), atol=2e-3, rtol=2e-3,
+        )
 
 
 # -------------------------------------------------------------- gradients ---

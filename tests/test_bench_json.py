@@ -1,0 +1,43 @@
+"""Perf reporting must not silently rot: the kernels benchmark's
+machine-readable output (BENCH_kernels.json) is produced and schema-valid
+on a tiny interpret-mode shape — the same invocation the CI ``bench-smoke``
+job runs.
+"""
+
+import json
+
+import pytest
+
+kernels_bench = pytest.importorskip("benchmarks.kernels_bench")
+
+
+def test_compare_epilogues_writes_schema_valid_json(tmp_path):
+    out = tmp_path / "BENCH_kernels.json"
+    rc = kernels_bench.main(
+        ["--compare-epilogues", "--tiny", "--iters", "1", "--out", str(out)]
+    )
+    assert rc == 0 and out.exists()
+    payload = kernels_bench.validate_bench_json(out)
+    ec = payload["epilogue_compare"]
+    # the acceptance headline: fused SwiGLU is ONE kernel launch where the
+    # unfused path is three ops (two matmul launches + elementwise glue)
+    swiglu = next(r for r in ec["results"] if r["epilogue"] == "swiglu")
+    assert swiglu["fused_pallas_calls"] == 1
+    assert swiglu["unfused_pallas_calls"] >= 2
+    assert {r["epilogue"] for r in ec["results"]} >= {"bias", "swiglu", "residual"}
+    assert payload["entries"], "timing entries missing"
+
+
+def test_validate_bench_json_rejects_schema_violations(tmp_path):
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"schema_version": 999, "entries": []}))
+    with pytest.raises(ValueError, match="schema_version"):
+        kernels_bench.validate_bench_json(bad)
+    bad.write_text(json.dumps({
+        "schema_version": kernels_bench.BENCH_SCHEMA_VERSION,
+        "entries": [{"name": "x", "us_per_call": 1.0}],
+        "epilogue_compare": {"backend": "pallas_dip", "shape": [1, 2, 3],
+                             "results": [{"epilogue": "bias"}]},
+    }))
+    with pytest.raises(ValueError, match="missing"):
+        kernels_bench.validate_bench_json(bad)
