@@ -21,7 +21,10 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import pathlib
+import subprocess
+import sys
 import time
 from typing import List, Optional, Sequence
 
@@ -182,8 +185,138 @@ def compare_epilogues(
 
 
 # ---------------------------------------------------------------------------
+# explicit-sharding comparison (dip_tp vs GSPMD-xla on virtual devices)
+def compare_sharded(
+    *,
+    m: int = 16,
+    k: int = 256,
+    n: int = 256,
+    iters: int = 3,
+    verbose: bool = True,
+) -> dict:
+    """Time the explicit ``dip_tp``/``dip_fsdp`` shard_map dispatch against
+    the implicit GSPMD-on-xla path on the live (virtual) mesh, and record
+    launch/collective counts for both.
+
+    Structural evidence, not wall-clock truth: on forced-host CPU devices
+    both paths run emulated, so the *counts* are the durable signal — the
+    explicit backends' collectives come straight from the jaxpr (zero for
+    column, one psum for row, one all_gather for fsdp) while GSPMD's are
+    counted from the partitioned HLO, where XLA chose them.  Parity between
+    the two paths is asserted alongside the timings.
+    """
+    from repro.distributed.plan import WeightPlan, make_local_mesh
+    from repro.kernels.dip_matmul_sharded import count_collectives
+
+    devs = jax.device_count()
+    model = 4 if devs % 4 == 0 else devs
+    mesh = make_local_mesh(data=devs // model, model=model)
+    col = WeightPlan("column", axis="model", fsdp="data", mesh=mesh)
+    row = WeightPlan("row", axis="model", fsdp="data", mesh=mesh)
+
+    r = np.random.default_rng(0)
+    x = jnp.asarray(r.normal(0, 1, (m, k)).astype(np.float32))
+    wn = jnp.asarray(r.normal(0, 1, (k, n)).astype(np.float32))
+
+    def gspmd_fn(spec):
+        # the implicit path: same DiP storage placed with the CASE's
+        # partitioning (column: N over TP; row: K over TP; fsdp: K over
+        # data) and the dot left to GSPMD
+        dw = api.DipWeight.from_natural(wn)
+        dws = dw.with_data(
+            jax.device_put(dw.data, jax.sharding.NamedSharding(mesh, spec))
+        )
+        return jax.jit(lambda a: api.matmul(a, dws, backend="xla")), dws
+
+    def hlo_collectives(jitted, *args) -> int:
+        txt = jitted.lower(*args).compile().as_text()
+        return sum(txt.count(s) for s in
+                   ("all-reduce(", "all-gather(", "collective-permute(",
+                    "all-to-all("))
+
+    P = jax.sharding.PartitionSpec
+    cases = [("column", "dip_tp", col, P(None, "model")),
+             ("row", "dip_tp", row, P("model", None)),
+             ("fsdp", "dip_fsdp", col, P("data", None))]
+    results = []
+    for label, backend, plan, gspmd_spec in cases:
+        dw = api.DipWeight.from_natural(wn, plan=plan)
+        explicit = jax.jit(lambda a, _dw=dw, _b=backend: api.matmul(a, _dw, backend=_b))
+        gspmd, _ = gspmd_fn(gspmd_spec)
+        with mesh:
+            got = explicit(x)
+            want = gspmd(x)
+            np.testing.assert_allclose(  # parity rides with the timing
+                np.asarray(got), np.asarray(want), atol=2e-3, rtol=2e-3,
+            )
+            t_explicit = _time(explicit, x, iters=iters)
+            t_gspmd = _time(gspmd, x, iters=iters)
+            counts = count_collectives(explicit, x)
+            n_hlo = hlo_collectives(gspmd, x)
+        rec = {
+            "case": label,
+            "backend": backend,
+            "explicit_us": round(t_explicit, 1),
+            "gspmd_us": round(t_gspmd, 1),
+            "psums": counts["psum"],
+            "all_gathers": counts["all_gather"],
+            "pallas_calls": counts["pallas_call"],
+            "gspmd_hlo_collectives": n_hlo,
+        }
+        results.append(rec)
+        if verbose:
+            print(f"  {label:>7} ({backend}): explicit {t_explicit:9.1f} us "
+                  f"[{counts['psum']} psum, {counts['all_gather']} all_gather, "
+                  f"{counts['pallas_call']} launch] vs GSPMD-xla "
+                  f"{t_gspmd:9.1f} us [{n_hlo} HLO collectives]")
+    assert next(r_ for r_ in results if r_["case"] == "column")["psums"] == 0
+    assert next(r_ for r_ in results if r_["case"] == "row")["psums"] == 1
+    assert next(r_ for r_ in results if r_["case"] == "fsdp")["all_gathers"] == 1
+    return {
+        "mesh_axes": {str(a): int(s) for a, s in mesh.shape.items()},
+        "shape": [m, k, n],
+        "mode": "interpret" if api.default_interpret() else "compiled",
+        "results": results,
+    }
+
+
+_REEXEC_SENTINEL = "REPRO_DIP_SHARDED_REEXEC"
+
+
+def _reexec_with_devices(argv: Sequence[str], devices: int) -> int:
+    """`--sharded` needs a multi-device topology; XLA locks the device count
+    at first init, so spawn a fresh interpreter with forced host devices.
+    One level deep only: if the child STILL comes up short (e.g. a platform
+    override the forced-count flag cannot affect), it errors instead of
+    re-execing again."""
+    if os.environ.get(_REEXEC_SENTINEL):
+        raise SystemExit(
+            f"--sharded: re-exec with forced host devices still sees "
+            f"{jax.device_count()} device(s) (< {devices}); check "
+            "JAX_PLATFORMS/XLA_FLAGS overrides"
+        )
+    env = dict(os.environ)
+    env[_REEXEC_SENTINEL] = "1"
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={devices} "
+        + env.get("XLA_FLAGS", "")
+    ).strip()
+    env["JAX_PLATFORMS"] = "cpu"  # the forced count only exists on cpu
+    root = pathlib.Path(__file__).resolve().parent.parent
+    env["PYTHONPATH"] = os.pathsep.join(
+        [str(root / "src")] + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else [])
+    )
+    proc = subprocess.run(
+        [sys.executable, str(pathlib.Path(__file__).resolve()), *argv],
+        env=env, cwd=str(root),
+    )
+    return proc.returncode
+
+
+# ---------------------------------------------------------------------------
 # machine-readable output
-def write_bench_json(path, csv_rows, epilogue_compare: Optional[dict]) -> pathlib.Path:
+def write_bench_json(path, csv_rows, epilogue_compare: Optional[dict],
+                     sharded_compare: Optional[dict] = None) -> pathlib.Path:
     p = pathlib.Path(path)
     payload = {
         "schema_version": BENCH_SCHEMA_VERSION,
@@ -196,6 +329,8 @@ def write_bench_json(path, csv_rows, epilogue_compare: Optional[dict]) -> pathli
     }
     if epilogue_compare is not None:
         payload["epilogue_compare"] = epilogue_compare
+    if sharded_compare is not None:
+        payload["sharded_compare"] = sharded_compare
     p.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
     return p
 
@@ -230,6 +365,31 @@ def validate_bench_json(path) -> dict:
         need(bool(swiglu), "epilogue_compare must include the swiglu headline")
         need(swiglu[0]["fused_pallas_calls"] <= 1,
              "fused swiglu recorded more than one kernel launch")
+    if "sharded_compare" in payload:
+        sc = payload["sharded_compare"]
+        need(isinstance(sc.get("mesh_axes"), dict) and sc["mesh_axes"],
+             "sharded_compare.mesh_axes")
+        need(isinstance(sc.get("shape"), list) and len(sc["shape"]) == 3,
+             "sharded_compare.shape must be [m, k, n]")
+        need(isinstance(sc.get("results"), list) and sc["results"],
+             "sharded_compare.results empty")
+        by_case = {}
+        for rec in sc["results"]:
+            for key in ("case", "backend", "explicit_us", "gspmd_us",
+                        "psums", "all_gathers", "pallas_calls",
+                        "gspmd_hlo_collectives"):
+                need(key in rec, f"sharded_compare result missing {key!r}")
+            by_case[rec["case"]] = rec
+        need({"column", "row", "fsdp"} <= set(by_case),
+             "sharded_compare must cover column, row, and fsdp")
+        # the collective-placement contract IS the schema: a drifting count
+        # fails the bench, not just a test somewhere else
+        need(by_case["column"]["psums"] == 0 and by_case["column"]["all_gathers"] == 0,
+             "column-parallel recorded collectives (contract: zero)")
+        need(by_case["row"]["psums"] == 1,
+             "row-parallel must record exactly one psum")
+        need(by_case["fsdp"]["all_gathers"] == 1,
+             "fsdp must record exactly one all_gather per weight")
     return payload
 
 
@@ -355,6 +515,13 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     )
     ap.add_argument("--compare-epilogues", action="store_true",
                     help="run ONLY the fused-vs-unfused epilogue comparison")
+    ap.add_argument("--sharded", action="store_true",
+                    help="run ONLY the explicit-sharding comparison (dip_tp/"
+                         "dip_fsdp vs GSPMD-xla); re-execs itself with "
+                         "--xla_force_host_platform_device_count when the "
+                         "topology is single-device")
+    ap.add_argument("--devices", type=int, default=8,
+                    help="virtual device count for --sharded (default 8)")
     ap.add_argument("--backend", default="pallas_dip",
                     help="backend for --compare-epilogues (default pallas_dip)")
     ap.add_argument("--tiny", action="store_true",
@@ -365,6 +532,28 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     args = ap.parse_args(argv)
 
     csv_rows: List = []
+    if args.sharded:
+        if jax.device_count() < args.devices:
+            return _reexec_with_devices(
+                ["--sharded", "--devices", str(args.devices),
+                 "--iters", str(args.iters), "--out", args.out]
+                + (["--tiny"] if args.tiny else []),
+                args.devices,
+            )
+        m, k, n = (8, 256, 256) if args.tiny else (64, 512, 512)
+        print(f"== explicit sharding vs GSPMD-xla "
+              f"({jax.device_count()} devices, {m}x{k}x{n}) ==")
+        sc = compare_sharded(m=m, k=k, n=n, iters=args.iters)
+        for rec in sc["results"]:
+            csv_rows.append((
+                f"kern_sharded_{rec['case']}_explicit", rec["explicit_us"],
+                f"vs_gspmd_{rec['gspmd_us']}us_psum{rec['psums']}"
+                f"_ag{rec['all_gathers']}_launch{rec['pallas_calls']}",
+            ))
+        path = write_bench_json(args.out, csv_rows, None, sc)
+        validate_bench_json(path)
+        print(f"machine-readable record: {path}")
+        return 0
     if args.compare_epilogues:
         m, k, n = (32, 64, 64) if args.tiny else (64, 256, 256)
         print(f"== fused-vs-unfused epilogues ({args.backend} {m}x{k}x{n}) ==")

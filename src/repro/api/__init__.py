@@ -11,10 +11,13 @@ Two first-class concepts (see ``docs/api.md``):
   ``dip_fp8`` backends (see ``docs/quantization.md``).
 * the matmul-backend registry — ``matmul(x, w, backend=...)`` dispatches to
   named, pluggable implementations (``xla`` / ``ws`` / ``pallas_dip`` /
-  ``pallas_systolic`` / ``dip_int8w`` / ``dip_fp8``) with block sizes drawn
-  from a per-shape/dtype tuning table; dispatch is weight-type aware, so a
-  quantized weight routes to its scheme's kernel with zero call-site
-  changes.  ``matmul(..., epilogue=...)`` fuses bias / activation / SwiGLU /
+  ``pallas_systolic`` / ``dip_int8w`` / ``dip_fp8`` / ``dip_tp`` /
+  ``dip_fsdp``) with block sizes drawn from a per-shape/dtype tuning table;
+  dispatch is weight-type aware, so a quantized weight routes to its
+  scheme's kernel with zero call-site changes, and plan-aware, so a weight
+  carrying a ``WeightPlan`` (``repro.distributed.plan``) routes to the
+  explicit multi-chip shard_map backends — see ``docs/distributed.md``.
+  ``matmul(..., epilogue=...)`` fuses bias / activation / SwiGLU /
   residual into the kernels' accumulator flush where the backend supports
   it and decomposes (same semantics, unfused) where it does not — see
   ``docs/api.md`` §Fused epilogues and ``kernels/epilogue.py``.

@@ -92,7 +92,7 @@ class QuantizedDipWeight:
     tracers, ``ShapeDtypeStruct``s, and shardings through the same container.
     """
 
-    __slots__ = ("data", "scale", "d_in", "d_out", "perm_tile", "scheme")
+    __slots__ = ("data", "scale", "d_in", "d_out", "perm_tile", "scheme", "plan")
 
     def __init__(
         self,
@@ -102,6 +102,7 @@ class QuantizedDipWeight:
         d_out: int,
         perm_tile: int = PERM_TILE,
         scheme: str = "int8",
+        plan: Any = None,
     ):
         self.data = data
         self.scale = scale
@@ -109,6 +110,7 @@ class QuantizedDipWeight:
         self.d_out = int(d_out)
         self.perm_tile = int(perm_tile)
         self.scheme = str(scheme)
+        self.plan = plan  # hashable WeightPlan or None (static aux data)
 
     # ------------------------------------------------------------- pytree --
     def tree_flatten_with_keys(self):
@@ -117,7 +119,7 @@ class QuantizedDipWeight:
                 (jax.tree_util.GetAttrKey("data"), self.data),
                 (jax.tree_util.GetAttrKey("scale"), self.scale),
             ),
-            (self.d_in, self.d_out, self.perm_tile, self.scheme),
+            (self.d_in, self.d_out, self.perm_tile, self.scheme, self.plan),
         )
 
     @classmethod
@@ -154,9 +156,10 @@ class QuantizedDipWeight:
     # -------------------------------------------------------- conversions --
     def dequantize(self, dtype=jnp.float32) -> DipWeight:
         """Scales applied in the *permutated* domain (column scales commute
-        with the per-column row rotation) — returns a float ``DipWeight``."""
+        with the per-column row rotation) — returns a float ``DipWeight``
+        (the partition plan rides along)."""
         wd = (self.data.astype(jnp.float32) * self.scale).astype(dtype)
-        return DipWeight(wd, self.d_in, self.d_out, self.perm_tile)
+        return DipWeight(wd, self.d_in, self.d_out, self.perm_tile, self.plan)
 
     def to_natural(self, dtype=jnp.float32) -> jax.Array:
         """Dequantized natural-layout weight (inverse permutation + crop)."""
@@ -165,7 +168,18 @@ class QuantizedDipWeight:
     def with_data(self, data: Any, scale: Any) -> "QuantizedDipWeight":
         """Same metadata, different payloads (shardings, specs)."""
         return QuantizedDipWeight(
-            data, scale, self.d_in, self.d_out, self.perm_tile, self.scheme
+            data, scale, self.d_in, self.d_out, self.perm_tile, self.scheme,
+            self.plan,
+        )
+
+    def with_plan(self, plan: Any) -> "QuantizedDipWeight":
+        """Same payloads, different partition decision (see
+        ``repro.distributed.plan.ShardingPlan.attach_params``)."""
+        if plan == self.plan:
+            return self
+        return QuantizedDipWeight(
+            self.data, self.scale, self.d_in, self.d_out, self.perm_tile,
+            self.scheme, plan,
         )
 
     def __repr__(self) -> str:
@@ -173,9 +187,10 @@ class QuantizedDipWeight:
         desc = (
             f"{getattr(data, 'shape', None)}:{getattr(data, 'dtype', type(data).__name__)}"
         )
+        plan = f", plan={self.plan!r}" if self.plan is not None else ""
         return (
             f"QuantizedDipWeight({desc}, scheme={self.scheme!r}, "
-            f"d_in={self.d_in}, d_out={self.d_out}, perm_tile={self.perm_tile})"
+            f"d_in={self.d_in}, d_out={self.d_out}, perm_tile={self.perm_tile}{plan})"
         )
 
 
@@ -213,8 +228,10 @@ def quantize(
             f"{scheme!r} would stack two rounding errors — dequantize from "
             "the float checkpoint instead"
         )
+    plan = None
     if isinstance(w, DipWeight):
         perm_tile = w.perm_tile
+        plan = w.plan
         wn = w.to_natural()
     else:
         wn = w
@@ -237,7 +254,8 @@ def quantize(
     storage = permute.permute_tiled(q_nat, perm_tile)              # padded grid
     np_cols = storage.shape[-1]
     scale_p = _pad_cols(scale, np_cols, 1.0)                       # (..., 1, Np)
-    return QuantizedDipWeight(storage, scale_p, d_in, d_out, perm_tile, scheme)
+    return QuantizedDipWeight(storage, scale_p, d_in, d_out, perm_tile, scheme,
+                              plan)
 
 
 def dequantize(qw: QuantizedDipWeight, dtype=jnp.float32) -> DipWeight:

@@ -15,6 +15,12 @@ weight layout they consume:
                        scales (``QuantizedDipWeight``); a float weight
                        argument is quantized on the fly with the backend's
                        declared scheme
+    layout="sharded"   explicit multi-chip dispatch: consumes the
+                       ``WeightPlan`` carried on a ``DipWeight`` /
+                       ``QuantizedDipWeight`` (see repro.distributed.plan)
+                       and runs a ``shard_map`` over the tiled kernels; a
+                       weight with NO plan attached decomposes to the
+                       implicit GSPMD path (``backend=None`` dispatch)
 
 Built-in backends:
 
@@ -29,6 +35,18 @@ Built-in backends:
                      scale-on-output — ADiP-style mixed precision)
     dip_fp8          fp8-e4m3-weight kernel (device-gated compute width,
                      emulated fallback)
+    dip_tp           explicit tensor-parallel shard_map backend: column /
+                     row per the weight's plan, collectives placed by hand
+                     (zero for column, ONE psum for row — fused past the
+                     epilogue; see kernels/dip_matmul_sharded.py)
+    dip_fsdp         explicit ZeRO-3 shard_map backend: K-sharded storage,
+                     all-gather-on-load, batch-sharded compute
+
+Multi-chip dispatch is plan-aware: ``matmul`` keys on **(weight.plan,
+backend, epilogue)** — the sharded backends consume the ``WeightPlan`` a
+``ShardingPlan.attach_params`` stamped on the weight, and decompose to the
+implicit GSPMD path when no plan is attached (so the same call site serves
+single-device, GSPMD, and explicit-collective execution).
 
 Dispatch is weight-type aware with zero call-site changes: a
 ``QuantizedDipWeight`` with ``backend=None`` routes to its scheme's default
@@ -89,7 +107,7 @@ DEFAULT_BACKEND = "xla"
 
 EPILOGUES = epilogue_lib.EPILOGUES
 
-_LAYOUTS = ("natural", "dip", "dip_q")
+_LAYOUTS = ("natural", "dip", "dip_q", "sharded")
 
 
 def default_interpret() -> bool:
@@ -328,6 +346,11 @@ def register_backend(
             "drives them through the shared padding/custom-VJP shim (see the "
             "MatmulBackend.fn contract)"
         )
+    if layout == "sharded" and tiled:
+        raise ValueError(
+            "sharded-layout backends run through shard_map dispatch, not "
+            "the tiled shim; register with tiled=False"
+        )
     if layout == "dip_q":
         quant.scheme_info(scheme)  # raises on unknown/missing schemes
     elif scheme is not None:
@@ -337,7 +360,9 @@ def register_backend(
     for e in epilogues:
         epilogue_lib.spec(e)  # raises on unknown names
     epilogue_set = frozenset(epilogues) | {"none"}
-    if not tiled and epilogue_set != {"none"}:
+    if not tiled and layout != "sharded" and epilogue_set != {"none"}:
+        # sharded backends DO honour epilogues (fused per shard / applied
+        # once past the psum), so they are exempt from this check
         raise ValueError(
             "non-tiled backends cannot fuse epilogues (there is no flush "
             "stage to fuse into) — matmul decomposes for them; drop the "
@@ -377,7 +402,8 @@ def list_backends() -> List[str]:
 
 
 def backend_layout(name: Optional[str] = None) -> str:
-    """Weight layout the named backend consumes ("natural" | "dip")."""
+    """Weight layout the named backend consumes ("natural" | "dip" |
+    "dip_q" | "sharded")."""
     return get_backend(name).layout
 
 
@@ -643,6 +669,30 @@ def matmul(
                 block_m, block_n, block_k, interpret,
             )
 
+    if be.layout == "sharded":
+        # plan-aware dispatch: (weight.plan, backend, epilogue).  A weight
+        # with no plan (or a replicated one) decomposes to the implicit
+        # GSPMD path — backend=None re-dispatch keeps the weight-type rules
+        # (quantized weights route to their scheme's kernel, DipWeight to
+        # the de-shear-as-gather xla path).
+        plan = getattr(weights[0], "plan", None)
+        if (
+            plan is None
+            or getattr(plan, "mesh", None) is None
+            or (be.name == "dip_tp" and plan.kind == "replicated")
+            or (be.name == "dip_fsdp" and plan.fsdp is None)
+        ):
+            return matmul(
+                x, w, backend=None, epilogue=epilogue if epilogue != "none" else None,
+                epilogue_operands=operands, block_m=block_m, block_n=block_n,
+                block_k=block_k, interpret=interpret,
+            )
+        return be.fn(
+            x, weights, operands, plan=plan, epilogue=epilogue,
+            interpret=interpret, block_m=block_m, block_n=block_n,
+            block_k=block_k,
+        )
+
     if be.layout == "dip_q":
         qws = []
         for wi in weights:
@@ -711,6 +761,7 @@ def matmul(
 def _register_builtins() -> None:
     from repro.kernels.dip_matmul import dip_matmul_pallas
     from repro.kernels.dip_matmul_q import dip_matmul_q_pallas
+    from repro.kernels.dip_matmul_sharded import dip_fsdp_matmul, dip_tp_matmul
     from repro.kernels.dip_systolic import dip_systolic_pallas
     from repro.kernels.ws_matmul import ws_matmul_pallas
 
@@ -780,4 +831,17 @@ def _register_builtins() -> None:
         epilogues=EPILOGUES,
         description="fp8-e4m3-weight kernel: device-gated compute width "
                     "with emulated (f32) fallback, fused scale-on-output",
+    )
+    register_backend(
+        "dip_tp", dip_tp_matmul, layout="sharded", tiled=False,
+        epilogues=EPILOGUES,
+        description="explicit tensor-parallel shard_map backend: column/row "
+                    "per the weight's WeightPlan; zero collectives for "
+                    "column, ONE psum (past the epilogue) for row",
+    )
+    register_backend(
+        "dip_fsdp", dip_fsdp_matmul, layout="sharded", tiled=False,
+        epilogues=EPILOGUES,
+        description="explicit ZeRO-3 shard_map backend: K-sharded storage, "
+                    "all-gather-on-load, batch(M)-sharded compute",
     )

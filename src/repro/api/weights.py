@@ -15,6 +15,14 @@ dispatch all key off the *type*:
               ``d_out``      logical output dim (N before padding)
               ``perm_tile``  the array dimension the permutation tiles over
                              (64 in the paper)
+              ``plan``       optional partition decision (a hashable
+                             ``repro.distributed.plan.WeightPlan``): which
+                             mesh axes the storage dims shard over.  Carried
+                             as static aux data, so it survives jit / scan /
+                             grad / checkpoint round-trips; ``api.matmul``
+                             dispatches the explicit sharded backends
+                             (``dip_tp`` / ``dip_fsdp``) off it and falls
+                             back to GSPMD when it is absent.
 
 Registered as a pytree node **with keys**: ``jax.jit``, ``jax.grad``,
 ``jax.lax.scan``, optimizer ``tree_map``s, and ``tree_flatten_with_path``
@@ -50,19 +58,21 @@ class DipWeight:
     the same container, so the constructor must accept any payload.
     """
 
-    __slots__ = ("data", "d_in", "d_out", "perm_tile")
+    __slots__ = ("data", "d_in", "d_out", "perm_tile", "plan")
 
-    def __init__(self, data: Any, d_in: int, d_out: int, perm_tile: int = PERM_TILE):
+    def __init__(self, data: Any, d_in: int, d_out: int,
+                 perm_tile: int = PERM_TILE, plan: Any = None):
         self.data = data
         self.d_in = int(d_in)
         self.d_out = int(d_out)
         self.perm_tile = int(perm_tile)
+        self.plan = plan  # hashable WeightPlan or None (static aux data)
 
     # ------------------------------------------------------------- pytree --
     def tree_flatten_with_keys(self):
         return (
             ((jax.tree_util.GetAttrKey("data"), self.data),),
-            (self.d_in, self.d_out, self.perm_tile),
+            (self.d_in, self.d_out, self.perm_tile, self.plan),
         )
 
     @classmethod
@@ -76,12 +86,13 @@ class DipWeight:
         return _pad_up(d_in, perm_tile), _pad_up(d_out, perm_tile)
 
     @classmethod
-    def from_natural(cls, w: jax.Array, perm_tile: int = PERM_TILE) -> "DipWeight":
+    def from_natural(cls, w: jax.Array, perm_tile: int = PERM_TILE,
+                     plan: Any = None) -> "DipWeight":
         """Offline permutation (paper Fig. 3): pad the trailing two dims to
         the tile grid and permute each tile.  Leading batch dims (e.g. a
         layer-stacking axis) pass through untouched."""
         d_in, d_out = int(w.shape[-2]), int(w.shape[-1])
-        return cls(permute.permute_tiled(w, perm_tile), d_in, d_out, perm_tile)
+        return cls(permute.permute_tiled(w, perm_tile), d_in, d_out, perm_tile, plan)
 
     # ------------------------------------------------------------ queries --
     @property
@@ -124,20 +135,29 @@ class DipWeight:
                 "without scales; use repro.api.quant.quantize(w, "
                 "scheme=...) to build a QuantizedDipWeight instead"
             )
-        return DipWeight(self.data.astype(dtype), self.d_in, self.d_out, self.perm_tile)
+        return DipWeight(self.data.astype(dtype), self.d_in, self.d_out,
+                         self.perm_tile, self.plan)
 
     def with_data(self, data: Any) -> "DipWeight":
         """Same metadata, different payload (shardings, specs, moments)."""
-        return DipWeight(data, self.d_in, self.d_out, self.perm_tile)
+        return DipWeight(data, self.d_in, self.d_out, self.perm_tile, self.plan)
+
+    def with_plan(self, plan: Any) -> "DipWeight":
+        """Same payload, different partition decision (see
+        ``repro.distributed.plan.ShardingPlan.attach_params``)."""
+        if plan == self.plan:
+            return self
+        return DipWeight(self.data, self.d_in, self.d_out, self.perm_tile, plan)
 
     def __repr__(self) -> str:
         data = self.data
         desc = (
             f"{getattr(data, 'shape', None)}:{getattr(data, 'dtype', type(data).__name__)}"
         )
+        plan = f", plan={self.plan!r}" if self.plan is not None else ""
         return (
             f"DipWeight({desc}, d_in={self.d_in}, d_out={self.d_out}, "
-            f"perm_tile={self.perm_tile})"
+            f"perm_tile={self.perm_tile}{plan})"
         )
 
 

@@ -57,7 +57,9 @@ def _dip_index(tree) -> Dict[str, Dict]:
     alongside so manifests are self-describing and restore can verify the
     logical shape — and the quantization scheme — survive (padding and
     scheme are part of the type, not a convention the reader must
-    re-derive).
+    re-derive).  A ``WeightPlan`` attached to the weight serializes as its
+    JSON ``describe()`` form (mesh reduced to axis sizes) and is validated
+    on restore against the target's live plan/mesh.
     """
     flat, _ = jax.tree_util.tree_flatten_with_path(
         tree, is_leaf=lambda x: isinstance(x, (DipWeight, QuantizedDipWeight))
@@ -65,15 +67,58 @@ def _dip_index(tree) -> Dict[str, Dict]:
     out: Dict[str, Dict] = {}
     for path, node in flat:
         if isinstance(node, QuantizedDipWeight):
-            out["/".join(str(k) for k in path)] = {
+            entry = {
                 "d_in": node.d_in, "d_out": node.d_out,
                 "perm_tile": node.perm_tile, "scheme": node.scheme,
             }
         elif isinstance(node, DipWeight):
-            out["/".join(str(k) for k in path)] = {
+            entry = {
                 "d_in": node.d_in, "d_out": node.d_out, "perm_tile": node.perm_tile,
             }
+        else:
+            continue
+        plan = getattr(node, "plan", None)
+        if plan is not None and hasattr(plan, "describe"):
+            entry["plan"] = plan.describe()
+        out["/".join(str(k) for k in path)] = entry
     return out
+
+
+_DIP_CORE_KEYS = ("d_in", "d_out", "perm_tile", "scheme")
+
+
+def _check_dip_entry(path: str, saved: Dict, live: Dict) -> None:
+    """Restore-time validation of one DipWeight manifest entry.
+
+    Core metadata (logical dims, perm tile, quantization scheme) must match
+    exactly.  Partition plans are validated for *compatibility* with the
+    live target, not identity: the saved kind/axes must agree when both
+    sides carry a plan, and the saved plan's axes must exist in the live
+    mesh (checkpoints are mesh-independent — elastic re-mesh only changes
+    axis sizes, never the axes a weight's role shards over)."""
+    if any(saved.get(k) != live.get(k) for k in _DIP_CORE_KEYS):
+        raise ValueError(
+            f"DipWeight metadata mismatch at {path}: checkpoint {saved}, "
+            f"restore target {live}"
+        )
+    sp, lp = saved.get("plan"), live.get("plan")
+    if not sp or not lp:
+        return  # plan-free on either side: nothing to validate against
+    if (sp.get("kind"), sp.get("axis"), sp.get("fsdp")) != (
+        lp.get("kind"), lp.get("axis"), lp.get("fsdp")
+    ):
+        raise ValueError(
+            f"ShardingPlan mismatch at {path}: checkpoint plan {sp}, "
+            f"restore target plan {lp}"
+        )
+    live_axes = lp.get("mesh_axes") or {}
+    for a in (sp.get("axis"), sp.get("fsdp")):
+        if a and a not in live_axes:
+            raise ValueError(
+                f"ShardingPlan mismatch at {path}: saved plan shards over "
+                f"axis {a!r} which the live mesh (axes {sorted(live_axes)}) "
+                "does not have"
+            )
 
 
 def _npy_safe(arr: np.ndarray) -> np.ndarray:
@@ -123,11 +168,8 @@ def restore_pytree(path: str, like: Any, *, shardings: Any = None) -> Any:
     live_dip = _dip_index(like)
     for p, info in saved_dip.items():
         live = live_dip.get(p)
-        if live is not None and live != info:
-            raise ValueError(
-                f"DipWeight metadata mismatch at {p}: checkpoint {info}, "
-                f"restore target {live}"
-            )
+        if live is not None:
+            _check_dip_entry(p, info, live)
     paths, leaves, treedef = _flatten_with_paths(like)
     by_path = {e["path"]: e for e in manifest["leaves"]}
     if set(paths) != set(by_path):

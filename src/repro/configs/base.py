@@ -66,6 +66,15 @@ class ArchConfig:
     quantization: str = "none"       # weight-quantization scheme for the DiP
                                      # projections: none | int8 | fp8_e4m3
                                      # (inference-only; see docs/quantization.md)
+    sharding: str = "gspmd"          # declared parallelism strategy consumed
+                                     # by repro.distributed.plan.make_plan:
+                                     #   gspmd  implicit XLA partitioning of
+                                     #          the plain dot (default)
+                                     #   tp     explicit column/row shard_map
+                                     #          kernels (dip_tp backend)
+                                     #   fsdp   explicit K-sharded
+                                     #          all-gather-on-load (dip_fsdp)
+                                     # (see docs/distributed.md)
     remat: str = "block"             # none | block  (remat each scanned block)
     # notes for DESIGN.md §Arch-applicability
     notes: str = ""
@@ -102,7 +111,9 @@ class ArchConfig:
             return True
         from repro import api  # deferred: keep config import light
 
-        return api.backend_layout(self.matmul_backend) in ("dip", "dip_q")
+        # sharded backends consume DipWeight storage too (the shard_map
+        # bodies run the dip-layout kernels on the local shards)
+        return api.backend_layout(self.matmul_backend) in ("dip", "dip_q", "sharded")
 
     @property
     def is_moe(self) -> bool:

@@ -1,11 +1,31 @@
-"""Distribution layer: sharding policy (DP/FSDP/TP/EP/SP), pipeline
-parallelism, and gradient compression."""
+"""Distribution layer: the first-class ShardingPlan (mesh construction +
+declarative per-weight partition rules + activation constraints), pipeline
+parallelism, and gradient compression.
+
+See ``docs/distributed.md``: ``make_plan`` builds the plan,
+``plan.attach_params`` stamps per-weight ``WeightPlan`` metadata, and the
+explicit ``dip_tp`` / ``dip_fsdp`` matmul backends dispatch on it.
+"""
 
 from repro.distributed.compression import compressed_psum, compression_transform
 from repro.distributed.pipeline import pipeline_apply
+from repro.distributed.plan import (
+    LAYER_RULES,
+    ShardingPlan,
+    WeightPlan,
+    make_local_mesh,
+    make_plan,
+    make_production_mesh,
+)
 from repro.distributed.sharding import ShardingPolicy, make_policy
 
 __all__ = [
+    "ShardingPlan",
+    "WeightPlan",
+    "LAYER_RULES",
+    "make_plan",
+    "make_production_mesh",
+    "make_local_mesh",
     "ShardingPolicy",
     "make_policy",
     "pipeline_apply",

@@ -1,294 +1,26 @@
-"""Sharding policy: DP / FSDP / TP / EP / SP rules for every pytree in the
-system (params, optimizer state, batches, KV caches, activations).
+"""Deprecation shim (one PR): the sharding policy is now the first-class
+``ShardingPlan`` in ``repro.distributed.plan``.
 
-Mesh convention (launch/mesh.py):
-    single-pod : (16, 16)      axes ("data", "model")
-    multi-pod  : (2, 16, 16)   axes ("pod", "data", "model")
-
-Parallelism mapping:
-    batch          -> ("pod", "data")          pure DP across pods (DCN), DP
-                                               within a pod (ICI)
-    FSDP (ZeRO-3)  -> "data"                   params + optimizer moments
-                                               sharded on a non-TP dim;
-                                               all-gathers stay on ICI
-    TP             -> "model"                  column/row-parallel pairs;
-                                               MoE experts (EP) also live on
-                                               "model"
-    SP             -> "model"                  sequence sharding for decode KV
-                                               caches (flash-decode combine)
-                                               and for archs whose head count
-                                               does not divide the TP size
-
-The policy is *declarative*: `param_pspec` maps template leaf names to
-PartitionSpecs; `constrain` maps semantic activation tags (see
-repro.models.attention) to with_sharding_constraint calls.  All rules degrade
-to divisibility-checked fallbacks (replicate rather than fail).
+The old ``ShardingPolicy`` — mesh-coupled ``param_pspec`` leaf-name ladder +
+``constrain`` activation hooks — was absorbed into :class:`ShardingPlan`:
+the leaf walk became the declarative ``plan.LAYER_RULES`` table, mesh
+construction moved in from ``launch/mesh.py``, and per-weight partition
+decisions are now stamped on the weights themselves
+(:meth:`ShardingPlan.attach_params`) so the explicit ``dip_tp`` /
+``dip_fsdp`` backends can dispatch on them.  ``ShardingPolicy`` /
+``make_policy`` remain importable aliases for existing call sites; new code
+should import from ``repro.distributed.plan`` (or ``repro.distributed``).
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, Optional, Tuple
-
-import jax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-
-from repro.api import DipWeight, QuantizedDipWeight
+from repro.distributed.plan import ShardingPlan, make_plan
 
 __all__ = ["ShardingPolicy", "make_policy"]
 
-
-def _divisible(n: int, mesh: Mesh, axis: Optional[str]) -> bool:
-    if axis is None:
-        return True
-    return axis in mesh.shape and n % mesh.shape[axis] == 0
+ShardingPolicy = ShardingPlan
 
 
-@dataclasses.dataclass
-class ShardingPolicy:
-    mesh: Mesh
-    cfg: Any
-    mode: str                     # train | prefill | decode
-    seq_parallel: bool = True     # Megatron-SP residual-stream sharding
-    # derived axis groupings
-    dp: Tuple[str, ...] = ()      # batch axes
-    fsdp: Optional[str] = None    # parameter shard axis
-    tp: Optional[str] = None      # tensor/expert axis
-
-    def __post_init__(self):
-        names = self.mesh.axis_names
-        self.dp = tuple(a for a in ("pod", "data") if a in names)
-        self.fsdp = "data" if "data" in names else None
-        self.tp = "model" if "model" in names else None
-
-    # ---------------------------------------------------------- helpers ----
-    def _tp_if(self, n: int) -> Optional[str]:
-        return self.tp if self.tp and _divisible(n, self.mesh, self.tp) else None
-
-    def _fsdp_if(self, n: int) -> Optional[str]:
-        return self.fsdp if self.fsdp and _divisible(n, self.mesh, self.fsdp) else None
-
-    def named(self, spec: P) -> NamedSharding:
-        return NamedSharding(self.mesh, spec)
-
-    def dp_for(self, n: int) -> Tuple[str, ...]:
-        """Largest prefix of the DP axes whose product divides ``n``
-        (batch=1 long-context cells replicate instead of failing)."""
-        axes = []
-        prod = 1
-        for a in self.dp:
-            if n % (prod * self.mesh.shape[a]) == 0:
-                axes.append(a)
-                prod *= self.mesh.shape[a]
-        return tuple(axes)
-
-    @property
-    def heads_on_tp(self) -> bool:
-        """Can attention shard heads over the TP axis (both q and kv)?"""
-        cfg = self.cfg
-        if not cfg.n_heads or not self.tp:
-            return False
-        tp = self.mesh.shape[self.tp]
-        if self.mode == "decode":
-            return cfg.n_kv_heads % tp == 0 and cfg.n_heads % tp == 0
-        return cfg.n_heads % tp == 0
-
-    # ------------------------------------------------------------ params ---
-    def param_pspec(self, name: str, shape: Tuple[int, ...]) -> P:
-        """PartitionSpec for a template leaf (layer-stacked shapes included)."""
-        cfg = self.cfg
-        stacked = name not in ("embed", "lm_head", "final_norm") and len(shape) >= 1
-        lead = (None,) if stacked and name not in ("attn_norm_shared",) else ()
-
-        def col(d_in, d_out):  # column-parallel matmul weight (d_in, d_out)
-            return P(*lead, self._fsdp_if(d_in), self._tp_if(d_out))
-
-        def row(d_in, d_out):  # row-parallel
-            return P(*lead, self._tp_if(d_in), self._fsdp_if(d_out))
-
-        if name == "embed":
-            return P(self._tp_if(shape[0]), self._fsdp_if(shape[1]))
-        if name == "lm_head":
-            # vocab over BOTH axes: fully-sharded weight AND no contraction
-            # psum (the d dim stays unsharded) — the logits come out already
-            # vocab-sharded.  padded_vocab guarantees divisibility.
-            combo = tuple(a for a in (self.fsdp, self.tp) if a)
-            size = 1
-            for a in combo:
-                size *= self.mesh.shape[a]
-            if combo and shape[1] % size == 0:
-                return P(None, combo)
-            return P(self._fsdp_if(shape[0]), self._tp_if(shape[1]))
-        if name == "final_norm":
-            return P(None)
-
-        body = shape[1:] if stacked else shape  # strip layer axis
-        # --- MoE expert banks: (L, E, d, ffe) / (L, E, ffe, d) ---
-        if name in ("w_gate", "w_up", "w_down") and len(shape) == 4:
-            e = body[0]
-            return P(*lead, self._tp_if(e), self._fsdp_if(body[1]), None)
-        if name == "router":
-            return P(*lead, self._fsdp_if(body[0]), None)
-        # --- column-parallel projections ---
-        if name in ("wq", "wk", "wv", "w_gate", "w_up", "in_proj", "w_dkv",
-                    "w_krope", "w_uk", "w_uv", "shared_w_gate", "shared_w_up"):
-            if len(body) != 2:
-                return P(*lead, *([None] * len(body)))
-            return col(*body)
-        # --- row-parallel projections ---
-        if name in ("wo", "w_down", "out_proj", "shared_w_down"):
-            if len(body) != 2:
-                return P(*lead, *([None] * len(body)))
-            return row(*body)
-        # --- biases follow their matmul's output sharding ---
-        if name in ("bq", "bk", "bv"):
-            return P(*lead, self._tp_if(body[0]))
-        # --- SSM per-channel / per-head vectors ---
-        if name in ("conv_w",):
-            return P(*lead, None, self._tp_if(body[1]))
-        if name in ("conv_b", "norm"):
-            return P(*lead, self._tp_if(body[0]))
-        if name in ("dt_bias", "A_log", "D"):
-            return P(*lead, self._tp_if(body[0]))
-        # norms and anything unknown: replicated (layer-stacked)
-        return P(*lead, *([None] * len(body)))
-
-    def param_shardings(self, template: Dict[str, Any]) -> Dict[str, Any]:
-        """NamedSharding pytree matching repro.models.transformer.param_template.
-
-        Accepts the template (tuple leaves, DiP linears carrying a
-        ``dip_meta`` 4th element), materialized params, or spec pytrees.
-        ``DipWeight`` nodes come back as ``DipWeight``-wrapped shardings with
-        identical metadata, so ``tree_map(device_put, params, shardings)``
-        traverses both trees in lockstep.  The DiP permutation is tile-local
-        (64x64), so the storage dims shard exactly like natural dims.
-        """
-
-        def walk(t, name=None):
-            if isinstance(t, dict):
-                return {k: walk(v, k) for k, v in t.items()}
-            if isinstance(t, QuantizedDipWeight):
-                spec = self.param_pspec(name, tuple(t.data.shape))
-                # per-output-channel scales follow the storage's N sharding;
-                # the broadcast K dim (width 1) stays unsharded
-                scale_spec = P(*spec[:-2], None, spec[-1])
-                return t.with_data(self.named(spec), self.named(scale_spec))
-            if isinstance(t, DipWeight):
-                return t.with_data(
-                    self.named(self.param_pspec(name, tuple(t.data.shape)))
-                )
-            if isinstance(t, tuple):
-                shape = t[0]
-                dip = t[3] if len(t) > 3 else None
-                ns = self.named(self.param_pspec(name, tuple(shape)))
-                return DipWeight(ns, *dip) if dip is not None else ns
-            return self.named(self.param_pspec(name, tuple(t.shape)))
-
-        return walk(template)
-
-    # ------------------------------------------------------------- batch ---
-    def batch_pspec(self) -> Dict[str, P]:
-        dp = P(self.dp) if self.dp else P()
-        return {
-            "tokens": P(self.dp, None),
-            "labels": P(self.dp, None),
-            "embeddings": P(self.dp, None, None),
-            "_dp": dp,
-        }
-
-    # ------------------------------------------------------------- cache ---
-    def cache_pspec(self, name: str, shape: Tuple[int, ...]) -> P:
-        """KV/SSM cache leaves (layer-stacked: leading n_layers axis)."""
-        cfg = self.cfg
-        bspec = self.dp_for(shape[1]) or None  # batch dim follows the layer axis
-
-        if name in ("k", "v"):  # (L, B, S, KV, hd)
-            if self.heads_on_tp:
-                return P(None, bspec, None, self.tp, None)
-            # sequence-parallel cache (flash-decode): shard the seq dim
-            return P(None, bspec, self._tp_if(shape[2]), None, None)
-        if name in ("c_kv", "k_rope"):  # (L, B, S, r)
-            return P(None, bspec, self._tp_if(shape[2]), None)
-        if name == "state":  # (L, B, H, P, N)
-            return P(None, bspec, self._tp_if(shape[2]), None, None)
-        if name == "conv":  # (L, B, K-1, conv_dim)
-            return P(None, bspec, None, self._tp_if(shape[3]))
-        return P(*([None] * len(shape)))
-
-    def cache_shardings(self, cache_shapes: Dict[str, Any]) -> Dict[str, Any]:
-        def walk(t, name=None):
-            if isinstance(t, dict):
-                return {k: walk(v, k) for k, v in t.items()}
-            return self.named(self.cache_pspec(name, tuple(t.shape)))
-
-        return walk(cache_shapes)
-
-    # -------------------------------------------------------- activations --
-    def constrain(self, x: jax.Array, tag: str) -> jax.Array:
-        mesh, cfg = self.mesh, self.cfg
-        if mesh.empty or not self.dp:
-            return x
-        tp = self.tp
-        dp = self.dp_for(x.shape[0]) or None
-        try:
-            if tag == "act_btd":
-                # Megatron-style sequence parallelism: the residual stream
-                # (saved per scanned layer for backward) is sharded along seq
-                # over the TP axis in train/prefill — 16x less live activation
-                # memory; GSPMD inserts the all-gather at each projection.
-                if self.seq_parallel and self.mode != "decode" and self._tp_if(x.shape[1]):
-                    spec = P(dp, self.tp, None)
-                else:
-                    spec = P(dp, None, None)
-            elif tag == "q_bthd":
-                heads = x.shape[2]
-                if heads % mesh.shape[tp] == 0:
-                    spec = P(dp, None, tp, None)
-                else:
-                    spec = P(dp, self._tp_if(x.shape[1]), None, None)  # SP fallback
-            elif tag == "kv_bthd":
-                heads = x.shape[2]
-                if heads % mesh.shape[tp] == 0:
-                    spec = P(dp, None, tp, None)
-                else:
-                    # small kv tensors replicate over TP; the broadcast-to-h
-                    # expansion in attention_core re-shards them on the head
-                    # axis locally (no collective)
-                    spec = P(dp, None, None, None)
-            elif tag == "cache_bshd":
-                if self.heads_on_tp:
-                    spec = P(dp, None, tp, None)
-                else:
-                    spec = P(dp, self._tp_if(x.shape[1]), None, None)
-            elif tag == "cache_bsr":
-                spec = P(dp, self._tp_if(x.shape[1]), None)
-            elif tag == "logits":
-                # leave to propagation: the lm_head weight's vocab sharding
-                # (data x model) determines the cheapest logits layout, and
-                # the loss reduction is sharding-agnostic
-                return x
-            elif tag == "ffn_hidden":
-                spec = P(dp, None, self._tp_if(x.shape[-1]))
-            elif tag in ("expert_buf", "expert_hidden"):
-                # (B, E, C, d/ffe): groups over DP, experts over TP
-                spec = P(dp, self._tp_if(x.shape[1]), None, None)
-            elif tag == "ssm_inner":
-                spec = P(dp, None, self._tp_if(x.shape[-1]))
-            elif tag == "scores":
-                # (b, h, sq, sk): shard heads when divisible, else q-positions
-                h = x.shape[1]
-                if h % mesh.shape[tp] == 0:
-                    spec = P(dp, tp, None, None)
-                else:
-                    spec = P(dp, None, self._tp_if(x.shape[2]), None)
-            else:
-                return x
-        except (KeyError, TypeError):
-            return x
-        if any(s is not None for s in jax.tree_util.tree_leaves(spec)) or True:
-            return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
-        return x
-
-
-def make_policy(mesh: Mesh, cfg, mode: str, **opts) -> ShardingPolicy:
-    return ShardingPolicy(mesh=mesh, cfg=cfg, mode=mode, **opts)
+def make_policy(mesh, cfg, mode: str, **opts) -> ShardingPlan:
+    """Deprecated alias for :func:`repro.distributed.plan.make_plan`."""
+    return make_plan(mesh, cfg, mode, **opts)

@@ -1,9 +1,13 @@
-"""Launchers: mesh construction, dry-run, training and serving drivers.
+"""Launchers: dry-run, training and serving drivers.
+
+Mesh construction moved into the unified distributed plan
+(``repro.distributed.plan``); the re-exports here (and the
+``repro.launch.mesh`` shim) remain for one PR.
 
 NOTE: repro.launch.dryrun sets XLA_FLAGS at import — never import it from
 library code; it is an entry point only (python -m repro.launch.dryrun).
 """
 
-from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.distributed.plan import make_local_mesh, make_production_mesh
 
 __all__ = ["make_production_mesh", "make_local_mesh"]

@@ -26,16 +26,15 @@ import jax
 
 from repro.configs import ALL_ARCHS, get_config, shape_cells_for
 from repro.configs.base import SHAPE_CELLS
-from repro.distributed.sharding import make_policy
+from repro.distributed.plan import make_plan, make_production_mesh
 from repro.launch import roofline as rl
-from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import input_specs
 
 
 def _compile_cell(cfg, cell, *, multi_pod: bool, kv_chunk: int, unroll: bool,
                   donate: bool, seq_parallel: bool = True, microbatch: int = 1):
     mesh = make_production_mesh(multi_pod=multi_pod)
-    policy = make_policy(mesh, cfg, cell.kind, seq_parallel=seq_parallel)
+    policy = make_plan(mesh, cfg, cell.kind, seq_parallel=seq_parallel)
     # cost probes (unroll=True) always run single-pass: cost totals are
     # token-linear, while a microbatch scan body would be counted once
     fn, args = input_specs(cfg, cell, policy, kv_chunk=kv_chunk, unroll=unroll,

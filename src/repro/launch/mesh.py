@@ -1,28 +1,9 @@
-"""Production mesh construction.
-
-Kept as functions (never module-level constants) so importing this module
-never touches jax device state — jax locks the device count on first init,
-and only launch/dryrun.py is allowed to force 512 host devices.
-"""
+"""Deprecation shim (one PR): mesh construction moved into the unified
+distributed plan — import from ``repro.distributed.plan`` (or
+``repro.distributed``) instead."""
 
 from __future__ import annotations
 
-import jax
+from repro.distributed.plan import make_local_mesh, make_production_mesh
 
 __all__ = ["make_production_mesh", "make_local_mesh"]
-
-
-def make_production_mesh(*, multi_pod: bool = False):
-    """Target topology: one v5e pod slice of 256 chips (16x16), or two pods.
-
-    Axes: "data" carries DP+FSDP, "model" carries TP/EP/SP; "pod" (multi-pod)
-    carries pure DP across the DCN link.
-    """
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
-
-
-def make_local_mesh(data: int = 1, model: int = 1):
-    """Small mesh over whatever devices exist (tests / CPU examples)."""
-    return jax.make_mesh((data, model), ("data", "model"))

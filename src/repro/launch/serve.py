@@ -27,6 +27,10 @@ def main():
     ap.add_argument("--max-seq", type=int, default=256)
     ap.add_argument("--dip", action="store_true",
                     help="store weights DiP-permutated + use the Pallas kernel")
+    ap.add_argument("--sharded", choices=("tp", "fsdp"), default=None,
+                    help="serve through the explicit multi-chip backends "
+                         "(dip_tp / dip_fsdp) on a mesh over the local "
+                         "devices — see docs/distributed.md")
     ap.add_argument("--quantize", choices=("int8", "fp8_e4m3"), default=None,
                     help="quantize the DiP projections and serve through the "
                          "matching quantized kernel (dip_int8w / dip_fp8)")
@@ -50,6 +54,20 @@ def main():
             matmul_backend=quant.scheme_info(args.quantize).backend,
             compute_dtype="float32",
         )
+    plan = None
+    if args.sharded:
+        import dataclasses
+        from repro.distributed.plan import make_local_mesh, make_plan
+        # explicit multi-chip serving: TP over all local devices, or FSDP
+        # over all local devices, dispatched per the weights' plan metadata
+        n_dev = jax.device_count()
+        mesh = (make_local_mesh(data=1, model=n_dev) if args.sharded == "tp"
+                else make_local_mesh(data=n_dev, model=1))
+        backend = {"tp": "dip_tp", "fsdp": "dip_fsdp"}[args.sharded]
+        cfg = dataclasses.replace(cfg, sharding=args.sharded,
+                                  matmul_backend=backend,
+                                  compute_dtype="float32")
+        plan = make_plan(mesh, cfg, "decode")
     if args.autotune:
         # registers measured tuning entries before the first forward traces,
         # so every jitted dispatch below picks them up
@@ -58,7 +76,8 @@ def main():
 
     params = tf_model.init_params(jax.random.PRNGKey(0), cfg)
     server = Server(cfg, ServerConfig(batch_slots=args.slots, max_seq=args.max_seq,
-                                      max_new_tokens=args.max_new), params)
+                                      max_new_tokens=args.max_new), params,
+                    plan=plan)
     rng = np.random.default_rng(0)
     reqs = [
         Request(rid=i, prompt=rng.integers(2, cfg.vocab_size, size=rng.integers(4, 16)))

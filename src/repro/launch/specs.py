@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, ShapeCell
-from repro.distributed.sharding import ShardingPolicy
+from repro.distributed.plan import ShardingPlan
 from repro.models import transformer as tf_model
 from repro.optim import AdamW
 
@@ -33,10 +33,14 @@ def _with_sharding(specs: Any, shardings: Any) -> Any:
     )
 
 
-def train_state_specs(cfg: ArchConfig, policy: ShardingPolicy) -> Dict:
-    """Specs for {params, opt_state, step} with FSDP/TP shardings attached."""
-    pspecs = tf_model.param_specs(cfg)
-    pshard = policy.param_shardings(tf_model.param_template(cfg))
+def train_state_specs(cfg: ArchConfig, policy: ShardingPlan) -> Dict:
+    """Specs for {params, opt_state, step} with FSDP/TP shardings attached.
+
+    Param specs carry the plan's per-weight ``WeightPlan`` metadata exactly
+    like materialized params would (``attach_params`` works on spec trees),
+    so the dry-run lowers the same dispatch the real run takes."""
+    pspecs = policy.attach_params(tf_model.param_specs(cfg))
+    pshard = policy.param_shardings(pspecs)
     params = _with_sharding(pspecs, pshard)
     # Adam moments mirror the parameter pytree (and sharding) in f32
     moments = jax.tree_util.tree_map(
@@ -53,7 +57,7 @@ def train_state_specs(cfg: ArchConfig, policy: ShardingPolicy) -> Dict:
     }
 
 
-def _batch_specs(cfg: ArchConfig, cell: ShapeCell, policy: ShardingPolicy) -> Dict:
+def _batch_specs(cfg: ArchConfig, cell: ShapeCell, policy: ShardingPlan) -> Dict:
     b, s = cell.global_batch, cell.seq_len
     mesh = policy.mesh
     dp = policy.dp_for(b) or None
@@ -70,14 +74,14 @@ def _batch_specs(cfg: ArchConfig, cell: ShapeCell, policy: ShardingPolicy) -> Di
     }
 
 
-def _cache_specs(cfg: ArchConfig, cell: ShapeCell, policy: ShardingPolicy) -> Any:
+def _cache_specs(cfg: ArchConfig, cell: ShapeCell, policy: ShardingPlan) -> Any:
     shapes = jax.eval_shape(
         lambda: tf_model.init_cache(cfg, cell.global_batch, cell.seq_len)
     )
     return _with_sharding(shapes, _cache_shardings(shapes, policy))
 
 
-def _cache_shardings(shapes: Any, policy: ShardingPolicy) -> Any:
+def _cache_shardings(shapes: Any, policy: ShardingPlan) -> Any:
     def walk(t, name=None):
         if isinstance(t, dict):
             return {k: walk(v, k) for k, v in t.items()}
@@ -89,7 +93,7 @@ def _cache_shardings(shapes: Any, policy: ShardingPolicy) -> Any:
 
 
 def input_specs(
-    cfg: ArchConfig, cell: ShapeCell, policy: ShardingPolicy, *,
+    cfg: ArchConfig, cell: ShapeCell, policy: ShardingPlan, *,
     kv_chunk: int = 1024, unroll: bool = False, microbatch: int = 1,
 ) -> Tuple[Any, Tuple]:
     """(fn_to_lower, arg_specs) for one (arch x shape) cell.
@@ -97,14 +101,12 @@ def input_specs(
     ``unroll=True`` unrolls the layer scans — used by the dry-run's cost
     probes (XLA cost analysis counts a while body once; see launch/dryrun).
     """
-    constrain = policy.constrain
-
     if cell.kind == "train":
         opt = AdamW(lr=3e-4)
         # online-softmax attention for any long-ish context: bounds live
         # scores to (b, heads, s_q, kv_chunk) by construction
         kc = kv_chunk if cell.seq_len >= 4096 else 0
-        fn = tf_model.train_step_fn(cfg, opt, constrain=constrain, unroll=unroll,
+        fn = tf_model.train_step_fn(cfg, opt, plan=policy, unroll=unroll,
                                     kv_chunk=kc, microbatch=microbatch)
         return fn, (train_state_specs(cfg, policy), _batch_specs(cfg, cell, policy))
 
@@ -112,19 +114,19 @@ def input_specs(
     # param-touching byte — HBM reads, FSDP gathers, and the f32 relayout
     # traffic that f32 storage drags into the graph (§Perf pair 3)
     cd = jnp.dtype(cfg.compute_dtype)
-    pspecs = _with_sharding(
+    serve_specs = policy.attach_params(
         jax.tree_util.tree_map(
             lambda t: jax.ShapeDtypeStruct(t.shape, cd), tf_model.param_specs(cfg)
-        ),
-        policy.param_shardings(tf_model.param_template(cfg)),
+        )
     )
+    pspecs = _with_sharding(serve_specs, policy.param_shardings(serve_specs))
 
     if cell.kind == "prefill":
         def prefill(params, batch):
             logits, _, _ = tf_model.forward(
                 params, cfg,
                 tokens=batch.get("tokens"), embeddings=batch.get("embeddings"),
-                kv_chunk=kv_chunk, constrain=constrain, unroll=unroll,
+                kv_chunk=kv_chunk, plan=policy, unroll=unroll,
                 logits_positions="last",
             )
             return logits
@@ -133,7 +135,7 @@ def input_specs(
         return prefill, (pspecs, batch)
 
     # decode: one new token against a cache of cell.seq_len
-    fn = tf_model.decode_step_fn(cfg, constrain=constrain, unroll=unroll)
+    fn = tf_model.decode_step_fn(cfg, plan=policy, unroll=unroll)
     cache = _cache_specs(cfg, cell, policy)
     mesh = policy.mesh
     tok = jax.ShapeDtypeStruct(

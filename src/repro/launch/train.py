@@ -15,8 +15,9 @@ import argparse
 import jax
 
 from repro.configs import get_config
-from repro.distributed.sharding import make_policy
-from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.distributed.plan import (
+    STRATEGIES, make_local_mesh, make_plan, make_production_mesh,
+)
 from repro.optim import AdamW, cosine_schedule
 from repro.runtime import Trainer, TrainerConfig
 
@@ -32,6 +33,13 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--mesh", default="none", choices=["none", "local", "single", "multi"])
+    ap.add_argument("--sharding", default=None, choices=list(STRATEGIES),
+                    help="override cfg.sharding: gspmd (implicit XLA "
+                         "partitioning) | tp | fsdp (explicit shard_map "
+                         "backends — see docs/distributed.md)")
+    ap.add_argument("--strict-sharding", action="store_true",
+                    help="raise (instead of warn-once + replicate) when a "
+                         "param dim does not divide its mesh axis")
     ap.add_argument("--compress-grads", action="store_true")
     ap.add_argument("--autotune", action="store_true",
                     help="measure block-size candidates for this config's "
@@ -41,19 +49,28 @@ def main():
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    if args.sharding:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, sharding=args.sharding)
+        if args.sharding != "gspmd":
+            # the explicit strategies dispatch through their sharded backend;
+            # without this the flag would silently keep the implicit path
+            cfg = dataclasses.replace(
+                cfg, matmul_backend={"tp": "dip_tp", "fsdp": "dip_fsdp"}[args.sharding]
+            )
     if args.autotune:
         # registers measured tuning entries before train_step traces, so the
         # jitted step dispatches with them
         from repro.api import autotune
         autotune.autotune_for_config(cfg, tokens=args.batch * args.seq, verbose=True)
 
-    mesh = policy = None
+    mesh = plan = None
     if args.mesh == "local":
         mesh = make_local_mesh(data=jax.device_count())
-        policy = make_policy(mesh, cfg, "train")
+        plan = make_plan(mesh, cfg, "train", strict=args.strict_sharding)
     elif args.mesh in ("single", "multi"):
         mesh = make_production_mesh(multi_pod=args.mesh == "multi")
-        policy = make_policy(mesh, cfg, "train")
+        plan = make_plan(mesh, cfg, "train", strict=args.strict_sharding)
 
     gt = None
     if args.compress_grads:
@@ -66,7 +83,7 @@ def main():
         TrainerConfig(steps=args.steps, ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir),
         optimizer=opt,
         mesh=mesh,
-        policy=policy,
+        plan=plan,
         seq_len=args.seq,
         global_batch=args.batch,
     )

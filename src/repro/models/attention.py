@@ -140,7 +140,8 @@ def gqa_attention(
     positions: jax.Array,          # (S,) absolute positions of x's tokens
     cache: Optional[Dict] = None,
     kv_chunk: int = 0,
-    constrain: Constrain = _id,
+    plan=None,                     # repro.distributed.ShardingPlan
+    constrain: Optional[Constrain] = None,  # legacy hook; plan wins
     unroll: bool = False,
     rope=None,                     # precomputed layers.rope_tables (hoisted)
     residual: Optional[jax.Array] = None,  # fused into the out-projection
@@ -153,6 +154,7 @@ def gqa_attention(
     updated residual stream).  QKV biases ride the projections' fused bias
     epilogue.
     """
+    constrain = layers.resolve_constrain(plan, constrain)
     b, s, _ = x.shape
     h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
     lk = dict(backend=cfg.matmul_backend, compute_dtype=x.dtype)
@@ -220,7 +222,8 @@ def mla_attention(
     positions: jax.Array,
     cache: Optional[Dict] = None,
     kv_chunk: int = 0,
-    constrain: Constrain = _id,
+    plan=None,                     # repro.distributed.ShardingPlan
+    constrain: Optional[Constrain] = None,  # legacy hook; plan wins
     unroll: bool = False,
     rope=None,                     # precomputed layers.rope_tables (hoisted)
     residual: Optional[jax.Array] = None,  # fused into the out-projection
@@ -237,6 +240,7 @@ def mla_attention(
         score = q_nope @ W_uk (absorbed into q)  ·  c_kv   +   q_rope · k_rope
         out   = (probs @ c_kv) @ W_uv
     """
+    constrain = layers.resolve_constrain(plan, constrain)
     b, s, _ = x.shape
     h = cfg.n_heads
     dn, dr, dv_ = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim

@@ -20,6 +20,7 @@ from repro import api
 
 __all__ = [
     "linear",
+    "resolve_constrain",
     "rms_norm",
     "swiglu",
     "rope_frequencies",
@@ -27,6 +28,20 @@ __all__ = [
     "apply_rope",
     "cross_entropy_loss",
 ]
+
+
+def resolve_constrain(plan, constrain=None):
+    """The one plan -> activation-constraint resolution the model stack uses.
+
+    Models take ``plan=`` (a ``repro.distributed.ShardingPlan``) as the
+    first-class way to express distribution; the legacy bare ``constrain``
+    callback is still honoured when no plan is given (identity when neither
+    is).  Duck-typed (anything with ``.constrain(x, tag)`` works) so the
+    model layer needs no import of the distributed package.
+    """
+    if plan is not None:
+        return plan.constrain
+    return constrain if constrain is not None else (lambda x, tag: x)
 
 _BIAS_EPILOGUES = ("bias", "bias_gelu", "bias_silu")
 

@@ -21,7 +21,7 @@ Aux losses: load-balance (Switch) + router z-loss, returned for the trainer.
 from __future__ import annotations
 
 import math
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,8 +35,8 @@ __all__ = ["moe_ffn", "dense_ffn", "moe_capacity"]
 
 
 def dense_ffn(
-    x: jax.Array, p: Dict, cfg, *, constrain: Constrain = _id,
-    residual: jax.Array = None,
+    x: jax.Array, p: Dict, cfg, *, plan=None,
+    constrain: Optional[Constrain] = None, residual: jax.Array = None,
 ) -> jax.Array:
     """SwiGLU MLP (dense archs and MoE shared experts).
 
@@ -44,9 +44,13 @@ def dense_ffn(
     on fused backends that is a single kernel reading x once and writing
     only the activated product (no intermediate gate/up arrays in HBM); on
     other backends ``api.matmul`` decomposes with identical semantics.
+    Under the explicit ``dip_tp`` backend this is the canonical Megatron
+    pair: the column-parallel gate/up swiglu runs collective-free and the
+    row-parallel down-projection pays the block's single psum.
     ``residual`` fuses the block's skip connection into the down-projection
     the same way.
     """
+    constrain = layers.resolve_constrain(plan, constrain)
     lk = dict(backend=cfg.matmul_backend, compute_dtype=x.dtype)
     h = layers.linear(x, (p["w_gate"], p["w_up"]), epilogue="swiglu", **lk)
     h = constrain(h, "ffn_hidden")
@@ -62,7 +66,8 @@ def moe_capacity(tokens: int, cfg) -> int:
 
 
 def moe_ffn(
-    x: jax.Array, p: Dict, cfg, *, constrain: Constrain = _id
+    x: jax.Array, p: Dict, cfg, *, plan=None,
+    constrain: Optional[Constrain] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Routed expert FFN.  Returns (output, aux_loss).
 
@@ -74,6 +79,7 @@ def moe_ffn(
     scatter/gather (§Perf pair-2 log: the global-token formulation instead
     replicated multi-GB dispatch state per layer).
     """
+    constrain = layers.resolve_constrain(plan, constrain)
     b, s, d = x.shape
     e, k = cfg.n_experts, cfg.moe_top_k
     cap = moe_capacity(s, cfg)                                   # per-group capacity

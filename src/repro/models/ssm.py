@@ -75,15 +75,18 @@ def ssd_block(
     cfg,
     *,
     cache: Optional[Dict] = None,
-    constrain: Constrain = _id,
+    plan=None,
+    constrain: Optional[Constrain] = None,
     residual: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[Dict]]:
     """One Mamba2 block.  Prefill/train: chunked SSD; decode: O(1) update.
 
-    ``residual`` fuses the block's skip connection into the out-projection's
-    flush-stage epilogue (the returned tensor then IS the updated residual
-    stream).
+    ``plan`` carries the distribution decisions (its constraints replace the
+    legacy ``constrain`` callback).  ``residual`` fuses the block's skip
+    connection into the out-projection's flush-stage epilogue (the returned
+    tensor then IS the updated residual stream).
     """
+    constrain = layers.resolve_constrain(plan, constrain)
     bsz, seqlen, _ = x.shape
     dims = ssm_dims(cfg)
     di, h, pdim, n = dims["d_inner"], dims["heads"], dims["headdim"], dims["state"]

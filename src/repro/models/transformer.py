@@ -294,7 +294,8 @@ def forward(
     embeddings: Optional[jax.Array] = None,    # (B, S, d) — [vlm]/[audio] stubs
     cache: Optional[Dict] = None,              # layer-stacked cache pytree
     kv_chunk: int = 0,
-    constrain: Constrain = _id,
+    plan=None,                                 # repro.distributed.ShardingPlan
+    constrain: Optional[Constrain] = None,     # legacy hook; plan wins
     unroll: bool = False,                      # dry-run cost-probe mode: unroll
                                                # layer scans so XLA cost analysis
                                                # counts every layer (see
@@ -302,7 +303,13 @@ def forward(
     logits_positions: str = "all",             # "all" | "last" — serving prefill
                                                # needs only the next-token logits
 ) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
-    """Returns (logits, new_cache, aux_loss)."""
+    """Returns (logits, new_cache, aux_loss).
+
+    Distribution enters through ``plan``: its activation constraints replace
+    the old bare ``constrain`` callback, and DiP weights that carry the
+    plan's per-weight metadata dispatch the explicit sharded backends when
+    ``cfg.matmul_backend`` names one (``dip_tp`` / ``dip_fsdp``)."""
+    constrain = layers.resolve_constrain(plan, constrain)
     cd = jnp.dtype(cfg.compute_dtype)
     if embeddings is not None:
         x = embeddings.astype(cd)
@@ -500,21 +507,22 @@ def _strip_pos(c: Dict) -> Dict:
 
 
 # ------------------------------------------------------------- objectives ---
-def loss_fn(params, cfg, batch, *, constrain: Constrain = _id,
+def loss_fn(params, cfg, batch, *, plan=None, constrain: Optional[Constrain] = None,
             unroll: bool = False, kv_chunk: int = 0) -> jax.Array:
     logits, _, aux = forward(
         params, cfg,
         tokens=batch.get("tokens"), embeddings=batch.get("embeddings"),
-        constrain=constrain, unroll=unroll, kv_chunk=kv_chunk,
+        plan=plan, constrain=constrain, unroll=unroll, kv_chunk=kv_chunk,
     )
     loss = layers.cross_entropy_loss(logits[:, :-1], batch["labels"][:, 1:])
     return loss + aux
 
 
-def train_step_fn(cfg, optimizer, *, constrain: Constrain = _id,
+def train_step_fn(cfg, optimizer, *, plan=None, constrain: Optional[Constrain] = None,
                   unroll: bool = False, kv_chunk: int = 0, microbatch: int = 1):
     """Returns step(state, batch) -> (state, metrics).  Pure; jit at call site.
 
+    ``plan`` carries the distribution decisions (see :func:`forward`).
     ``microbatch > 1`` enables gradient accumulation: the global batch is
     split into ``microbatch`` slices scanned sequentially with the summed
     gradient applied once — live activation memory scales with the slice
@@ -523,8 +531,8 @@ def train_step_fn(cfg, optimizer, *, constrain: Constrain = _id,
 
     def grad_of(params, batch):
         return jax.value_and_grad(
-            lambda p: loss_fn(p, cfg, batch, constrain=constrain, unroll=unroll,
-                              kv_chunk=kv_chunk)
+            lambda p: loss_fn(p, cfg, batch, plan=plan, constrain=constrain,
+                              unroll=unroll, kv_chunk=kv_chunk)
         )(params)
 
     def step(state, batch):
@@ -564,13 +572,14 @@ def train_step_fn(cfg, optimizer, *, constrain: Constrain = _id,
     return step
 
 
-def decode_step_fn(cfg, *, constrain: Constrain = _id, unroll: bool = False):
+def decode_step_fn(cfg, *, plan=None, constrain: Optional[Constrain] = None,
+                   unroll: bool = False):
     """Returns serve_step(params, cache, tokens) -> (logits, cache)."""
 
     def step(params, cache, tokens):
         logits, new_cache, _ = forward(
-            params, cfg, tokens=tokens, cache=cache, constrain=constrain,
-            unroll=unroll,
+            params, cfg, tokens=tokens, cache=cache, plan=plan,
+            constrain=constrain, unroll=unroll,
         )
         return logits, new_cache
 

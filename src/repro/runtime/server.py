@@ -44,18 +44,32 @@ class Request:
 
 
 class Server:
-    def __init__(self, cfg, scfg: ServerConfig, params, *, policy=None):
+    def __init__(self, cfg, scfg: ServerConfig, params, *, plan=None, policy=None):
         self.cfg = cfg
         self.scfg = scfg
+        plan = plan if plan is not None else policy
         be = api.get_backend(cfg.matmul_backend)  # fail fast on unknown backends
         if be.layout == "dip_q" and cfg.quant_scheme != be.scheme:
             raise ValueError(
                 f"backend {be.name!r} consumes {be.scheme!r}-quantized weights "
                 f"but cfg.quantization={cfg.quantization!r}"
             )
+        if be.layout == "sharded" and plan is None:
+            raise ValueError(
+                f"backend {be.name!r} dispatches on the weights' ShardingPlan "
+                "metadata; pass plan= (repro.distributed.make_plan) or serve "
+                "through the implicit GSPMD path (matmul_backend='xla')"
+            )
+        self.plan = plan
+        if plan is not None:
+            # stamp per-weight partition decisions AND place the storage
+            # accordingly — dip_fsdp's premise (1/N of every weight's bytes
+            # per device) only holds if the K-shards actually live sharded
+            params = plan.attach_params(params)
+            shardings = plan.param_shardings(params)
+            params = jax.tree_util.tree_map(jax.device_put, params, shardings)
         self.params = params
-        constrain = policy.constrain if policy is not None else (lambda x, t: x)
-        self._decode = jax.jit(tf_model.decode_step_fn(cfg, constrain=constrain))
+        self._decode = jax.jit(tf_model.decode_step_fn(cfg, plan=plan))
         self.rng = np.random.default_rng(0)
 
     def _sample(self, logits: np.ndarray) -> np.ndarray:

@@ -61,13 +61,21 @@ class Trainer:
         optimizer: Optional[AdamW] = None,
         data: Optional[SyntheticLM] = None,
         mesh=None,
-        policy=None,
+        plan=None,                          # repro.distributed.ShardingPlan
+        policy=None,                        # deprecated alias for plan
         seq_len: int = 512,
         global_batch: int = 8,
     ):
         self.cfg = cfg
         self.tcfg = tcfg
-        api.get_backend(cfg.matmul_backend)  # fail fast on unknown backends
+        plan = plan if plan is not None else policy
+        be = api.get_backend(cfg.matmul_backend)  # fail fast on unknown backends
+        if be.layout == "sharded" and plan is None:
+            raise ValueError(
+                f"backend {be.name!r} dispatches on the weights' ShardingPlan "
+                "metadata; pass plan= (repro.distributed.make_plan) or train "
+                "through the implicit GSPMD path (matmul_backend='xla')"
+            )
         if cfg.quant_scheme is not None:
             # quantized storage is a frozen inference artifact: its int8/fp8
             # payload has no usable cotangent, so training would silently
@@ -79,7 +87,8 @@ class Trainer:
             )
         self.opt = optimizer or AdamW(lr=3e-4)
         self.mesh = mesh
-        self.policy = policy
+        self.plan = plan
+        self.policy = plan  # deprecated alias
         self.data = data or SyntheticLM(
             vocab_size=cfg.vocab_size,
             seq_len=seq_len,
@@ -87,16 +96,19 @@ class Trainer:
             emit_embeddings=cfg.d_model if cfg.frontend != "none" else None,
         )
         self.ckpt = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.keep)
-        constrain = policy.constrain if policy is not None else (lambda x, t: x)
-        self._step_fn = tf_model.train_step_fn(cfg, self.opt, constrain=constrain)
+        self._step_fn = tf_model.train_step_fn(cfg, self.opt, plan=plan)
         self._jit_step = None
         self.metrics_log: list = []
 
     # ----------------------------------------------------------- state -----
     def init_state(self, seed: int = 0) -> Dict[str, Any]:
         params = tf_model.init_params(jax.random.PRNGKey(seed), self.cfg)
-        if self.policy is not None:
-            shardings = self.policy.param_shardings(params)
+        if self.plan is not None:
+            # stamp per-weight partition decisions, then place accordingly;
+            # the plan metadata rides the pytree from here on (jit / scan /
+            # checkpoint / optimizer moments)
+            params = self.plan.attach_params(params)
+            shardings = self.plan.param_shardings(params)
             params = jax.tree_util.tree_map(jax.device_put, params, shardings)
         return {
             "params": params,

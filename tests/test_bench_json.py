@@ -28,6 +28,26 @@ def test_compare_epilogues_writes_schema_valid_json(tmp_path):
     assert payload["entries"], "timing entries missing"
 
 
+def test_sharded_compare_writes_schema_valid_json(tmp_path):
+    """--sharded re-execs itself onto 8 virtual devices, records explicit
+    dip_tp/dip_fsdp vs GSPMD-xla timings, and the collective counts in the
+    payload honour the placement contract (validated by the schema)."""
+    out = tmp_path / "BENCH_sharded.json"
+    rc = kernels_bench.main(
+        ["--sharded", "--tiny", "--iters", "1", "--out", str(out)]
+    )
+    assert rc == 0 and out.exists()
+    payload = kernels_bench.validate_bench_json(out)
+    cases = {r["case"]: r for r in payload["sharded_compare"]["results"]}
+    assert set(cases) == {"column", "row", "fsdp"}
+    assert cases["column"]["psums"] == 0 and cases["column"]["all_gathers"] == 0
+    assert cases["row"]["psums"] == 1
+    assert cases["fsdp"]["all_gathers"] == 1 and cases["fsdp"]["psums"] == 0
+    for rec in cases.values():
+        assert rec["pallas_calls"] >= 1          # the shard still launches
+        assert rec["explicit_us"] > 0 and rec["gspmd_us"] > 0
+
+
 def test_validate_bench_json_rejects_schema_violations(tmp_path):
     bad = tmp_path / "bad.json"
     bad.write_text(json.dumps({"schema_version": 999, "entries": []}))
@@ -40,4 +60,20 @@ def test_validate_bench_json_rejects_schema_violations(tmp_path):
                              "results": [{"epilogue": "bias"}]},
     }))
     with pytest.raises(ValueError, match="missing"):
+        kernels_bench.validate_bench_json(bad)
+    # a drifting collective count is a SCHEMA violation, not just a test
+    rec = {"case": "column", "backend": "dip_tp", "explicit_us": 1.0,
+           "gspmd_us": 1.0, "psums": 1, "all_gathers": 0, "pallas_calls": 1,
+           "gspmd_hlo_collectives": 0}
+    bad.write_text(json.dumps({
+        "schema_version": kernels_bench.BENCH_SCHEMA_VERSION,
+        "entries": [{"name": "x", "us_per_call": 1.0}],
+        "sharded_compare": {
+            "mesh_axes": {"data": 2, "model": 4}, "shape": [8, 256, 256],
+            "results": [rec,
+                        dict(rec, case="row", psums=1),
+                        dict(rec, case="fsdp", psums=0, all_gathers=1)],
+        },
+    }))
+    with pytest.raises(ValueError, match="column-parallel recorded"):
         kernels_bench.validate_bench_json(bad)

@@ -1,34 +1,16 @@
 """Multi-device behaviours, each in a subprocess with forced host devices
-(conftest must NOT set XLA_FLAGS — smoke tests see the real topology).
+(the shared helper lives in conftest — the pytest process must NOT set
+XLA_FLAGS so smoke tests see the real topology).
 
 Covers: pipeline-parallel equivalence, compressed psum, sharded train step on
-a small (2,2) mesh, policy PartitionSpec validity for every arch, and a
-reduced-config production-mesh dry-run (the CI-sized version of deliverable e).
+a small (2,2) mesh, plan PartitionSpec validity for every arch, divisibility
+fallback surfacing (warn-once / strict), and a reduced-config
+production-mesh dry-run (the CI-sized version of deliverable e).
 """
-
-import subprocess
-import sys
 
 import pytest
 
-PREAMBLE = """
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={n}"
-import jax, jax.numpy as jnp, numpy as np
-"""
-
-
-def _run(body: str, devices: int = 4, timeout: int = 600):
-    code = PREAMBLE.format(n=devices) + body
-    proc = subprocess.run(
-        [sys.executable, "-c", code],
-        capture_output=True, text=True, timeout=timeout,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-             "HOME": "/root", "JAX_PLATFORMS": "cpu"},
-        cwd="/root/repo",
-    )
-    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
-    return proc.stdout
+from conftest import run_forced_devices as _run
 
 
 def test_pipeline_parallel_equals_sequential():
@@ -76,7 +58,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import ArchConfig
 from repro.models import transformer as tf_model
 from repro.optim import AdamW
-from repro.distributed.sharding import make_policy
+from repro.distributed.plan import make_plan
 
 cfg = ArchConfig(name="t", family="dense", n_layers=2, d_model=64, n_heads=4,
                  n_kv_heads=4, d_ff=128, vocab_size=256, head_dim=16,
@@ -92,16 +74,16 @@ state = {"params": params, "opt_state": opt.init(params), "step": jnp.zeros((), 
 ref_step = jax.jit(tf_model.train_step_fn(cfg, opt))
 sref, mref = ref_step(state, batch)
 
-# sharded on a (2, 2) data x model mesh
+# sharded on a (2, 2) data x model mesh, threaded as a first-class plan
 mesh = jax.make_mesh((2, 2), ("data", "model"))
-policy = make_policy(mesh, cfg, "train")
-pshard = policy.param_shardings(tf_model.param_template(cfg))
+plan = make_plan(mesh, cfg, "train")
+pshard = plan.param_shardings(tf_model.param_template(cfg))
 with mesh:
     params_s = jax.tree_util.tree_map(jax.device_put, params, pshard)
     state_s = {"params": params_s, "opt_state": opt.init(params_s),
                "step": jnp.zeros((), jnp.int32)}
     batch_s = jax.device_put(batch, NamedSharding(mesh, P(("data",), None)))
-    step_s = jax.jit(tf_model.train_step_fn(cfg, opt, constrain=policy.constrain))
+    step_s = jax.jit(tf_model.train_step_fn(cfg, opt, plan=plan))
     ss, ms = step_s(state_s, batch_s)
 assert abs(float(mref["loss"]) - float(ms["loss"])) < 1e-4, (float(mref["loss"]), float(ms["loss"]))
 d = jax.tree_util.tree_map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
@@ -112,22 +94,57 @@ print("SHARDED_TRAIN_OK")
     assert "SHARDED_TRAIN_OK" in out
 
 
-def test_policy_pspecs_valid_for_all_archs():
+def test_plan_pspecs_valid_for_all_archs():
     out = _run("""
 from repro.configs import ALL_ARCHS, get_config
-from repro.distributed.sharding import make_policy
+from repro.distributed.plan import make_plan
 from repro.models.transformer import param_template
 mesh = jax.make_mesh((2, 2), ("data", "model"))
 for arch in ALL_ARCHS:
     cfg = get_config(arch)
     for mode in ("train", "decode"):
-        policy = make_policy(mesh, cfg, mode)
-        shards = policy.param_shardings(param_template(cfg))   # raises if invalid
+        plan = make_plan(mesh, cfg, mode)
+        shards = plan.param_shardings(param_template(cfg))   # raises if invalid
         n = len(jax.tree_util.tree_leaves(shards))
         assert n > 5
-print("POLICY_OK")
+print("PLAN_OK")
 """)
-    assert "POLICY_OK" in out
+    assert "PLAN_OK" in out
+
+
+def test_divisibility_fallback_warns_once_and_strict_raises():
+    """Satellite bugfix: the old policy silently replicated mis-sized leaves.
+    The plan warns once (with the leaf name and axis sizes) and raises under
+    strict=True."""
+    out = _run("""
+import warnings
+from repro.configs.base import ArchConfig
+from repro.distributed.plan import make_plan
+
+# d_ff=70 does not divide the 4-wide model axis -> w_gate/w_up fall back
+cfg = ArchConfig(name="t", family="dense", n_layers=2, d_model=64, n_heads=4,
+                 n_kv_heads=4, d_ff=70, vocab_size=256, head_dim=16)
+mesh = jax.make_mesh((1, 4), ("data", "model"))
+plan = make_plan(mesh, cfg, "train")
+with warnings.catch_warnings(record=True) as caught:
+    warnings.simplefilter("always")
+    spec = plan.param_pspec("w_gate", (2, 64, 70))
+    plan.param_pspec("w_gate", (2, 64, 70))  # second call: warn-once
+assert spec[-1] is None  # replicated, as before — but no longer silently
+msgs = [str(w.message) for w in caught if "ShardingPlan" in str(w.message)]
+assert len(msgs) == 1, msgs
+assert "w_gate" in msgs[0] and "70" in msgs[0] and "model" in msgs[0], msgs[0]
+
+strict = make_plan(mesh, cfg, "train", strict=True)
+try:
+    strict.param_pspec("w_up", (2, 64, 70))
+except ValueError as e:
+    assert "w_up" in str(e) and "strict" in str(e)
+else:
+    raise AssertionError("strict plan did not raise on a mis-sized leaf")
+print("FALLBACK_OK")
+""")
+    assert "FALLBACK_OK" in out
 
 
 @pytest.mark.slow
@@ -137,16 +154,15 @@ def test_reduced_production_dryrun():
     out = _run("""
 from repro.configs import get_config
 from repro.configs.base import ShapeCell
-from repro.distributed.sharding import make_policy
-from repro.launch.mesh import make_production_mesh
+from repro.distributed.plan import make_plan, make_production_mesh
 from repro.launch.specs import input_specs
 
 cfg = get_config("llama3-8b").reduced(d_model=256, n_heads=16, n_kv_heads=16,
                                       head_dim=64, vocab_size=4096, n_layers=2)
 cell = ShapeCell("train_tiny", 512, 32, "train")
 mesh = make_production_mesh(multi_pod=True)
-policy = make_policy(mesh, cfg, "train")
-fn, args = input_specs(cfg, cell, policy)
+plan = make_plan(mesh, cfg, "train")
+fn, args = input_specs(cfg, cell, plan)
 with mesh:
     compiled = jax.jit(fn, donate_argnums=(0,)).lower(*args).compile()
 ca = compiled.cost_analysis()
