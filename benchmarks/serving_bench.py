@@ -1,0 +1,312 @@
+"""Serving benchmark: continuous-batching engine vs the legacy wave loop.
+
+An open-loop Poisson workload (fixed arrival times, drawn once per seed)
+with varied generation lengths is replayed against both serving paths at
+equal slot count:
+
+* **paged** — ``repro.serving.Engine``: continuous admission over the paged
+  KV pool; freed slots refill mid-flight, so total decode steps approach
+  ``sum(gen_len) / slots``.
+* **wave** — ``runtime.WaveServer``: the pre-engine static-batch loop;
+  slots refill only when ALL are free, so every wave decodes for its longest
+  member (``sum over waves of max(gen_len)`` steps) while finished slots
+  idle, and results are only observable at wave boundaries.
+
+Varied ``max_new`` makes the gap structural, not a tuning artifact.  All
+requests decode greedily so both paths do identical model work per token.
+
+Writes schema-validated ``BENCH_serving.json``.  The schema encodes the
+acceptance contract: the engine must beat the wave baseline on tokens/sec
+AND p99 latency, and int8 paged KV must fit strictly more blocks (and
+concurrent sequences) than bf16 in the same byte budget — a regression
+fails validation, not just a test somewhere else.
+
+    PYTHONPATH=src python benchmarks/serving_bench.py --tiny
+"""
+
+from __future__ import annotations
+
+import argparse
+import collections
+import dataclasses
+import json
+import pathlib
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import transformer as tf_model
+from repro.runtime.server import Request, ServerConfig, WaveServer
+from repro.serving import Engine, EngineConfig, SamplingParams
+from repro.serving import kv_cache as kvc
+
+SERVING_SCHEMA_VERSION = 1
+DEFAULT_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_serving.json"
+
+
+# ------------------------------------------------------------- workload ----
+@dataclasses.dataclass
+class Arrival:
+    rid: int
+    at_s: float                 # offset from workload start
+    prompt: np.ndarray
+    max_new: int
+
+
+def make_workload(cfg, *, requests: int, rate_rps: float, seed: int,
+                  prompt_range=(4, 16), max_new_range=(2, 24)) -> List[Arrival]:
+    """Open-loop Poisson arrivals: exponential gaps at ``rate_rps``, varied
+    prompt and generation lengths — drawn once, replayed for every engine."""
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    out = []
+    for rid in range(requests):
+        t += float(rng.exponential(1.0 / rate_rps))
+        out.append(Arrival(
+            rid=rid,
+            at_s=t,
+            prompt=rng.integers(2, cfg.vocab_size,
+                                size=int(rng.integers(*prompt_range))).astype(np.int32),
+            max_new=int(rng.integers(max_new_range[0], max_new_range[1] + 1)),
+        ))
+    return out
+
+
+def _percentiles(latencies: List[float]) -> Dict[str, float]:
+    arr = np.asarray(latencies, np.float64)
+    return {
+        "p50_latency_s": round(float(np.percentile(arr, 50)), 4),
+        "p99_latency_s": round(float(np.percentile(arr, 99)), 4),
+    }
+
+
+# -------------------------------------------------------------- drivers ----
+def run_engine(cfg, params, workload: List[Arrival], *, slots: int,
+               max_seq: int, prefill_chunk: int, block_size: Optional[int],
+               kv_quant: str) -> Dict:
+    eng = Engine(cfg, params, engine_cfg=EngineConfig(
+        slots=slots, max_seq=max_seq, prefill_chunk=prefill_chunk,
+        block_size=block_size, kv_quant=kv_quant,
+    ))
+    pending = collections.deque(sorted(workload, key=lambda a: a.at_s))
+    t0 = time.monotonic()
+    busy = True
+    while pending or busy:
+        now = time.monotonic() - t0
+        while pending and pending[0].at_s <= now:
+            a = pending.popleft()
+            eng.add_request(a.prompt, SamplingParams(max_new_tokens=a.max_new),
+                            rid=a.rid)
+        busy = eng.step()
+        if not busy and pending:
+            time.sleep(min(5e-4, max(0.0, pending[0].at_s - now)))
+    wall = time.monotonic() - t0
+    total = sum(s["new_tokens"] for s in eng.request_stats.values())
+    rec = {
+        "tok_per_s": round(total / max(wall, 1e-9), 2),
+        "total_tokens": total,
+        "wall_s": round(wall, 4),
+        "decode_steps": eng._decode_steps,
+        "prefill_chunks": eng._prefill_chunks,
+        "preemptions": eng._preempt_count,
+    }
+    rec.update(_percentiles(
+        [s["latency_s"] for s in eng.request_stats.values()]
+    ))
+    return rec
+
+
+def run_wave(cfg, params, workload: List[Arrival], *, slots: int,
+             max_seq: int, max_new_cap: int) -> Dict:
+    ws = WaveServer(cfg, ServerConfig(
+        batch_slots=slots, max_seq=max_seq, max_new_tokens=max_new_cap,
+        temperature=0.0, top_k=0,
+    ), params)
+    pending = collections.deque(sorted(workload, key=lambda a: a.at_s))
+    queue: List[Arrival] = []
+    latencies: List[float] = []
+    total = 0
+    steps = 0
+    t0 = time.monotonic()
+    while pending or queue:
+        now = time.monotonic() - t0
+        while pending and pending[0].at_s <= now:
+            queue.append(pending.popleft())
+        if not queue:
+            time.sleep(min(5e-4, max(0.0, pending[0].at_s - now)))
+            continue
+        wave, queue = queue[:slots], queue[slots:]
+        reqs = [Request(rid=a.rid, prompt=a.prompt, max_new=a.max_new)
+                for a in wave]
+        ws.serve(reqs)
+        steps += ws.last_stats["decode_steps"]
+        # a synchronous static-batch loop surfaces results at wave boundaries
+        end = time.monotonic() - t0
+        for a, r in zip(wave, reqs):
+            total += len(r.out_tokens)
+            latencies.append(end - a.at_s)
+    wall = time.monotonic() - t0
+    rec = {
+        "tok_per_s": round(total / max(wall, 1e-9), 2),
+        "total_tokens": total,
+        "wall_s": round(wall, 4),
+        "decode_steps": steps,
+    }
+    rec.update(_percentiles(latencies))
+    return rec
+
+
+# ------------------------------------------------------------- capacity ----
+def capacity_record(cfg, *, slots: int, max_seq: int,
+                    block_size: Optional[int]) -> Optional[Dict]:
+    """int8-vs-bf16 blocks (and sequences of max_seq tokens) a fixed byte
+    budget holds — the budget is what the bf16 pool at full occupancy costs."""
+    if cfg.is_ssm:
+        return None   # pure SSM: no paged KV bytes (state is O(1) per slot)
+    bs = block_size or cfg.kv_block_size
+    blocks_per_seq = -(-max_seq // bs)
+    budget = (slots * blocks_per_seq + 1) * kvc.bytes_per_block(cfg, bs, "none")
+    bf16 = kvc.blocks_for_budget(cfg, budget, bs, "none")
+    int8 = kvc.blocks_for_budget(cfg, budget, bs, "int8")
+    return {
+        "budget_bytes": budget,
+        "block_size": bs,
+        "seq_len": max_seq,
+        "bf16_blocks": bf16,
+        "int8_blocks": int8,
+        "bf16_max_concurrent": kvc.max_concurrent(cfg, bf16, max_seq, bs),
+        "int8_max_concurrent": kvc.max_concurrent(cfg, int8, max_seq, bs),
+    }
+
+
+# ----------------------------------------------------------------- JSON ----
+def write_serving_json(path, payload: Dict) -> pathlib.Path:
+    p = pathlib.Path(path)
+    p.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    return p
+
+
+def validate_serving_json(path) -> Dict:
+    """Schema check for BENCH_serving.json; returns the parsed payload.
+    Raises ValueError on any violation (run by the CI serving job)."""
+    payload = json.loads(pathlib.Path(path).read_text())
+
+    def need(cond, msg):
+        if not cond:
+            raise ValueError(f"BENCH_serving.json schema violation: {msg}")
+
+    need(payload.get("schema_version") == SERVING_SCHEMA_VERSION,
+         f"schema_version != {SERVING_SCHEMA_VERSION}")
+    need(isinstance(payload.get("arch"), str) and payload["arch"], "arch")
+    need(isinstance(payload.get("slots"), int) and payload["slots"] >= 1, "slots")
+    wl = payload.get("workload")
+    need(isinstance(wl, dict), "workload must be a dict")
+    for key in ("requests", "arrival_rate_rps", "seed", "max_new_range"):
+        need(key in wl, f"workload missing {key!r}")
+    engines = payload.get("engines")
+    need(isinstance(engines, dict) and {"paged", "wave"} <= set(engines),
+         "engines must record both 'paged' and 'wave'")
+    for name, rec in engines.items():
+        for key in ("tok_per_s", "p50_latency_s", "p99_latency_s",
+                    "total_tokens", "decode_steps"):
+            need(isinstance(rec.get(key), (int, float)),
+                 f"engines.{name} missing/invalid {key!r}")
+    paged, wave = engines["paged"], engines["wave"]
+    # the acceptance contract IS the schema: the continuous-batching engine
+    # must beat the static-batch wave loop on BOTH axes at equal slots
+    need(paged["tok_per_s"] > wave["tok_per_s"],
+         f"engine tok/s {paged['tok_per_s']} <= wave {wave['tok_per_s']}")
+    need(paged["p99_latency_s"] < wave["p99_latency_s"],
+         f"engine p99 {paged['p99_latency_s']} >= wave {wave['p99_latency_s']}")
+    cap = payload.get("capacity")
+    if cap is not None:
+        for key in ("budget_bytes", "bf16_blocks", "int8_blocks",
+                    "bf16_max_concurrent", "int8_max_concurrent"):
+            need(isinstance(cap.get(key), int), f"capacity missing {key!r}")
+        need(cap["int8_blocks"] > cap["bf16_blocks"],
+             "int8 must fit strictly more blocks than bf16 at fixed bytes")
+        need(cap["int8_max_concurrent"] > cap["bf16_max_concurrent"],
+             "int8 must serve strictly more concurrent sequences than bf16")
+    return payload
+
+
+# ----------------------------------------------------------------- main ----
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python benchmarks/serving_bench.py",
+        description="engine-vs-wave serving benchmark; writes BENCH_serving.json",
+    )
+    ap.add_argument("--arch", default="llama3_8b")
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--rate", type=float, default=50.0,
+                    help="Poisson arrival rate (requests/sec)")
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--max-new-range", type=int, nargs=2, default=(2, 32))
+    ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--block-size", type=int, default=None)
+    ap.add_argument("--kv-quant", choices=("none", "int8"), default="none",
+                    help="KV storage for the paged engine run")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--tiny", action="store_true",
+                    help="small CI smoke (fewer requests, shorter outputs)")
+    ap.add_argument("--out", default=str(DEFAULT_JSON))
+    args = ap.parse_args(argv)
+
+    if args.tiny:
+        args.requests = min(args.requests, 10)
+        args.max_new_range = (2, 16)
+        args.max_seq = min(args.max_seq, 64)
+
+    cfg = get_config(args.arch).reduced()
+    params = tf_model.init_params(jax.random.PRNGKey(0), cfg)
+    workload = make_workload(
+        cfg, requests=args.requests, rate_rps=args.rate, seed=args.seed,
+        max_new_range=tuple(args.max_new_range),
+    )
+    print(f"== serving bench: {args.arch} reduced, {args.requests} requests, "
+          f"{args.slots} slots, rate {args.rate}/s ==")
+
+    paged = run_engine(
+        cfg, params, workload, slots=args.slots, max_seq=args.max_seq,
+        prefill_chunk=args.prefill_chunk, block_size=args.block_size,
+        kv_quant=args.kv_quant,
+    )
+    print(f"paged: {paged['tok_per_s']} tok/s, p50 {paged['p50_latency_s']}s, "
+          f"p99 {paged['p99_latency_s']}s, {paged['decode_steps']} decode steps")
+    wave = run_wave(
+        cfg, params, workload, slots=args.slots, max_seq=args.max_seq,
+        max_new_cap=max(args.max_new_range),
+    )
+    print(f"wave:  {wave['tok_per_s']} tok/s, p50 {wave['p50_latency_s']}s, "
+          f"p99 {wave['p99_latency_s']}s, {wave['decode_steps']} decode steps")
+
+    payload = {
+        "schema_version": SERVING_SCHEMA_VERSION,
+        "generated_by": "benchmarks/serving_bench.py",
+        "jax_backend": jax.default_backend(),
+        "arch": args.arch,
+        "slots": args.slots,
+        "kv_quant": args.kv_quant,
+        "workload": {
+            "requests": args.requests,
+            "arrival_rate_rps": args.rate,
+            "max_new_range": list(args.max_new_range),
+            "seed": args.seed,
+        },
+        "engines": {"paged": paged, "wave": wave},
+        "capacity": capacity_record(cfg, slots=args.slots,
+                                    max_seq=args.max_seq,
+                                    block_size=args.block_size),
+    }
+    path = write_serving_json(args.out, payload)
+    validate_serving_json(path)
+    print(f"machine-readable record: {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -45,6 +45,9 @@ __all__ = [
     "quantize",
     "dequantize",
     "dequantize_natural",
+    "quantize_rows",
+    "dequantize_rows",
+    "rows_error_bound",
 ]
 
 
@@ -270,6 +273,54 @@ def dequantize_natural(
 ) -> jax.Array:
     """Dequantized natural-layout (d_in, d_out) weight."""
     return dequantize(qw, dtype).to_natural()
+
+
+# ---------------------------------------------------------------------------
+# generic per-row (last-axis) symmetric quantization — the activation/KV-cache
+# counterpart of the per-output-channel weight path above.  A "row" is one
+# contiguous vector along the last axis (a head's K/V at one position, an MLA
+# latent, an activation row); each gets its own float32 scale, so the paged
+# serving KV cache stores int8 payloads + (..., 1) scales and dequantizes
+# exactly like the weight machinery does.
+def quantize_rows(
+    x: jax.Array, scheme: str = "int8"
+) -> Tuple[jax.Array, jax.Array]:
+    """``(q, scale)`` with ``x ≈ q * scale``; scale shape ``x.shape[:-1] + (1,)``.
+
+    Symmetric per-row quantization: ``scale = amax(|row|) / qmax`` (floored so
+    all-zero rows stay exactly zero), integer schemes round-to-nearest, float
+    schemes cast.  Used by the serving paged KV cache (``repro.serving``).
+    """
+    info = scheme_info(scheme)
+    x32 = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x32), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, _AMAX_FLOOR) / info.qmax
+    if info.is_integer:
+        q = jnp.clip(jnp.round(x32 / scale), -info.qmax, info.qmax).astype(
+            info.storage_dtype
+        )
+    else:
+        q = (x32 / scale).astype(info.storage_dtype)
+    return q, scale
+
+
+def dequantize_rows(q: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """Inverse of :func:`quantize_rows` (scale broadcasts over the last axis)."""
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def rows_error_bound(scale: jax.Array, scheme: str = "int8") -> jax.Array:
+    """Worst-case elementwise |x - dequant(quant(x))| per row.
+
+    Integer schemes: half a quantization step (``scale / 2``); float schemes:
+    half a ulp at the row amax.  The serving tests assert the int8 KV cache
+    honours this bound (documented in ``docs/serving.md``).
+    """
+    info = scheme_info(scheme)
+    if info.is_integer:
+        return 0.5 * scale
+    m_bits = jnp.finfo(jnp.dtype(info.storage_dtype)).nmant
+    return scale * info.qmax * (2.0 ** -float(m_bits))
 
 
 def max_abs_error_bound(qw: QuantizedDipWeight) -> jax.Array:

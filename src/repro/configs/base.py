@@ -66,6 +66,14 @@ class ArchConfig:
     quantization: str = "none"       # weight-quantization scheme for the DiP
                                      # projections: none | int8 | fp8_e4m3
                                      # (inference-only; see docs/quantization.md)
+    kv_block_size: int = 16          # paged-KV block size (tokens per block)
+                                     # for the serving engine (repro.serving);
+                                     # see docs/serving.md §Paged KV layout
+    kv_quant: str = "none"           # KV-cache storage for paged serving:
+                                     #   none  compute-dtype (bf16) reference
+                                     #   int8  per-token/head int8 + f32 scales
+                                     #         (~2x more sequences per byte;
+                                     #          bound in docs/serving.md)
     sharding: str = "gspmd"          # declared parallelism strategy consumed
                                      # by repro.distributed.plan.make_plan:
                                      #   gspmd  implicit XLA partitioning of

@@ -17,7 +17,6 @@ from repro.distributed.plan import (
     make_plan,
     make_production_mesh,
 )
-from repro.distributed.sharding import ShardingPolicy, make_policy
 
 __all__ = [
     "ShardingPlan",
@@ -26,8 +25,6 @@ __all__ = [
     "make_plan",
     "make_production_mesh",
     "make_local_mesh",
-    "ShardingPolicy",
-    "make_policy",
     "pipeline_apply",
     "compression_transform",
     "compressed_psum",

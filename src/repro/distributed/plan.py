@@ -7,7 +7,7 @@ construction in ``launch/mesh.py``, a ``ShardingPolicy`` whose
 unifies them:
 
 * **Mesh construction** — :func:`make_production_mesh` / :func:`make_local_mesh`
-  live here (``launch/mesh.py`` is a one-PR re-export shim).
+  live here (``repro.launch`` re-exports them for launcher convenience).
 * **Per-weight partition decisions** — the leaf-name ladder is now the
   declarative :data:`LAYER_RULES` table (name -> role); a role resolves to a
   concrete :class:`WeightPlan` (column / row / replicated + the mesh axes it
@@ -68,7 +68,7 @@ STRATEGIES = ("gspmd", "tp", "fsdp")
 
 
 # --------------------------------------------------------------------------
-# mesh construction (absorbed from launch/mesh.py)
+# mesh construction
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     """Target topology: one v5e pod slice of 256 chips (16x16), or two pods.
 
@@ -471,6 +471,40 @@ class ShardingPlan:
             if isinstance(t, dict):
                 return {k: walk(v, k) for k, v in t.items()}
             return self.named(self.cache_pspec(name, tuple(t.shape)))
+
+        return walk(cache_shapes)
+
+    def paged_cache_pspec(self, name: str, shape: Tuple[int, ...]) -> P:
+        """Paged serving-cache leaves (``transformer.init_paged_cache``).
+
+        Pools are (L, num_blocks, block_size, ...): the block and in-block
+        token dims are *addresses*, never sharded — each device holds every
+        block's rows for its head shard, so a decode step's gather is purely
+        local.  KV heads shard over TP exactly like the contiguous decode
+        cache when divisible; the MLA latent (no head axis) and the
+        per-slot SSM pools follow their contiguous rules.
+        """
+        if name in ("k", "v"):            # (L, nb, bs, KV, hd)
+            if self.heads_on_tp:
+                return P(None, None, None, self.tp, None)
+            return P(*([None] * len(shape)))
+        if name in ("k_scale", "v_scale"):  # (L, nb, bs, KV)
+            if self.heads_on_tp:
+                return P(None, None, None, self.tp)
+            return P(*([None] * len(shape)))
+        if name == "state":               # (L, slots, H, P, N)
+            return P(None, None, self._tp_if(shape[2]), None, None)
+        if name == "conv":                # (L, slots, K-1, conv_dim)
+            return P(None, None, None, self._tp_if(shape[3]))
+        # c_kv / k_rope latents and their scales: replicated (rank is small
+        # and the absorbed einsums want the full latent per device)
+        return P(*([None] * len(shape)))
+
+    def paged_cache_shardings(self, cache_shapes: Dict[str, Any]) -> Dict[str, Any]:
+        def walk(t, name=None):
+            if isinstance(t, dict):
+                return {k: walk(v, k) for k, v in t.items()}
+            return self.named(self.paged_cache_pspec(name, tuple(t.shape)))
 
         return walk(cache_shapes)
 

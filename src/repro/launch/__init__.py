@@ -1,8 +1,8 @@
 """Launchers: dry-run, training and serving drivers.
 
-Mesh construction moved into the unified distributed plan
-(``repro.distributed.plan``); the re-exports here (and the
-``repro.launch.mesh`` shim) remain for one PR.
+Mesh construction lives in the unified distributed plan
+(``repro.distributed.plan``); ``make_production_mesh`` / ``make_local_mesh``
+are re-exported here for launcher convenience.
 
 NOTE: repro.launch.dryrun sets XLA_FLAGS at import — never import it from
 library code; it is an entry point only (python -m repro.launch.dryrun).

@@ -1,7 +1,12 @@
-"""Serving driver: batched requests through the slot-pool server.
+"""Serving driver: batched requests through the serving engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --reduced \
         --requests 8 --max-new 32
+
+``--engine paged`` (default) serves through the continuous-batching engine
+with the paged KV cache (``repro.serving``); ``--engine wave`` runs the
+legacy static-batch wave loop for comparison.  ``--kv-quant int8`` stores
+K/V at int8 (~2x sequences per byte; see docs/serving.md).
 """
 
 from __future__ import annotations
@@ -13,7 +18,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import transformer as tf_model
-from repro.runtime import Server, ServerConfig
+from repro.runtime import Server, ServerConfig, WaveServer
 from repro.runtime.server import Request
 
 
@@ -25,6 +30,17 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--max-seq", type=int, default=256)
+    ap.add_argument("--engine", choices=("paged", "wave"), default="paged",
+                    help="paged: continuous-batching engine (repro.serving); "
+                         "wave: legacy static-batch loop")
+    ap.add_argument("--block-size", type=int, default=None,
+                    help="paged-KV block size (tokens; default "
+                         "cfg.kv_block_size)")
+    ap.add_argument("--kv-quant", choices=("none", "int8"), default=None,
+                    help="KV-cache storage (default cfg.kv_quant); int8 "
+                         "halves cache bytes per token")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="chunked-prefill granularity (tokens per chunk)")
     ap.add_argument("--dip", action="store_true",
                     help="store weights DiP-permutated + use the Pallas kernel")
     ap.add_argument("--sharded", choices=("tp", "fsdp"), default=None,
@@ -75,9 +91,13 @@ def main():
         autotune.autotune_for_config(cfg, tokens=args.slots, verbose=True)
 
     params = tf_model.init_params(jax.random.PRNGKey(0), cfg)
-    server = Server(cfg, ServerConfig(batch_slots=args.slots, max_seq=args.max_seq,
-                                      max_new_tokens=args.max_new), params,
-                    plan=plan)
+    scfg = ServerConfig(
+        batch_slots=args.slots, max_seq=args.max_seq,
+        max_new_tokens=args.max_new, prefill_chunk=args.prefill_chunk,
+        block_size=args.block_size, kv_quant=args.kv_quant,
+    )
+    cls = Server if args.engine == "paged" else WaveServer
+    server = cls(cfg, scfg, params, plan=plan)
     rng = np.random.default_rng(0)
     reqs = [
         Request(rid=i, prompt=rng.integers(2, cfg.vocab_size, size=rng.integers(4, 16)))
@@ -86,7 +106,7 @@ def main():
     results = server.serve(reqs)
     for rid in sorted(results):
         print(f"req {rid}: {len(results[rid])} tokens -> {results[rid][:8]}...")
-    print(f"[serve] {server.last_stats}")
+    print(f"[serve:{args.engine}] {server.last_stats}")
 
 
 if __name__ == "__main__":

@@ -36,6 +36,12 @@ __all__ = [
     "mla_attention",
     "init_gqa_cache",
     "init_mla_cache",
+    "init_paged_gqa_cache",
+    "init_paged_mla_cache",
+    "paged_gqa_attention",
+    "paged_mla_attention",
+    "paged_write",
+    "paged_read",
 ]
 
 NEG_INF = -1e30
@@ -296,6 +302,247 @@ def mla_attention(
     out = out.reshape(b, s, h * dv_)
     if residual is not None:
         # fused mid-block residual: left to propagation (see gqa_attention)
+        out = layers.linear(out, p["wo"], epilogue="residual",
+                            epilogue_operands=(residual,), **lk)
+        return out, new_cache
+    out = layers.linear(out, p["wo"], **lk)
+    return constrain(out, "act_btd"), new_cache
+
+
+# ------------------------------------------------------------------- paged --
+# Block-table-indexed KV cache for the serving engine (repro.serving): K/V
+# live in a pool of fixed-size blocks shared by every sequence; a per-slot
+# block table maps logical token position p to physical storage
+# (table[p // block_size], p % block_size).  All shapes are static — ONE
+# compiled decode step serves the whole slot pool regardless of which slots
+# are live or how long each sequence is — and storage is optionally int8
+# (per-token/head symmetric scales via ``api.quant.quantize_rows``).
+# The host-side allocator that hands out blocks lives in
+# ``repro.serving.kv_cache``; see docs/serving.md §Paged KV layout.
+
+def init_paged_gqa_cache(num_blocks: int, block_size: int, kv_heads: int,
+                         head_dim: int, dtype, kv_quant: str = "none") -> Dict:
+    """GQA block pool: k/v (num_blocks, block_size, kv_heads, head_dim);
+    int8 mode adds per-token/head f32 scales (num_blocks, block_size, kv_heads)."""
+    if kv_quant == "none":
+        return {
+            "k": jnp.zeros((num_blocks, block_size, kv_heads, head_dim), dtype),
+            "v": jnp.zeros((num_blocks, block_size, kv_heads, head_dim), dtype),
+        }
+    sdt = jnp.dtype(api.quant.scheme_info(kv_quant).storage_dtype)
+    return {
+        "k": jnp.zeros((num_blocks, block_size, kv_heads, head_dim), sdt),
+        "v": jnp.zeros((num_blocks, block_size, kv_heads, head_dim), sdt),
+        "k_scale": jnp.zeros((num_blocks, block_size, kv_heads), jnp.float32),
+        "v_scale": jnp.zeros((num_blocks, block_size, kv_heads), jnp.float32),
+    }
+
+
+def init_paged_mla_cache(num_blocks: int, block_size: int, cfg, dtype,
+                         kv_quant: str = "none") -> Dict:
+    """MLA block pool: the latent c_kv and shared k_rope are paged the same
+    way; int8 scales are per token (one row = the whole latent/rope vector)."""
+    if kv_quant == "none":
+        return {
+            "c_kv": jnp.zeros((num_blocks, block_size, cfg.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((num_blocks, block_size, cfg.qk_rope_head_dim), dtype),
+        }
+    sdt = jnp.dtype(api.quant.scheme_info(kv_quant).storage_dtype)
+    return {
+        "c_kv": jnp.zeros((num_blocks, block_size, cfg.kv_lora_rank), sdt),
+        "k_rope": jnp.zeros((num_blocks, block_size, cfg.qk_rope_head_dim), sdt),
+        "c_kv_scale": jnp.zeros((num_blocks, block_size), jnp.float32),
+        "k_rope_scale": jnp.zeros((num_blocks, block_size), jnp.float32),
+    }
+
+
+def paged_write(pool: jax.Array, phys: jax.Array, vals: jax.Array,
+                *, scale_pool: Optional[jax.Array] = None,
+                kv_quant: str = "none"):
+    """Scatter per-token vectors into a block pool at flat physical indices.
+
+    ``pool``: (num_blocks, block_size, ...); ``phys``: (N,) flat token indices
+    (``num_blocks * block_size`` acts as a drop sentinel for padding / dead
+    rows); ``vals``: (N, ...).  Returns ``(pool, scale_pool)`` updated; int8
+    mode quantizes each row (last axis) and records its scale.
+    """
+    nb, bs = pool.shape[:2]
+    flat = pool.reshape((nb * bs,) + pool.shape[2:])
+    if kv_quant != "none":
+        q, scale = api.quant.quantize_rows(vals, kv_quant)
+        flat = flat.at[phys].set(q, mode="drop")
+        sflat = scale_pool.reshape((nb * bs,) + scale_pool.shape[2:])
+        sflat = sflat.at[phys].set(scale[..., 0], mode="drop")
+        return flat.reshape(pool.shape), sflat.reshape(scale_pool.shape)
+    flat = flat.at[phys].set(vals.astype(pool.dtype), mode="drop")
+    return flat.reshape(pool.shape), scale_pool
+
+
+def paged_read(pool: jax.Array, idx: jax.Array,
+               *, scale_pool: Optional[jax.Array] = None,
+               dtype=jnp.float32) -> jax.Array:
+    """Gather token vectors at flat physical indices ``idx`` (any shape),
+    dequantizing against ``scale_pool`` when the pool is quantized."""
+    nb, bs = pool.shape[:2]
+    flat = pool.reshape((nb * bs,) + pool.shape[2:])
+    vals = flat[idx]
+    if scale_pool is not None:
+        sflat = scale_pool.reshape((nb * bs,) + scale_pool.shape[2:])
+        return api.quant.dequantize_rows(vals, sflat[idx][..., None], dtype)
+    return vals.astype(dtype)
+
+
+def _gather_indices(block_tables: jax.Array, block_size: int) -> jax.Array:
+    """(B, n_blocks) block tables -> (B, n_blocks * block_size) flat token
+    indices in logical order."""
+    b, nblk = block_tables.shape
+    idx = block_tables[:, :, None] * block_size + jnp.arange(
+        block_size, dtype=block_tables.dtype
+    )[None, None, :]
+    return idx.reshape(b, nblk * block_size)
+
+
+def paged_gqa_attention(
+    x: jax.Array,                  # (B, 1, d) — one decode token per slot
+    p: Dict,
+    cfg,
+    *,
+    positions: jax.Array,          # (B,) per-slot absolute positions
+    cache: Dict,                   # paged pool (init_paged_gqa_cache)
+    block_tables: jax.Array,       # (B, n_blocks_per_seq) int32
+    kv_quant: str = "none",
+    constrain: Optional[Constrain] = None,
+    rope=None,
+    residual: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Dict]:
+    """GQA decode against the paged pool: write this token's K/V into its
+    slot's block, gather the slot's whole context, attend with per-row valid
+    lengths.  Rows whose slot is free write to the reserved null block 0 and
+    their output is ignored by the engine."""
+    constrain = constrain if constrain is not None else _id
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    bs = cache["k"].shape[1]
+    lk = dict(backend=cfg.matmul_backend, compute_dtype=x.dtype)
+    q = layers.linear(x, p["wq"], p.get("bq"), **lk).reshape(b, s, h, hd)
+    k = layers.linear(x, p["wk"], p.get("bk"), **lk).reshape(b, s, kv, hd)
+    v = layers.linear(x, p["wv"], p.get("bv"), **lk).reshape(b, s, kv, hd)
+
+    pos2 = positions[:, None]                                   # (B, 1)
+    q = layers.apply_rope(q, pos2, cfg.rope_theta, tables=rope)
+    k = layers.apply_rope(k, pos2, cfg.rope_theta, tables=rope)
+    q = constrain(q, "q_bthd")
+
+    phys = block_tables[jnp.arange(b), positions // bs] * bs + positions % bs
+    ck, cks = paged_write(cache["k"], phys, k[:, 0],
+                          scale_pool=cache.get("k_scale"), kv_quant=kv_quant)
+    cv, cvs = paged_write(cache["v"], phys, v[:, 0],
+                          scale_pool=cache.get("v_scale"), kv_quant=kv_quant)
+    new_cache = {"k": ck, "v": cv}
+    if kv_quant != "none":
+        new_cache.update(k_scale=cks, v_scale=cvs)
+
+    idx = _gather_indices(block_tables, bs)                     # (B, Smax)
+    k_all = paged_read(ck, idx, scale_pool=cks, dtype=x.dtype)  # (B, Smax, KV, hd)
+    v_all = paged_read(cv, idx, scale_pool=cvs, dtype=x.dtype)
+
+    smax = k_all.shape[1]
+    groups = h // kv
+    if groups > 1:
+        k_all = jnp.broadcast_to(
+            k_all[:, :, :, None, :], (b, smax, kv, groups, hd)
+        ).reshape(b, smax, h, hd)
+        v_all = jnp.broadcast_to(
+            v_all[:, :, :, None, :], (b, smax, kv, groups, hd)
+        ).reshape(b, smax, h, hd)
+
+    scale = hd ** -0.5
+    scores = jnp.einsum(
+        "bqhd,bshd->bhqs",
+        (q * scale).astype(jnp.float32), k_all.astype(jnp.float32),
+    )
+    # logical position t is live iff t <= pos (the current token, just
+    # written, attends to itself and everything before it)
+    live = (jnp.arange(smax, dtype=jnp.int32)[None, :] <= positions[:, None])
+    scores = jnp.where(live[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqs,bshd->bqhd", probs.astype(v_all.dtype), v_all)
+
+    out = out.reshape(b, s, h * hd)
+    if residual is not None:
+        out = layers.linear(out, p["wo"], epilogue="residual",
+                            epilogue_operands=(residual,), **lk)
+        return out, new_cache
+    out = layers.linear(out, p["wo"], **lk)
+    return constrain(out, "act_btd"), new_cache
+
+
+def paged_mla_attention(
+    x: jax.Array,                  # (B, 1, d)
+    p: Dict,
+    cfg,
+    *,
+    positions: jax.Array,          # (B,)
+    cache: Dict,                   # paged pool (init_paged_mla_cache)
+    block_tables: jax.Array,
+    kv_quant: str = "none",
+    constrain: Optional[Constrain] = None,
+    rope=None,
+    residual: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Dict]:
+    """Absorbed-form MLA decode against the paged latent pool (the compressed
+    c_kv / shared k_rope page exactly like K/V — one row per token)."""
+    constrain = constrain if constrain is not None else _id
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    dn, dr, dv_ = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    bs = cache["c_kv"].shape[1]
+    lk = dict(backend=cfg.matmul_backend, compute_dtype=x.dtype)
+
+    q = layers.linear(x, p["wq"], **lk).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    pos2 = positions[:, None]
+    q_rope = layers.apply_rope(q_rope, pos2, cfg.rope_theta, tables=rope)
+
+    c_kv = layers.linear(x, p["w_dkv"], **lk)                   # (B, 1, r)
+    k_rope = layers.linear(x, p["w_krope"], **lk)               # (B, 1, dr)
+    k_rope = layers.apply_rope(
+        k_rope[:, :, None, :], pos2, cfg.rope_theta, tables=rope
+    )[:, :, 0, :]
+
+    phys = block_tables[jnp.arange(b), positions // bs] * bs + positions % bs
+    cc, ccs = paged_write(cache["c_kv"], phys, c_kv[:, 0],
+                          scale_pool=cache.get("c_kv_scale"), kv_quant=kv_quant)
+    cr, crs = paged_write(cache["k_rope"], phys, k_rope[:, 0],
+                          scale_pool=cache.get("k_rope_scale"), kv_quant=kv_quant)
+    new_cache = {"c_kv": cc, "k_rope": cr}
+    if kv_quant != "none":
+        new_cache.update(c_kv_scale=ccs, k_rope_scale=crs)
+
+    idx = _gather_indices(block_tables, bs)
+    cc_all = paged_read(cc, idx, scale_pool=ccs, dtype=x.dtype)  # (B, Smax, r)
+    cr_all = paged_read(cr, idx, scale_pool=crs, dtype=x.dtype)  # (B, Smax, dr)
+    smax = cc_all.shape[1]
+
+    w_uk = _natural(p["w_uk"]).astype(x.dtype).reshape(r, h, dn)
+    w_uv = _natural(p["w_uv"]).astype(x.dtype).reshape(r, h, dv_)
+
+    q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk)
+    scale = (dn + dr) ** -0.5
+    s_lat = jnp.einsum("bshr,btr->bhst", q_lat.astype(jnp.float32),
+                       cc_all.astype(jnp.float32))
+    s_rope = jnp.einsum("bshd,btd->bhst", q_rope.astype(jnp.float32),
+                        cr_all.astype(jnp.float32))
+    scores = (s_lat + s_rope) * scale
+    live = (jnp.arange(smax, dtype=jnp.int32)[None, :] <= positions[:, None])
+    scores = jnp.where(live[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out_lat = jnp.einsum("bhst,btr->bshr", probs.astype(cc_all.dtype), cc_all)
+    out = jnp.einsum("bshr,rhd->bshd", out_lat, w_uv)
+
+    out = out.reshape(b, s, h * dv_)
+    if residual is not None:
         out = layers.linear(out, p["wo"], epilogue="residual",
                             epilogue_operands=(residual,), **lk)
         return out, new_cache

@@ -40,9 +40,11 @@ __all__ = [
     "quantize_params",
     "forward",
     "init_cache",
+    "init_paged_cache",
     "loss_fn",
     "train_step_fn",
     "decode_step_fn",
+    "paged_decode_step_fn",
 ]
 
 
@@ -504,6 +506,183 @@ def init_cache(cfg, batch: int, max_seq: int) -> Dict[str, Any]:
 
 def _strip_pos(c: Dict) -> Dict:
     return {k: v for k, v in c.items() if k != "pos"}
+
+
+def init_paged_cache(cfg, num_blocks: int, block_size: int, *, slots: int,
+                     kv_quant: str = "none") -> Dict[str, Any]:
+    """Layer-stacked *paged* decode cache for the serving engine.
+
+    Attention K/V (and the MLA latent) live in a shared pool of
+    ``num_blocks`` fixed-size blocks indexed through per-slot block tables;
+    SSM conv/scan state is O(1) per sequence, so it gets a plain per-slot
+    pool (batch axis = ``slots``) rather than pages.  There is no global
+    ``pos`` — positions are per-slot and passed to each decode step.  Block 0
+    is reserved as the null block (see ``repro.serving.kv_cache``).
+    """
+    cd = jnp.dtype(cfg.compute_dtype)
+
+    def stack(make, n):
+        caches = [make() for _ in range(n)]
+        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *caches)
+
+    def gqa_pool():
+        return attention.init_paged_gqa_cache(
+            num_blocks, block_size, cfg.n_kv_heads, cfg.resolved_head_dim,
+            cd, kv_quant,
+        )
+
+    if cfg.ssm_state:
+        base = stack(lambda: _strip_pos(ssm.init_ssm_cache(slots, cfg, cd)),
+                     cfg.n_layers)
+        if cfg.is_hybrid:
+            n_super = cfg.n_layers // cfg.attn_every
+            base["attn"] = stack(gqa_pool, n_super)
+        layers_cache = base
+    elif cfg.use_mla:
+        layers_cache = stack(
+            lambda: attention.init_paged_mla_cache(
+                num_blocks, block_size, cfg, cd, kv_quant
+            ),
+            cfg.n_layers,
+        )
+    else:
+        layers_cache = stack(gqa_pool, cfg.n_layers)
+    return {"layers": layers_cache}
+
+
+def paged_decode_step_fn(cfg, *, plan=None, constrain: Optional[Constrain] = None):
+    """Returns ``step(params, cache, tokens, positions, block_tables)``
+    -> ``(logits, cache)`` — the serving engine's one compiled decode step.
+
+    ``tokens``: (slots, 1) int32; ``positions``: (slots,) int32 absolute
+    position of each slot's current token; ``block_tables``:
+    (slots, blocks_per_seq) int32 into the paged pools of ``cache`` (from
+    :func:`init_paged_cache`).  Each slot attends only to its own blocks with
+    its own positions, so the rows are fully independent — free slots point
+    at the reserved null block and their logits are garbage the engine
+    ignores.  All shapes are static: one compilation serves the pool for the
+    whole engine lifetime.
+    """
+    constrain = layers.resolve_constrain(plan, constrain)
+    kvq = cfg.kv_quant
+
+    def step(params, cache, tokens, positions, block_tables):
+        cd = jnp.dtype(cfg.compute_dtype)
+        x = params["embed"].astype(cd)[tokens]          # (B, 1, d)
+        x = constrain(x, "act_btd")
+
+        if cfg.ssm_state:
+            x, new_layer_caches = _paged_scan_mamba(
+                params, cfg, x, cache, positions, block_tables, kvq, constrain
+            )
+        else:
+            rope_dim = cfg.qk_rope_head_dim if cfg.use_mla else cfg.resolved_head_dim
+            rope = layers.rope_tables(positions[:, None], rope_dim, cfg.rope_theta)
+            attn = (attention.paged_mla_attention if cfg.use_mla
+                    else attention.paged_gqa_attention)
+
+            def block(x, xs):
+                lp, lcache = xs
+                attn_in = layers.rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+                x, new_cache = attn(
+                    attn_in, lp, cfg, positions=positions, cache=lcache,
+                    block_tables=block_tables, kv_quant=kvq,
+                    constrain=constrain, rope=rope, residual=x,
+                )
+                ffn_in = layers.rms_norm(x, lp["ffn_norm"], cfg.norm_eps)
+                if cfg.is_moe:
+                    f, _ = moe.moe_ffn(ffn_in, lp, cfg, constrain=constrain)
+                    x = x + f
+                else:
+                    x = moe.dense_ffn(ffn_in, lp, cfg, constrain=constrain,
+                                      residual=x)
+                return constrain(x, "act_btd"), new_cache
+
+            x, new_layer_caches = jax.lax.scan(
+                block, x, (params["layers"], cache["layers"])
+            )
+
+        x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        if cfg.tie_embeddings:
+            logits = jnp.matmul(
+                x, head.astype(cd), preferred_element_type=jnp.float32
+            ).astype(jnp.float32)
+        else:
+            logits = layers.linear(
+                x, head, backend=cfg.matmul_backend, compute_dtype=cd,
+            ).astype(jnp.float32)
+        if cfg.padded_vocab != cfg.vocab_size:
+            lane = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+            logits = jnp.where(lane < cfg.vocab_size, logits, -1e30)
+        logits = constrain(logits, "logits")
+        return logits, {"layers": new_layer_caches}
+
+    return step
+
+
+def _paged_scan_mamba(params, cfg, x, cache, positions, block_tables, kvq,
+                      constrain):
+    """Paged-serving analogue of :func:`_scan_mamba`: mamba state is a plain
+    per-slot pool (the O(1) decode never reads positions), the hybrid shared
+    attention goes through the paged path."""
+    lp_all = params["layers"]
+    lcaches = cache["layers"]
+    zero = jnp.zeros((), jnp.int32)   # ssd_block's pos bookkeeping — unused here
+
+    def mblock(x, lp, lcache):
+        x, nc = _mamba_block(x, lp, cfg, cache=dict(lcache, pos=zero),
+                             constrain=constrain)
+        return x, _strip_pos(nc)
+
+    if not cfg.is_hybrid:
+        def body(x, xs):
+            lp, lc = xs
+            return mblock(x, lp, lc)
+        x, new_mc = jax.lax.scan(body, x, (lp_all, lcaches))
+        return x, new_mc
+
+    ae = cfg.attn_every
+    n_super = cfg.n_layers // ae
+    shared = params["shared_attn"]
+    rope = layers.rope_tables(positions[:, None], cfg.resolved_head_dim,
+                              cfg.rope_theta)
+
+    def regroup(t):
+        return t.reshape((n_super, ae) + t.shape[1:])
+
+    lp_grp = jax.tree_util.tree_map(regroup, lp_all)
+    mcache_grp = jax.tree_util.tree_map(
+        regroup, {k: v for k, v in lcaches.items() if k != "attn"}
+    )
+    acache = lcaches["attn"]
+
+    def shared_block(x, sc):
+        attn_in = layers.rms_norm(x, shared["attn_norm"], cfg.norm_eps)
+        x, new_sc = attention.paged_gqa_attention(
+            attn_in, shared, cfg, positions=positions, cache=sc,
+            block_tables=block_tables, kv_quant=kvq,
+            constrain=constrain, rope=rope, residual=x,
+        )
+        ffn_in = layers.rms_norm(x, shared["ffn_norm"], cfg.norm_eps)
+        x = moe.dense_ffn(ffn_in, shared, cfg, constrain=constrain, residual=x)
+        return x, new_sc
+
+    def superblock(x, xs):
+        lp, mc, ac = xs
+        def inner(x, ys):
+            ilp, imc = ys
+            return mblock(x, ilp, imc)
+        x, new_mc = jax.lax.scan(inner, x, (lp, mc))
+        x, new_ac = shared_block(x, ac)
+        return x, (new_mc, new_ac)
+
+    x, (new_mc, new_ac) = jax.lax.scan(superblock, x, (lp_grp, mcache_grp, acache))
+    new_mc = jax.tree_util.tree_map(
+        lambda t: t.reshape((cfg.n_layers,) + t.shape[2:]), new_mc
+    )
+    new_mc["attn"] = new_ac
+    return x, new_mc
 
 
 # ------------------------------------------------------------- objectives ---

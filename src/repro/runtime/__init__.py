@@ -1,6 +1,12 @@
-"""Runtime: fault-tolerant training loop and batched serving loop."""
+"""Runtime: fault-tolerant training loop and serving entry points.
+
+``Server`` wraps the continuous-batching engine (``repro.serving``);
+``WaveServer`` is the pre-engine static-batch loop kept as the bench
+baseline.
+"""
 
 from repro.runtime.trainer import Trainer, TrainerConfig
-from repro.runtime.server import Server, ServerConfig
+from repro.runtime.server import Request, Server, ServerConfig, WaveServer
 
-__all__ = ["Trainer", "TrainerConfig", "Server", "ServerConfig"]
+__all__ = ["Trainer", "TrainerConfig", "Server", "ServerConfig", "Request",
+           "WaveServer"]

@@ -1,19 +1,26 @@
-"""Batched serving loop: prefill + decode with continuous slot reuse.
+"""Serving entry points.
 
-A fixed pool of ``batch`` decode slots; finished sequences free their slot,
-queued requests claim it (their prompt is prefilled into the shared cache at
-the slot's row).  This is the standard continuous-batching shape (vLLM-lite)
-expressed with static shapes so a single compiled decode step serves the
-whole pool.
+``Server`` is now a thin compatibility wrapper over the real engine
+(``repro.serving.Engine``): continuous in-flight batching over a paged KV
+pool, chunked prefill, per-request seeded sampling.  The wrapper keeps the
+original surface — ``ServerConfig`` / ``Request`` / ``serve()`` /
+``last_stats`` — so existing callers and tests are untouched; new code
+should use the engine directly (streaming callbacks, per-request params,
+preemption hooks — see docs/serving.md).
 
-Sampling: temperature + top-k on the host (logits are tiny at batch x vocab).
+``WaveServer`` preserves the pre-engine reference loop (wave admission:
+slots refill only when ALL are free) as the baseline
+``benchmarks/serving_bench.py`` measures the engine against.  Its sampler is
+the vectorized Gumbel-max (``serving.sampling``) — the per-row
+``rng.choice`` Python loop it shipped with was O(batch * vocab) Python work
+per token.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,8 +28,11 @@ import numpy as np
 
 from repro import api
 from repro.models import transformer as tf_model
+from repro.serving import sampling
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.scheduler import SamplingParams
 
-__all__ = ["Server", "ServerConfig", "Request"]
+__all__ = ["Server", "ServerConfig", "Request", "WaveServer"]
 
 
 @dataclasses.dataclass
@@ -33,6 +43,10 @@ class ServerConfig:
     temperature: float = 0.8
     top_k: int = 50
     eos_id: int = 1
+    # engine knobs (None -> ArchConfig defaults); ignored by WaveServer
+    prefill_chunk: int = 32
+    block_size: Optional[int] = None
+    kv_quant: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -41,30 +55,68 @@ class Request:
     prompt: np.ndarray                 # (prompt_len,)
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    max_new: Optional[int] = None      # per-request cap (None -> ServerConfig)
 
 
 class Server:
+    """Compatibility wrapper: the legacy batch API served by the engine."""
+
     def __init__(self, cfg, scfg: ServerConfig, params, *, plan=None, policy=None):
         self.cfg = cfg
         self.scfg = scfg
         plan = plan if plan is not None else policy
+        self.plan = plan
+        self.engine = Engine(
+            cfg, params,
+            engine_cfg=EngineConfig(
+                slots=scfg.batch_slots,
+                max_seq=scfg.max_seq,
+                prefill_chunk=scfg.prefill_chunk,
+                block_size=scfg.block_size,
+                kv_quant=scfg.kv_quant,
+                eos_id=scfg.eos_id,
+            ),
+            plan=plan,
+        )
+        self.params = self.engine.params
+
+    def _sampling_for(self, req: Request) -> SamplingParams:
+        return SamplingParams(
+            temperature=self.scfg.temperature,
+            top_k=self.scfg.top_k,
+            max_new_tokens=req.max_new or self.scfg.max_new_tokens,
+            seed=req.rid,
+        )
+
+    def serve(self, requests: List[Request]) -> Dict[int, List[int]]:
+        """Run all requests to completion through the engine's slot pool."""
+        for r in requests:
+            self.engine.add_request(r.prompt, self._sampling_for(r), rid=r.rid)
+        results = self.engine.run()
+        for r in requests:
+            r.out_tokens = list(results.get(r.rid, []))
+            r.done = r.rid in results
+        self.last_stats = dict(self.engine.last_stats)
+        return results
+
+
+class WaveServer:
+    """The pre-engine reference loop: wave admission with left-padded
+    prompts and a shared positionless cache — kept as the serving bench's
+    static-batch baseline.  Slots are (re)filled only when ALL are free, so
+    every wave decodes for its *longest* member while finished slots idle."""
+
+    def __init__(self, cfg, scfg: ServerConfig, params, *, plan=None):
+        self.cfg = cfg
+        self.scfg = scfg
         be = api.get_backend(cfg.matmul_backend)  # fail fast on unknown backends
-        if be.layout == "dip_q" and cfg.quant_scheme != be.scheme:
-            raise ValueError(
-                f"backend {be.name!r} consumes {be.scheme!r}-quantized weights "
-                f"but cfg.quantization={cfg.quantization!r}"
-            )
         if be.layout == "sharded" and plan is None:
             raise ValueError(
                 f"backend {be.name!r} dispatches on the weights' ShardingPlan "
-                "metadata; pass plan= (repro.distributed.make_plan) or serve "
-                "through the implicit GSPMD path (matmul_backend='xla')"
+                "metadata; pass plan= (repro.distributed.make_plan)"
             )
         self.plan = plan
         if plan is not None:
-            # stamp per-weight partition decisions AND place the storage
-            # accordingly — dip_fsdp's premise (1/N of every weight's bytes
-            # per device) only holds if the K-shards actually live sharded
             params = plan.attach_params(params)
             shardings = plan.param_shardings(params)
             params = jax.tree_util.tree_map(jax.device_put, params, shardings)
@@ -73,16 +125,16 @@ class Server:
         self.rng = np.random.default_rng(0)
 
     def _sample(self, logits: np.ndarray) -> np.ndarray:
-        """(B, V) -> (B,) ints; temperature + top-k."""
-        t = max(self.scfg.temperature, 1e-4)
-        logits = logits / t
-        if self.scfg.top_k:
-            kth = np.partition(logits, -self.scfg.top_k, axis=-1)[:, -self.scfg.top_k][:, None]
-            logits = np.where(logits < kth, -np.inf, logits)
-        logits = logits - logits.max(-1, keepdims=True)
-        p = np.exp(logits)
-        p /= p.sum(-1, keepdims=True)
-        return np.array([self.rng.choice(len(row), p=row) for row in p], np.int32)
+        """(B, V) -> (B,) ints; vectorized Gumbel-max (temperature + top-k)."""
+        b, v = logits.shape
+        scfg = self.scfg
+        return sampling.sample_tokens(
+            logits,
+            temperature=np.full(b, scfg.temperature, np.float32),
+            top_k=np.full(b, scfg.top_k, np.int64),
+            top_p=np.ones(b, np.float32),
+            uniforms=self.rng.random((b, v)),
+        )
 
     def serve(self, requests: List[Request]) -> Dict[int, List[int]]:
         """Run all requests to completion through the slot pool."""
@@ -94,10 +146,6 @@ class Server:
         t0 = time.monotonic()
         steps = 0
 
-        # NOTE: per-slot positions differ; for static-shape simplicity, this
-        # reference server admits waves: slots are (re)filled only when all
-        # are free.  Throughput-optimal per-slot admission needs per-row
-        # cache positions — an extension hook, not needed for the examples.
         results: Dict[int, List[int]] = {}
         while queue or any(s is not None for s in slots):
             if all(s is None for s in slots) and queue:
@@ -122,7 +170,8 @@ class Server:
                     continue
                 tok = int(nxt[i])
                 r.out_tokens.append(tok)
-                if tok == scfg.eos_id or len(r.out_tokens) >= scfg.max_new_tokens:
+                limit = r.max_new or scfg.max_new_tokens
+                if tok == scfg.eos_id or len(r.out_tokens) >= limit:
                     r.done = True
                     results[r.rid] = r.out_tokens
                     slots[i] = None

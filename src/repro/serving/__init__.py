@@ -1,0 +1,41 @@
+"""repro.serving — production serving engine (see docs/serving.md).
+
+Continuous (in-flight) batching over a fixed slot pool, a paged block KV
+cache with optional int8 storage, chunked prefill, per-request sampling, and
+FCFS admission with LIFO preemption.  ``runtime.Server`` is a thin
+compatibility wrapper over :class:`Engine`; use the engine directly for
+streaming callbacks, per-request sampling params, and stats.
+
+    from repro.serving import Engine, EngineConfig, SamplingParams
+
+    eng = Engine(cfg, params, engine_cfg=EngineConfig(slots=8))
+    rid = eng.add_request(prompt_tokens, SamplingParams(max_new_tokens=32))
+    results = eng.run()          # {rid: [tokens...]}
+"""
+
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.kv_cache import (
+    BlockAllocator,
+    PagedKVCache,
+    blocks_for_budget,
+    bytes_per_block,
+    make_import_fn,
+    max_concurrent,
+)
+from repro.serving.sampling import sample_tokens
+from repro.serving.scheduler import FCFSScheduler, SamplingParams, ServeRequest
+
+__all__ = [
+    "Engine",
+    "EngineConfig",
+    "SamplingParams",
+    "ServeRequest",
+    "FCFSScheduler",
+    "BlockAllocator",
+    "PagedKVCache",
+    "bytes_per_block",
+    "blocks_for_budget",
+    "max_concurrent",
+    "make_import_fn",
+    "sample_tokens",
+]

@@ -1,0 +1,255 @@
+"""Paged KV cache: free-list block allocator, per-slot block tables, and the
+prefill-import scatter.
+
+Layout (see docs/serving.md §Paged KV layout): every attention layer's K/V
+(or MLA latent) lives in one pool of ``num_blocks`` blocks of ``block_size``
+tokens.  A sequence owns an ordered list of blocks; logical position ``p``
+maps to physical row ``table[p // block_size] * block_size + p % block_size``.
+Pools are static-shaped, so one compiled decode step serves every sequence
+in the pool for the engine's lifetime; growing a sequence is a *host-side*
+table edit, never a reallocation.
+
+**Block 0 is reserved as the null block**: free slots' tables point at it, so
+their (masked, ignored) decode writes land somewhere harmless and no branch
+is needed in the compiled step.  The allocator therefore hands out blocks
+``1..num_blocks-1``.
+
+Storage is bf16 (``kv_quant="none"``) or int8 with per-token/head float32
+scales (``kv_quant="int8"``, via ``api.quant.quantize_rows``) — int8 halves
+the bytes per cached token, so a fixed byte budget holds ~2x the blocks
+(:func:`blocks_for_budget` makes that exact).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention
+from repro.models import transformer as tf_model
+
+__all__ = [
+    "BlockAllocator",
+    "PagedKVCache",
+    "bytes_per_block",
+    "blocks_for_budget",
+    "max_concurrent",
+    "make_import_fn",
+]
+
+
+class BlockAllocator:
+    """Free-list allocator over blocks ``1..num_blocks-1`` (0 = null block).
+
+    ``alloc`` is all-or-nothing: a request that cannot get every block it
+    asked for gets none (the scheduler then waits or preempts).  Double-free
+    and foreign-free raise — the invariants the property tests lean on.
+    """
+
+    NULL_BLOCK = 0
+
+    def __init__(self, num_blocks: int):
+        if num_blocks < 2:
+            raise ValueError("need >= 2 blocks (block 0 is the null block)")
+        self.num_blocks = num_blocks
+        self._free: List[int] = list(range(num_blocks - 1, 0, -1))
+        self._allocated: set = set()
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        if n > len(self._free):
+            return None
+        got = [self._free.pop() for _ in range(n)]
+        self._allocated.update(got)
+        return got
+
+    def free(self, blocks: List[int]) -> None:
+        for b in blocks:
+            if b not in self._allocated:
+                raise ValueError(f"freeing block {b} not currently allocated")
+            self._allocated.discard(b)
+            self._free.append(b)
+
+
+class PagedKVCache:
+    """Device pools + host-side block tables for a fixed slot pool.
+
+    ``block_tables`` is host numpy (slots, blocks_per_seq) int32 — rows of
+    free slots are all null-block.  ``ensure(slot, length)`` grows a slot's
+    table to cover ``length`` tokens (False if the allocator is exhausted —
+    the engine's preemption trigger); ``release(slot)`` returns everything.
+    """
+
+    def __init__(self, cfg, *, num_blocks: int, block_size: int, slots: int,
+                 max_seq: int, kv_quant: str = "none", plan=None):
+        self.cfg = cfg
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self.slots = slots
+        self.kv_quant = kv_quant
+        self.blocks_per_seq = -(-max_seq // block_size)
+        self.pools = tf_model.init_paged_cache(
+            cfg, num_blocks, block_size, slots=slots, kv_quant=kv_quant
+        )
+        if plan is not None:
+            shardings = plan.paged_cache_shardings(self.pools)
+            self.pools = jax.tree_util.tree_map(
+                jax.device_put, self.pools, shardings
+            )
+        self.allocator = BlockAllocator(num_blocks)
+        self.block_tables = np.zeros((slots, self.blocks_per_seq), np.int32)
+        self.owned: List[List[int]] = [[] for _ in range(slots)]
+
+    def blocks_needed(self, length: int) -> int:
+        return -(-length // self.block_size)
+
+    def can_allocate(self, length: int) -> bool:
+        return self.blocks_needed(length) <= self.allocator.num_free
+
+    def ensure(self, slot: int, length: int) -> bool:
+        """Grow ``slot``'s table to cover ``length`` tokens; all-or-nothing."""
+        need = self.blocks_needed(length)
+        if need > self.blocks_per_seq:
+            raise ValueError(
+                f"sequence of {length} tokens needs {need} blocks > "
+                f"blocks_per_seq={self.blocks_per_seq} (raise max_seq)"
+            )
+        have = len(self.owned[slot])
+        if need <= have:
+            return True
+        got = self.allocator.alloc(need - have)
+        if got is None:
+            return False
+        for b in got:
+            self.block_tables[slot, len(self.owned[slot])] = b
+            self.owned[slot].append(b)
+        return True
+
+    def release(self, slot: int) -> None:
+        if self.owned[slot]:
+            self.allocator.free(self.owned[slot])
+        self.owned[slot] = []
+        self.block_tables[slot] = BlockAllocator.NULL_BLOCK
+
+    def table_row(self, slot: int) -> np.ndarray:
+        return self.block_tables[slot]
+
+
+# ------------------------------------------------------------- capacity ----
+def bytes_per_block(cfg, block_size: Optional[int] = None,
+                    kv_quant: Optional[str] = None) -> int:
+    """Exact device bytes one KV block costs across all layers.
+
+    GQA: L * 2 * bs * KV * hd elements; MLA: L * bs * (rank + rope); hybrid:
+    only the ``n_super`` shared-attention instances page.  int8 storage is
+    1 byte/element plus a float32 scale per (token, head) row — the bound
+    the int8-beats-bf16 capacity criterion is tested against.  Pure SSM has
+    no paged state (returns 0).
+    """
+    bs = block_size if block_size is not None else cfg.kv_block_size
+    kvq = kv_quant if kv_quant is not None else cfg.kv_quant
+    item = 1 if kvq != "none" else jnp.dtype(cfg.compute_dtype).itemsize
+
+    if cfg.is_ssm:
+        return 0
+    if cfg.use_mla:
+        per_tok = (cfg.kv_lora_rank + cfg.qk_rope_head_dim) * item
+        scale = 2 * 4 if kvq != "none" else 0          # c_kv + k_rope scales
+        return cfg.n_layers * bs * (per_tok + scale)
+    n_inst = cfg.n_layers // cfg.attn_every if cfg.is_hybrid else cfg.n_layers
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    per_tok = 2 * kv * hd * item                       # k + v
+    scale = 2 * kv * 4 if kvq != "none" else 0
+    return n_inst * bs * (per_tok + scale)
+
+
+def blocks_for_budget(cfg, budget_bytes: int, block_size: Optional[int] = None,
+                      kv_quant: Optional[str] = None) -> int:
+    """Usable blocks (null block excluded) a byte budget buys."""
+    per = bytes_per_block(cfg, block_size, kv_quant)
+    if per == 0:
+        raise ValueError(f"{cfg.name}: pure-SSM config has no paged KV bytes")
+    return max(0, budget_bytes // per - 1)
+
+
+def max_concurrent(cfg, num_usable_blocks: int, seq_len: int,
+                   block_size: Optional[int] = None) -> int:
+    """Sequences of ``seq_len`` tokens that fit in ``num_usable_blocks``."""
+    bs = block_size if block_size is not None else cfg.kv_block_size
+    per_seq = -(-seq_len // bs)
+    return num_usable_blocks // per_seq
+
+
+# ------------------------------------------------------- prefill import ----
+def make_import_fn(cfg, num_blocks: int, block_size: int, kv_quant: str):
+    """Jitted scatter of a finished contiguous B=1 prefill cache into a
+    slot's pool blocks (and SSM state into its slot rows).
+
+    Prefill runs through the existing contiguous ``forward`` (one compiled
+    chunk shape) and lands here once per admission: positions ``0..plen-1``
+    scatter to ``block_row[p // bs] * bs + p % bs``; buffer rows at or beyond
+    ``plen`` (prompt padding) get the out-of-range sentinel ``nb * bs`` and
+    are dropped by the scatter.  ``slot`` / ``plen`` / ``block_row`` are
+    traced, so one compilation covers every admission.
+    """
+    nb, bs = num_blocks, block_size
+
+    def scatter_all(pool, scale_pool, vals, phys):
+        # pool (N, nb, bs, ...) / vals (N, Sp, ...): vmap over the stack axis
+        if kv_quant != "none":
+            def one(p, s, v):
+                return attention.paged_write(
+                    p, phys, v, scale_pool=s, kv_quant=kv_quant
+                )
+            return jax.vmap(one)(pool, scale_pool, vals)
+
+        def one(p, v):
+            return attention.paged_write(p, phys, v)[0]
+
+        return jax.vmap(one)(pool, vals), None
+
+    def phys_for(block_row, plen, sp):
+        pos = jnp.arange(sp, dtype=jnp.int32)
+        blk = block_row[jnp.minimum(pos // bs, block_row.shape[0] - 1)]
+        return jnp.where(pos < plen, blk * bs + pos % bs, nb * bs)
+
+    def import_attn(pool, prefill, names, block_row, plen):
+        out = {}
+        ph = phys_for(block_row, plen, prefill[names[0]].shape[2])
+        for nm in names:
+            data, scales = scatter_all(
+                pool[nm], pool.get(f"{nm}_scale"), prefill[nm][:, 0], ph
+            )
+            out[nm] = data
+            if kv_quant != "none":
+                out[f"{nm}_scale"] = scales
+        return out
+
+    def imp(pool_layers, prefill_layers, slot, plen, block_row):
+        if cfg.ssm_state:
+            out = dict(pool_layers)
+            out["conv"] = pool_layers["conv"].at[:, slot].set(
+                prefill_layers["conv"][:, 0].astype(pool_layers["conv"].dtype)
+            )
+            out["state"] = pool_layers["state"].at[:, slot].set(
+                prefill_layers["state"][:, 0]
+            )
+            if cfg.is_hybrid:
+                out["attn"] = import_attn(
+                    pool_layers["attn"], prefill_layers["attn"],
+                    ("k", "v"), block_row, plen,
+                )
+            return out
+        names = ("c_kv", "k_rope") if cfg.use_mla else ("k", "v")
+        return import_attn(pool_layers, prefill_layers, names, block_row, plen)
+
+    return imp

@@ -269,7 +269,7 @@ def test_sharding_walk_matches_param_structure():
     """param_shardings mirrors DipWeight nodes so device_put tree_maps in
     lockstep (single-device mesh here)."""
     from repro.configs.base import ArchConfig
-    from repro.distributed.sharding import make_policy
+    from repro.distributed.plan import make_plan
     from repro.models import transformer as tf_model
 
     cfg = ArchConfig(
@@ -278,7 +278,7 @@ def test_sharding_walk_matches_param_structure():
         compute_dtype="float32", matmul_backend="pallas_dip",
     )
     mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
-    policy = make_policy(mesh, cfg, "train")
+    policy = make_plan(mesh, cfg, "train")
     params = tf_model.init_params(KEY, cfg)
     shardings = policy.param_shardings(tf_model.param_template(cfg))
     placed = jax.tree_util.tree_map(jax.device_put, params, shardings)

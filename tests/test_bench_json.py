@@ -77,3 +77,66 @@ def test_validate_bench_json_rejects_schema_violations(tmp_path):
     }))
     with pytest.raises(ValueError, match="column-parallel recorded"):
         kernels_bench.validate_bench_json(bad)
+
+
+# ----------------------------------------------------- serving bench JSON ---
+serving_bench = pytest.importorskip("benchmarks.serving_bench")
+
+
+def test_committed_serving_baseline_validates():
+    """The committed BENCH_serving.json (the acceptance record: engine beats
+    the wave baseline on tok/s AND p99; int8 holds more than bf16) must stay
+    schema-valid."""
+    import pathlib
+    baseline = pathlib.Path(__file__).parent.parent / "BENCH_serving.json"
+    payload = serving_bench.validate_serving_json(baseline)
+    assert payload["engines"]["paged"]["tok_per_s"] > payload["engines"]["wave"]["tok_per_s"]
+    cap = payload["capacity"]
+    assert cap["int8_max_concurrent"] > cap["bf16_max_concurrent"]
+
+
+def _serving_payload(**over):
+    eng = {"tok_per_s": 50.0, "p50_latency_s": 0.1, "p99_latency_s": 0.5,
+           "total_tokens": 100, "decode_steps": 40, "wall_s": 2.0}
+    wave = dict(eng, tok_per_s=25.0, p99_latency_s=1.5, decode_steps=80)
+    payload = {
+        "schema_version": serving_bench.SERVING_SCHEMA_VERSION,
+        "arch": "llama3_8b", "slots": 4, "kv_quant": "none",
+        "workload": {"requests": 10, "arrival_rate_rps": 50.0,
+                     "max_new_range": [2, 16], "seed": 0},
+        "engines": {"paged": eng, "wave": wave},
+        "capacity": {"budget_bytes": 1 << 20, "block_size": 16, "seq_len": 64,
+                     "bf16_blocks": 32, "int8_blocks": 65,
+                     "bf16_max_concurrent": 8, "int8_max_concurrent": 16},
+    }
+    payload.update(over)
+    return payload
+
+
+def test_validate_serving_json_rejects_violations(tmp_path):
+    bad = tmp_path / "bad.json"
+
+    def check(match, **over):
+        bad.write_text(json.dumps(_serving_payload(**over)))
+        with pytest.raises(ValueError, match=match):
+            serving_bench.validate_serving_json(bad)
+
+    ok = tmp_path / "ok.json"
+    ok.write_text(json.dumps(_serving_payload()))
+    serving_bench.validate_serving_json(ok)         # the fixture itself passes
+
+    check("schema_version", schema_version=999)
+    check("both 'paged' and 'wave'", engines={"paged": {}})
+    p = _serving_payload()["engines"]
+    # losing either axis is a schema violation, not just a slow run
+    check("tok/s", engines={"paged": dict(p["paged"], tok_per_s=10.0),
+                            "wave": p["wave"]})
+    check("p99", engines={"paged": dict(p["paged"], p99_latency_s=2.0),
+                          "wave": p["wave"]})
+    c = _serving_payload()["capacity"]
+    check("strictly more blocks", capacity=dict(c, int8_blocks=32))
+    check("concurrent", capacity=dict(c, int8_max_concurrent=8))
+    # missing percentile keys
+    check("p99_latency_s", engines={
+        "paged": {k: v for k, v in p["paged"].items() if k != "p99_latency_s"},
+        "wave": p["wave"]})
