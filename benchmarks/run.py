@@ -10,7 +10,10 @@ from __future__ import annotations
 
 import argparse
 
-from benchmarks import fig5_analytical, fig6_workloads, kernels_bench, table1_2_dse, table4_comparison
+from benchmarks import (
+    fig5_analytical, fig6_workloads, fleet, kernels_bench, roofline_report,
+    serving_bench, table1_2_dse, table4_comparison,
+)
 
 MODULES = {
     "fig5": fig5_analytical,
@@ -18,6 +21,9 @@ MODULES = {
     "fig6": fig6_workloads,
     "table4": table4_comparison,
     "kernels": kernels_bench,
+    "serving": serving_bench,
+    "roofline": roofline_report,
+    "fleet": fleet,
 }
 
 

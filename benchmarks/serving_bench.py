@@ -308,5 +308,27 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     return 0
 
 
+def run(csv_rows) -> None:
+    """benchmarks.run harness contract: tiny smoke into a temp file (the
+    committed BENCH_serving.json is refreshed explicitly, not by the
+    harness), schema-validated, throughput/latency appended as CSV rows."""
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as td:
+        out = pathlib.Path(td) / "BENCH_serving.json"
+        rc = main(["--tiny", "--out", str(out)])
+        if rc != 0:
+            raise RuntimeError("serving bench returned nonzero")
+        with open(out) as f:
+            payload = json.load(f)
+    for kind in ("paged", "wave"):
+        rec = payload["engines"][kind]
+        csv_rows.append((
+            f"serving_{payload['arch']}_{kind}",
+            float(rec["p50_latency_s"]) * 1e6,
+            f"tok_per_s={rec['tok_per_s']};decode_steps={rec['decode_steps']}",
+        ))
+
+
 if __name__ == "__main__":
     raise SystemExit(main())

@@ -11,11 +11,11 @@ training/prefill, the slot count for decode).
 
 from __future__ import annotations
 
-from typing import List, NamedTuple, Tuple
+from typing import Dict, List, NamedTuple, Tuple
 
 from repro.configs.base import ArchConfig
 
-__all__ = ["MatmulShape", "linear_dims", "matmul_shapes"]
+__all__ = ["MatmulShape", "linear_dims", "matmul_shapes", "stage_matmul_shapes"]
 
 
 class MatmulShape(NamedTuple):
@@ -92,3 +92,21 @@ def matmul_shapes(cfg: ArchConfig, *, tokens: int = 256) -> List[MatmulShape]:
         seen.add(key)
         out.append(MatmulShape(name, tokens, d_in, d_out))
     return out
+
+
+def stage_matmul_shapes(
+    cfg: ArchConfig, *, train_tokens: int, prefill_tokens: int, decode_slots: int
+) -> Dict[str, List[MatmulShape]]:
+    """The per-stage matmul workload matrix of one fleet cell.
+
+    A train step and a prefill chunk dispatch ``batch * seq`` rows per
+    projection; a paged decode step dispatches one row per slot.  The fleet
+    driver (``benchmarks/fleet.py``) records these under each cell so the
+    BENCH_fleet.json baseline documents *which problems* a cell timed — the
+    same (m, k, n) set the autotuner would measure for that stage.
+    """
+    return {
+        "train": matmul_shapes(cfg, tokens=train_tokens),
+        "prefill": matmul_shapes(cfg, tokens=prefill_tokens),
+        "decode": matmul_shapes(cfg, tokens=decode_slots),
+    }

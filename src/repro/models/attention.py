@@ -27,8 +27,13 @@ _id: Constrain = lambda x, tag: x
 
 
 def _natural(w):
-    """Natural-layout view of a weight (de-shears an ``api.DipWeight``)."""
-    return w.to_natural() if isinstance(w, api.DipWeight) else w
+    """Natural-layout view of a weight (de-shears an ``api.DipWeight``;
+    dequantizes an ``api.QuantizedDipWeight`` first — MLA's absorbed form
+    contracts these per-head, so the permutated/quantized storage cannot be
+    consumed directly)."""
+    if isinstance(w, (api.DipWeight, api.QuantizedDipWeight)):
+        return w.to_natural()
+    return w
 
 __all__ = [
     "attention_core",

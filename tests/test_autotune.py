@@ -363,27 +363,50 @@ def test_autotune_shape_quantized_backend_end_to_end(clean_table):
 
 
 # --------------------------------------------------------- config shapes ----
-def test_matmul_shapes_match_param_template_dip_metadata():
-    """Every DipWeight the model materializes must be covered by the shape
-    extractor the autotuner uses (else --autotune tunes the wrong problems)."""
+from repro.configs import ALL_ARCHS
+
+
+def _template_pairs(template):
+    """(d_in, d_out) problems the template materializes: DiP metadata where
+    present, else the trailing two dims of any rank>=2 plain weight (the MoE
+    router and stacked expert tensors carry no dip meta but are matmuls)."""
+    dip, plain = set(), set()
+
+    def walk(node, name=None):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                walk(v, k)
+            return
+        if len(node) == 4 and node[3] is not None:  # (shape, dtype, fan, dip)
+            d_in, d_out, _ = node[3]
+            dip.add((d_in, d_out))
+        elif len(node[0]) >= 2 and name not in ("embed", "conv_w"):
+            plain.add(tuple(node[0][-2:]))
+
+    walk(template)
+    return dip, plain
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_matmul_shapes_match_param_template(name):
+    """shapes.py and param_template describe the SAME workload matrix, both
+    directions, for every zoo config at full dims:
+
+    * every DipWeight the model materializes is covered by the shape
+      extractor (else --autotune tunes the wrong problems);
+    * every shape the extractor enumerates exists as a template weight
+      (else the autotuner/fleet measures problems no model dispatches).
+    """
     from repro.models.transformer import param_template
 
-    for name in ("llama3_8b", "deepseek_v2_lite_16b", "mamba2_370m", "zamba2_2_7b"):
-        cfg = dataclasses.replace(
-            get_config(name).reduced(), matmul_backend="pallas_dip"
-        )
-        covered = {(s.k, s.n) for s in matmul_shapes(cfg, tokens=32)}
+    cfg = dataclasses.replace(get_config(name), matmul_backend="pallas_dip")
+    enumerated = {(s.k, s.n) for s in matmul_shapes(cfg, tokens=32)}
+    dip, plain = _template_pairs(param_template(cfg))
 
-        def walk(node):
-            if isinstance(node, dict):
-                for v in node.values():
-                    walk(v)
-                return
-            if len(node) == 4 and node[3] is not None:  # (shape, dtype, fan, dip)
-                d_in, d_out, _ = node[3]
-                assert (d_in, d_out) in covered, (name, d_in, d_out)
-
-        walk(param_template(cfg))
+    missing = {p for p in dip if p not in enumerated}
+    assert not missing, f"{name}: template DiP weights absent from shapes: {missing}"
+    phantom = {p for p in enumerated if p not in dip | plain}
+    assert not phantom, f"{name}: shapes not materialized by template: {phantom}"
 
 
 def test_matmul_shapes_dedupes_and_validates_tokens():

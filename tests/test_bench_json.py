@@ -140,3 +140,30 @@ def test_validate_serving_json_rejects_violations(tmp_path):
     check("p99_latency_s", engines={
         "paged": {k: v for k, v in p["paged"].items() if k != "p99_latency_s"},
         "wave": p["wave"]})
+
+
+# ------------------------------------------------------- fleet bench JSON ---
+fleet = pytest.importorskip("benchmarks.fleet")
+
+
+def test_committed_fleet_baseline_validates():
+    """The committed BENCH_fleet.json is the standing regression net: it must
+    stay schema-valid, cover every zoo config with all three stages passing
+    in at least one cell (the acceptance headline), honour the dip_tp /
+    dip_fsdp placement contracts, and self-diff clean (so the CI fleet job's
+    diff logic cannot reject the baseline itself)."""
+    import pathlib
+
+    from repro.configs import ALL_ARCHS
+
+    path = pathlib.Path(__file__).parent.parent / "BENCH_fleet.json"
+    with open(path) as f:
+        payload = json.load(f)
+    fleet.validate_fleet_json(payload)
+    assert payload["matrix"] == "tiny"
+    archs = {c["arch"] for c in payload["cells"]}
+    assert archs == set(ALL_ARCHS), f"baseline missing archs: {set(ALL_ARCHS) - archs}"
+    # the sharded columns are present with their probes
+    effs = {c["effective_backend"] for c in payload["cells"]}
+    assert {"dip_tp", "dip_fsdp"} <= effs
+    fleet.diff_fleet_json(payload, payload)

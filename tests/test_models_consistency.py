@@ -128,3 +128,29 @@ def test_microbatched_train_step_matches_full_batch():
         lambda a, b: float(jnp.max(jnp.abs(a - b))), s_full["params"], s_micro["params"]
     )
     assert max(jax.tree_util.tree_leaves(diffs)) < 2e-3
+
+
+def test_quantized_mla_matches_float_within_quant_error():
+    """MLA's absorbed form contracts w_uk/w_uv per-head, so attention must
+    de-shear (and dequantize) them before use — an int8 deepseek-family
+    forward has to track the float forward within the rounding budget.
+    Regression guard for the QuantizedDipWeight path in attention._natural
+    (surfaced by the fleet sweep: deepseek_v2 x dip_int8w decode)."""
+    from repro.configs import get_config
+
+    cfg = dataclasses.replace(
+        get_config("deepseek_v2_lite_16b").reduced(), compute_dtype="float32")
+    params = tf_model.init_params(KEY, cfg)
+    toks = jax.random.randint(KEY, (2, 12), 0, cfg.vocab_size)
+    lf, _, _ = tf_model.forward(params, cfg, tokens=toks)
+
+    qcfg = dataclasses.replace(cfg, quantization="int8",
+                               matmul_backend="dip_int8w")
+    qparams = tf_model.quantize_params(params, "int8")
+    lq, _, _ = tf_model.forward(qparams, qcfg, tokens=toks)
+    assert np.isfinite(np.asarray(lq)).all()
+    # int8 rounding, not garbage: logits stay close and rank the same tokens
+    err = np.abs(np.asarray(lq) - np.asarray(lf)).max()
+    assert err < 0.5, f"quantized MLA diverged from float: max|dlogit|={err}"
+    agree = (np.asarray(lq).argmax(-1) == np.asarray(lf).argmax(-1)).mean()
+    assert agree > 0.9

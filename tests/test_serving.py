@@ -34,7 +34,10 @@ from repro.serving import (
 )
 from repro.serving import sampling
 
-FAMILIES = ["llama3_8b", "deepseek_v2_lite_16b", "mamba2_370m", "zamba2_2_7b"]
+# Every zoo config: the four layout families (GQA, MLA+MoE, pure-SSM,
+# hybrid) plus the previously-untested members — packed-vs-solo equivalence
+# is the fleet's correctness floor, so the whole zoo rides through it.
+from repro.configs import ALL_ARCHS as FAMILIES
 
 
 def _params(cfg, seed=0):
