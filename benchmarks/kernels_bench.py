@@ -185,6 +185,209 @@ def compare_epilogues(
 
 
 # ---------------------------------------------------------------------------
+# fused-vs-unfused prologue comparison (the load-stage mirror of the above)
+def compare_prologues(
+    *,
+    backend: str = "pallas_dip",
+    m: int = 64,
+    k: int = 256,
+    n: int = 256,
+    iters: int = 3,
+    interpret: Optional[bool] = None,
+    verbose: bool = True,
+) -> dict:
+    """Time the fused rmsnorm prologue against its decomposed form (the
+    rms_norm -> matmul composition every block ran before this subsystem)
+    and count kernel launches for both.  Parity is asserted alongside the
+    timings.  Recorded under ``prologue_compare`` in BENCH_kernels.json."""
+    from repro.kernels import prologue as prologue_lib
+
+    if interpret is None:
+        interpret = api.default_interpret()
+    r = np.random.default_rng(0)
+    x = jnp.asarray(r.normal(0, 1, (m, k)).astype(np.float32))
+    wn = jnp.asarray(r.normal(0, 1, (k, n)).astype(np.float32))
+    g = jnp.asarray(r.normal(1, 0.1, (k,)).astype(np.float32))
+    bias = jnp.asarray(r.normal(0, 1, (n,)).astype(np.float32))
+
+    be = api.get_backend(backend)
+    if be.layout == "dip_q":
+        w = api.quant.quantize(wn, be.scheme)
+    elif be.layout == "dip":
+        w = api.DipWeight.from_natural(wn)
+    else:
+        w = wn
+
+    # with and without a fused epilogue riding the same launch: the second
+    # row is the full per-projection story (norm + matmul + bias_silu, ONE
+    # kernel where the unfused path pays three HBM round-trips)
+    cases = [("rmsnorm", "none", ()), ("rmsnorm", "bias_silu", (bias,))]
+    results = []
+    for prologue, epilogue, eops in cases:
+        fused = jax.jit(lambda _e=epilogue, _o=eops: api.matmul(
+            x, w, backend=backend, prologue="rmsnorm", prologue_operands=(g,),
+            epilogue=_e, epilogue_operands=_o, interpret=interpret,
+        ))
+
+        def unfused(_e=epilogue, _o=eops):
+            xn = prologue_lib.apply("rmsnorm", x, g)  # separate norm pass
+            z = api.matmul(xn, w, backend=backend, interpret=interpret)
+            if _e == "none":
+                return z
+            return jax.nn.silu(z.astype(jnp.float32) + _o[0]).astype(z.dtype)
+
+        unfused = jax.jit(unfused)
+        got, want = fused(), unfused()
+        np.testing.assert_allclose(   # parity rides with the timing
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            atol=2e-3, rtol=2e-3,
+        )
+        t_fused = _time(fused, iters=iters)
+        t_unfused = _time(unfused, iters=iters)
+        n_fused = count_pallas_calls(fused)
+        n_unfused = count_pallas_calls(unfused)
+        label = prologue if epilogue == "none" else f"{prologue}+{epilogue}"
+        rec = {
+            "prologue": prologue,
+            "epilogue": epilogue,
+            "fused_us": round(t_fused, 1),
+            "unfused_us": round(t_unfused, 1),
+            "speedup": round(t_unfused / t_fused, 3),
+            "fused_pallas_calls": n_fused,
+            "unfused_pallas_calls": n_unfused,
+        }
+        results.append(rec)
+        if verbose:
+            print(f"  {label:>18}: fused {t_fused:9.1f} us "
+                  f"({n_fused} kernel launch) vs unfused {t_unfused:9.1f} us "
+                  f"({n_unfused} launch(es) + norm pass) -> {rec['speedup']:.2f}x")
+    if be.tiled:
+        for rec in results:
+            assert rec["fused_pallas_calls"] == 1, (
+                f"fused prologue dispatch must be ONE kernel launch, traced "
+                f"{rec['fused_pallas_calls']} ({rec['epilogue']})"
+            )
+    return {
+        "backend": backend,
+        "shape": [m, k, n],
+        "mode": "interpret" if interpret else "compiled",
+        "results": results,
+    }
+
+
+# ---------------------------------------------------------------------------
+# fused lm_head+CE and flash-attention structural smoke
+def fused_upstream_smoke(
+    *,
+    t_tokens: int = 96,
+    d_model: int = 64,
+    vocab: int = 512,
+    iters: int = 3,
+    interpret: Optional[bool] = None,
+    verbose: bool = True,
+) -> dict:
+    """Structural evidence for the two fused losses of the upstream story:
+
+    * fused lm_head+CE — ONE pallas launch forward, and NO logits-sized
+      ((rows >= T) x (cols >= V)) intermediate anywhere in the loss+grad
+      jaxpr (the unfused oracle has one — asserted as the control);
+    * flash attention through the registry — ONE pallas launch vs zero for
+      the dense xla oracle, parity asserted.
+
+    Recorded under ``fused_upstream`` in BENCH_kernels.json.
+    """
+    from repro.kernels import lm_head_ce
+    from repro.kernels.flash_attention import flash_attention_pallas  # noqa: F401
+
+    if interpret is None:
+        interpret = api.default_interpret()
+    r = np.random.default_rng(0)
+    tt, d, v = t_tokens, d_model, vocab
+    assert tt > d, "T must exceed d_model so dW cannot alias the predicate"
+    x = jnp.asarray(r.normal(0, 1, (tt, d)).astype(np.float32))
+    w = jnp.asarray(r.normal(0, 1, (d, v)).astype(np.float32))
+    labels = jnp.asarray(r.integers(0, v, (tt,)).astype(np.int32))
+
+    def fused_loss(xx, ww):
+        return lm_head_ce.fused_cross_entropy_loss(
+            xx, ww, labels, vocab_size=v, block_v=128, interpret=interpret)
+
+    def unfused_loss(xx, ww):
+        return lm_head_ce.reference_lm_head_ce(xx, ww, labels, vocab_size=v)
+
+    got, want = float(fused_loss(x, w)), float(unfused_loss(x, w))
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+    def logits_like(closed):
+        hits = []
+
+        def walk(jx):
+            for eqn in jx.eqns:
+                for var in eqn.outvars:
+                    shape = getattr(getattr(var, "aval", None), "shape", ())
+                    if (len(shape) >= 2 and shape[-1] >= v
+                            and int(np.prod(shape[:-1])) >= tt):
+                        hits.append(tuple(shape))
+                for sub in jax.core.jaxprs_in_params(eqn.params):
+                    walk(sub)
+
+        walk(closed.jaxpr)
+        return hits
+
+    grad_fused = jax.make_jaxpr(jax.grad(fused_loss, argnums=(0, 1)))(x, w)
+    grad_unfused = jax.make_jaxpr(jax.grad(unfused_loss, argnums=(0, 1)))(x, w)
+    ce_logits_free = not logits_like(grad_fused)
+    assert ce_logits_free, "fused CE materialized a logits-sized tensor"
+    assert logits_like(grad_unfused), "control: oracle should materialize logits"
+    ce_launches = count_pallas_calls(lambda a, b: fused_loss(a, b), x, w)
+    assert ce_launches == 1, f"fused CE forward traced {ce_launches} launches"
+    jit_f, jit_u = jax.jit(fused_loss), jax.jit(unfused_loss)
+    t_f = _time(jit_f, x, w, iters=iters)
+    t_u = _time(jit_u, x, w, iters=iters)
+    ce = {
+        "shape": [tt, d, v],
+        "fused_us": round(t_f, 1),
+        "unfused_us": round(t_u, 1),
+        "pallas_calls": ce_launches,
+        "logits_free_grad": bool(ce_logits_free),
+    }
+    if verbose:
+        print(f"  fused lm_head+CE {tt}x{d}x{v}: {t_f:9.1f} us "
+              f"({ce_launches} launch, logits-free grad) vs unfused "
+              f"{t_u:9.1f} us")
+
+    bh, sq, sk, hd = 4, 64, 64, 32
+    q = jnp.asarray(r.normal(0, 1, (bh, sq, hd)).astype(np.float32))
+    kk = jnp.asarray(r.normal(0, 1, (bh, sk, hd)).astype(np.float32))
+    vv = jnp.asarray(r.normal(0, 1, (bh, sk, hd)).astype(np.float32))
+    flash = jax.jit(lambda a, b, c: api.attention(
+        a, b, c, backend="flash", block_q=32, block_k=32, interpret=interpret))
+    dense = jax.jit(lambda a, b, c: api.attention(a, b, c, backend="xla"))
+    np.testing.assert_allclose(
+        np.asarray(flash(q, kk, vv)), np.asarray(dense(q, kk, vv)),
+        atol=2e-3, rtol=2e-3,
+    )
+    fl_launches = count_pallas_calls(flash, q, kk, vv)
+    assert fl_launches == 1, f"flash dispatch traced {fl_launches} launches"
+    t_fl = _time(flash, q, kk, vv, iters=iters)
+    t_dn = _time(dense, q, kk, vv, iters=iters)
+    fa = {
+        "shape": [bh, sq, sk, hd],
+        "flash_us": round(t_fl, 1),
+        "xla_us": round(t_dn, 1),
+        "pallas_calls": fl_launches,
+    }
+    if verbose:
+        print(f"  flash attention {bh}x{sq}x{sk}x{hd}: {t_fl:9.1f} us "
+              f"({fl_launches} launch) vs dense xla {t_dn:9.1f} us")
+    return {
+        "mode": "interpret" if interpret else "compiled",
+        "lm_head_ce": ce,
+        "flash_attention": fa,
+    }
+
+
+# ---------------------------------------------------------------------------
 # explicit-sharding comparison (dip_tp vs GSPMD-xla on virtual devices)
 def compare_sharded(
     *,
@@ -316,7 +519,9 @@ def _reexec_with_devices(argv: Sequence[str], devices: int) -> int:
 # ---------------------------------------------------------------------------
 # machine-readable output
 def write_bench_json(path, csv_rows, epilogue_compare: Optional[dict],
-                     sharded_compare: Optional[dict] = None) -> pathlib.Path:
+                     sharded_compare: Optional[dict] = None,
+                     prologue_compare: Optional[dict] = None,
+                     fused_upstream: Optional[dict] = None) -> pathlib.Path:
     p = pathlib.Path(path)
     payload = {
         "schema_version": BENCH_SCHEMA_VERSION,
@@ -331,6 +536,10 @@ def write_bench_json(path, csv_rows, epilogue_compare: Optional[dict],
         payload["epilogue_compare"] = epilogue_compare
     if sharded_compare is not None:
         payload["sharded_compare"] = sharded_compare
+    if prologue_compare is not None:
+        payload["prologue_compare"] = prologue_compare
+    if fused_upstream is not None:
+        payload["fused_upstream"] = fused_upstream
     p.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
     return p
 
@@ -365,6 +574,39 @@ def validate_bench_json(path) -> dict:
         need(bool(swiglu), "epilogue_compare must include the swiglu headline")
         need(swiglu[0]["fused_pallas_calls"] <= 1,
              "fused swiglu recorded more than one kernel launch")
+    if "prologue_compare" in payload:
+        pc = payload["prologue_compare"]
+        need(isinstance(pc.get("backend"), str), "prologue_compare.backend")
+        need(isinstance(pc.get("shape"), list) and len(pc["shape"]) == 3,
+             "prologue_compare.shape must be [m, k, n]")
+        need(isinstance(pc.get("results"), list) and pc["results"],
+             "prologue_compare.results empty")
+        for rec in pc["results"]:
+            for key in ("prologue", "epilogue", "fused_us", "unfused_us",
+                        "speedup", "fused_pallas_calls", "unfused_pallas_calls"):
+                need(key in rec, f"prologue_compare result missing {key!r}")
+            # the structural contract IS the schema: norm + matmul (+ any
+            # epilogue) must stay ONE launch on the fused backends
+            need(rec["fused_pallas_calls"] <= 1,
+                 "fused prologue recorded more than one kernel launch")
+    if "fused_upstream" in payload:
+        fu = payload["fused_upstream"]
+        need(isinstance(fu.get("lm_head_ce"), dict), "fused_upstream.lm_head_ce")
+        need(isinstance(fu.get("flash_attention"), dict),
+             "fused_upstream.flash_attention")
+        ce = fu["lm_head_ce"]
+        for key in ("shape", "fused_us", "unfused_us", "pallas_calls",
+                    "logits_free_grad"):
+            need(key in ce, f"fused_upstream.lm_head_ce missing {key!r}")
+        need(ce["pallas_calls"] == 1,
+             "fused lm_head+CE must be exactly one kernel launch")
+        need(ce["logits_free_grad"] is True,
+             "fused lm_head+CE grad materialized logits-sized tensors")
+        fa = fu["flash_attention"]
+        for key in ("shape", "flash_us", "xla_us", "pallas_calls"):
+            need(key in fa, f"fused_upstream.flash_attention missing {key!r}")
+        need(fa["pallas_calls"] == 1,
+             "flash attention dispatch must be exactly one kernel launch")
     if "sharded_compare" in payload:
         sc = payload["sharded_compare"]
         need(isinstance(sc.get("mesh_axes"), dict) and sc["mesh_axes"],
@@ -496,13 +738,32 @@ def run(csv_rows, *, out_json=DEFAULT_JSON):
                          f"vs_unfused_{rec['speedup']:.2f}x_"
                          f"launches_{rec['fused_pallas_calls']}v{rec['unfused_pallas_calls']}"))
 
+    # fused-vs-unfused prologue deltas (the load-stage fusion subsystem)
+    print("fused-vs-unfused rmsnorm prologue (pallas_dip 64x256x256, interpret):")
+    pc = compare_prologues(backend="pallas_dip", m=64, k=256, n=256, iters=2)
+    for rec in pc["results"]:
+        label = (rec["prologue"] if rec["epilogue"] == "none"
+                 else f"{rec['prologue']}_{rec['epilogue']}")
+        csv_rows.append((f"kern_prologue_{label}_fused", rec["fused_us"],
+                         f"vs_unfused_{rec['speedup']:.2f}x_"
+                         f"launches_{rec['fused_pallas_calls']}v{rec['unfused_pallas_calls']}"))
+
+    # fused lm_head+CE and flash-attention structural smoke
+    print("fused upstream smoke (lm_head+CE, flash attention; interpret):")
+    fu = fused_upstream_smoke(iters=2)
+    csv_rows.append(("kern_fused_ce", fu["lm_head_ce"]["fused_us"],
+                     f"vs_unfused_{fu['lm_head_ce']['unfused_us']}us_logits_free"))
+    csv_rows.append(("kern_flash_attention", fu["flash_attention"]["flash_us"],
+                     f"vs_xla_{fu['flash_attention']['xla_us']}us_1launch"))
+
     csv_rows.append(("kern_xla_plain_matmul", t_plain, f"{2*m*k*n/ (t_plain*1e-6) /1e9:.1f}GFLOP/s"))
     csv_rows.append(("kern_xla_dip_storage", t_dip_xla, f"overhead_{overhead:+.1f}%"))
     csv_rows.append(("kern_pallas_interpret", t_pallas, "interpret_mode"))
     csv_rows.append(("kern_pallas_int8w_interpret", t_q_pallas, "interpret_mode"))
     csv_rows.append(("kern_autotune_best", t_best, f"tuned_vs_incumbent_{speedup:.2f}x"))
 
-    path = write_bench_json(out_json, csv_rows[first_own_row:], ec)
+    path = write_bench_json(out_json, csv_rows[first_own_row:], ec,
+                            prologue_compare=pc, fused_upstream=fu)
     validate_bench_json(path)
     print(f"machine-readable record: {path}")
 
@@ -522,6 +783,10 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                          "topology is single-device")
     ap.add_argument("--devices", type=int, default=8,
                     help="virtual device count for --sharded (default 8)")
+    ap.add_argument("--upstream", action="store_true",
+                    help="run ONLY the upstream-fusion smoke: rmsnorm-"
+                         "prologue compare + fused lm_head+CE + flash "
+                         "attention (CI bench-smoke)")
     ap.add_argument("--backend", default="pallas_dip",
                     help="backend for --compare-epilogues (default pallas_dip)")
     ap.add_argument("--tiny", action="store_true",
@@ -551,6 +816,27 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                 f"_ag{rec['all_gathers']}_launch{rec['pallas_calls']}",
             ))
         path = write_bench_json(args.out, csv_rows, None, sc)
+        validate_bench_json(path)
+        print(f"machine-readable record: {path}")
+        return 0
+    if args.upstream:
+        m, k, n = (32, 64, 64) if args.tiny else (64, 256, 256)
+        print(f"== fused-vs-unfused rmsnorm prologue ({args.backend} {m}x{k}x{n}) ==")
+        pc = compare_prologues(backend=args.backend, m=m, k=k, n=n,
+                               iters=args.iters)
+        print("== fused upstream smoke (lm_head+CE, flash attention) ==")
+        fu = fused_upstream_smoke(iters=args.iters)
+        for rec in pc["results"]:
+            label = (rec["prologue"] if rec["epilogue"] == "none"
+                     else f"{rec['prologue']}_{rec['epilogue']}")
+            csv_rows.append((f"kern_prologue_{label}_fused", rec["fused_us"],
+                             f"vs_unfused_{rec['speedup']:.2f}x"))
+        csv_rows.append(("kern_fused_ce", fu["lm_head_ce"]["fused_us"],
+                         "logits_free"))
+        csv_rows.append(("kern_flash_attention", fu["flash_attention"]["flash_us"],
+                         "1launch"))
+        path = write_bench_json(args.out, csv_rows, None,
+                                prologue_compare=pc, fused_upstream=fu)
         validate_bench_json(path)
         print(f"machine-readable record: {path}")
         return 0

@@ -1,4 +1,4 @@
-"""Render the EXPERIMENTS.md §Dry-run / §Roofline tables from dry-run JSONL.
+"""Render the docs/benchmarks.md §Dry-run / §Roofline tables from dry-run JSONL.
 
     PYTHONPATH=src python -m benchmarks.roofline_report results/*.jsonl
 
@@ -90,7 +90,7 @@ def run(csv_rows) -> None:
     rows = load_rows(["results/*.jsonl"])
     if not rows:
         print("roofline_report: no results/*.jsonl in this checkout; run "
-              "the dry-run launcher first (see EXPERIMENTS.md)")
+              "the dry-run launcher first (see docs/benchmarks.md)")
         return
     main([])
     n_ok = sum(1 for r in rows.values() if r.get("status") == "ok")

@@ -21,6 +21,14 @@ Two first-class concepts (see ``docs/api.md``):
   residual into the kernels' accumulator flush where the backend supports
   it and decomposes (same semantics, unfused) where it does not — see
   ``docs/api.md`` §Fused epilogues and ``kernels/epilogue.py``.
+  ``matmul(..., prologue="rmsnorm")`` mirrors that on the load stage:
+  the RMSNorm of x folds into the kernels' x-block load (one pallas
+  launch for norm + matmul + epilogue) — see ``docs/api.md`` §Fused
+  prologues and ``kernels/prologue.py``.
+* the attention-backend registry — ``attention(q, k, v, backend=...)``
+  dispatches flash attention (``kernels/flash_attention.py``) or the dense
+  ``xla`` oracle behind one flat-layout contract with per-row traced
+  ``q_offset``/``kv_len`` — see ``docs/api.md`` §The attention registry.
 
 The tuning table is self-optimizing: ``repro.api.autotune`` (a module-level
 CLI, not imported here to keep this package light) measures candidate block
@@ -31,9 +39,11 @@ that ``repro.api.tuning`` reloads on first lookup — see ``docs/tuning.md``.
 from repro.api.registry import (
     DEFAULT_BACKEND,
     EPILOGUES,
+    PROLOGUES,
     MatmulBackend,
     backend_epilogues,
     backend_layout,
+    backend_prologues,
     default_interpret,
     get_backend,
     list_backends,
@@ -47,6 +57,14 @@ from repro.api.tuning import (
     register_measured,
     register_tuning,
 )
+from repro.api.attention import (
+    DEFAULT_ATTENTION_BACKEND,
+    AttentionBackend,
+    attention,
+    get_attention_backend,
+    list_attention_backends,
+    register_attention_backend,
+)
 from repro.api import quant
 from repro.api.quant import QuantizedDipWeight
 from repro.api.weights import PERM_TILE, DipWeight, as_dip_weight
@@ -59,14 +77,22 @@ __all__ = [
     "quant",
     "QuantizedDipWeight",
     "EPILOGUES",
+    "PROLOGUES",
     "MatmulBackend",
     "register_backend",
     "get_backend",
     "list_backends",
     "backend_layout",
     "backend_epilogues",
+    "backend_prologues",
     "matmul",
     "default_interpret",
+    "AttentionBackend",
+    "DEFAULT_ATTENTION_BACKEND",
+    "attention",
+    "register_attention_backend",
+    "get_attention_backend",
+    "list_attention_backends",
     "BlockConfig",
     "register_tuning",
     "register_measured",

@@ -1,0 +1,175 @@
+"""Attention-backend registry: named, pluggable fused-attention kernels.
+
+The matmul registry's pattern applied one level up: ``attention(q, k, v,
+backend=...)`` dispatches to a registered implementation with block sizes
+drawn from the same per-shape tuning table the matmul backends use (backend
+key ``"flash"``: ``block_m`` -> block_q, ``block_n`` -> block_k), so
+autotuned winners persist and reload exactly like matmul geometries.
+
+Layout contract (flat, kernel-shaped): ``q (BH, Sq, D)``, ``k (BH, Sk,
+D)``, ``v (BH, Sk, Dv)`` -> ``(BH, Sq, Dv)``; GQA head broadcasting and
+the (B, S, H, D) <-> (BH, S, D) moves belong to the model adapter
+(``models.attention.attention_core``).  ``q_offset`` (None | int | (BH,))
+gives each row's absolute key position of query 0 — the serving
+chunked-prefill shape — and ``kv_len`` bounds the live keys per row.  Both
+may be traced (one compile serves every prefill offset).
+
+Builtins:
+
+    flash   Pallas fused kernel (kernels/flash_attention.py): online
+            softmax in VMEM, causal block skipping.  Forward-only.
+    xla     dense reference: materializes the (BH, Sq, Sk) scores.  The
+            conformance oracle, and the decompose target anywhere the
+            fused kernel is unsupported.
+
+Rows that end up fully masked (q_offset places every key in the future, or
+kv_len == 0) return exactly 0, on every backend.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.api import tuning
+from repro.api.registry import default_interpret
+from repro.kernels.flash_attention import flash_attention_pallas
+
+__all__ = [
+    "AttentionBackend",
+    "DEFAULT_ATTENTION_BACKEND",
+    "attention",
+    "get_attention_backend",
+    "list_attention_backends",
+    "register_attention_backend",
+]
+
+NEG_INF = -1e30
+DEFAULT_ATTENTION_BACKEND = "flash"
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionBackend:
+    """One registered attention implementation.
+
+    ``fn(q, k, v, *, causal, q_offset, kv_len, scale, block_q, block_k,
+    interpret)`` with the flat layout above; block sizes arrive resolved
+    (never None) and ``interpret`` resolved to a bool.
+    """
+
+    name: str
+    fn: Callable
+    description: str = ""
+
+
+_REGISTRY: Dict[str, AttentionBackend] = {}
+
+
+def register_attention_backend(
+    name: str, fn: Callable, *, description: str = "", overwrite: bool = False
+) -> AttentionBackend:
+    if not overwrite and name in _REGISTRY:
+        raise ValueError(f"attention backend {name!r} already registered")
+    be = AttentionBackend(name=name, fn=fn, description=description)
+    _REGISTRY[name] = be
+    return be
+
+
+def get_attention_backend(name: str) -> AttentionBackend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown attention backend {name!r}; registered: "
+            f"{sorted(_REGISTRY)}"
+        ) from None
+
+
+def list_attention_backends():
+    return sorted(_REGISTRY)
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    backend: Optional[str] = None,
+    causal: bool = True,
+    q_offset=None,
+    kv_len=None,
+    scale: Optional[float] = None,
+    block_q: Optional[int] = None,
+    block_k: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Dispatch one attention call to a registered backend.
+
+    Block sizes resolve caller-override -> tuning table -> heuristic, same
+    precedence as ``api.matmul``; ``interpret=None`` follows
+    :func:`repro.api.default_interpret`.
+    """
+    be = get_attention_backend(backend or DEFAULT_ATTENTION_BACKEND)
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    if block_q is None or block_k is None:
+        blocks = tuning.lookup_blocks(be.name, sq, d, sk, q.dtype)
+        block_q = block_q if block_q is not None else blocks.block_m
+        block_k = block_k if block_k is not None else blocks.block_n
+    if interpret is None:
+        interpret = default_interpret()
+    return be.fn(
+        q, k, v, causal=causal, q_offset=q_offset, kv_len=kv_len,
+        scale=scale, block_q=int(block_q), block_k=int(block_k),
+        interpret=bool(interpret),
+    )
+
+
+# ----------------------------------------------------------------- builtins --
+def _flash_fn(q, k, v, *, causal, q_offset, kv_len, scale, block_q, block_k,
+              interpret):
+    return flash_attention_pallas(
+        q, k, v, q_offset=q_offset, kv_len=kv_len, causal=causal,
+        scale=scale, block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+
+
+def _xla_fn(q, k, v, *, causal, q_offset, kv_len, scale, block_q, block_k,
+            interpret):
+    del block_q, block_k, interpret  # dense path: no tiling
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    scale = d ** -0.5 if scale is None else scale
+    s = jnp.einsum(
+        "bqd,bkd->bqk", q.astype(jnp.float32) * scale, k.astype(jnp.float32)
+    )
+    k_pos = jnp.arange(sk, dtype=jnp.int32)[None, None, :]
+    kvl = jnp.asarray(sk if kv_len is None else kv_len, jnp.int32)
+    live = k_pos < kvl.reshape(-1, 1, 1)
+    if causal:
+        qo = jnp.asarray(0 if q_offset is None else q_offset, jnp.int32)
+        q_pos = qo.reshape(-1, 1, 1) + jnp.arange(sq, dtype=jnp.int32)[None, :, None]
+        live = jnp.logical_and(live, q_pos >= k_pos)
+    s = jnp.where(live, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # fully-masked rows: softmax of all -inf is uniform — force the fused
+    # kernels' exact semantics (zero output) instead
+    p = jnp.where(jnp.any(live, axis=-1, keepdims=True), p, 0.0)
+    return jnp.einsum("bqk,bkd->bqd", p.astype(v.dtype), v)
+
+
+register_attention_backend(
+    "flash", _flash_fn,
+    description="Pallas fused online-softmax kernel, causal block skipping",
+)
+register_attention_backend(
+    "xla", _xla_fn,
+    description="dense reference (materializes scores); conformance oracle",
+)
+
+# flash block geometry: block_m -> block_q, block_n -> block_k (the k column
+# is unused).  Long-sequence default matching the kernel's historical 512.
+tuning.register_tuning((512, 512, 64), backend="flash", source="builtin")

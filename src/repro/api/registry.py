@@ -63,15 +63,23 @@ the unfused matmul(s) followed by the same f32 epilogue arithmetic — so the
 ``epilogue="swiglu"`` takes a weight *pair* ``w=(w_gate, w_up)`` and fuses
 both projections plus the gating product into one kernel launch.
 
+Fused prologues (``kernels/prologue.py``) mirror the epilogue story on the
+*load* side: ``matmul(..., prologue="rmsnorm", prologue_operands=(g,))``
+folds the RMSNorm of x into the kernels' x-block load (the O(M) inverse-rms
+reduction runs as plain XLA in the dispatch wrapper; the O(M*K) elementwise
+rescale happens in VMEM), still ONE pallas launch per dispatch.  Backends
+declare support via ``MatmulBackend.prologues`` and ``matmul`` decomposes
+to ``rms_norm -> unfused matmul`` with identical semantics otherwise.
+
 Tiled backends share one padding/batching shim and a per-backend
 ``custom_vjp`` (Pallas kernels have no JVP rule; the backward runs plain XLA
 matmuls, with the cotangent re-permutated for dip-layout storage — the
 permutation is orthogonal, so ``d/dP f(unperm(P)) = perm(d/dW f(W))``).
-Fused-epilogue backwards recompute the pre-activation from the saved matmul
-residuals (one extra XLA matmul per weight) and differentiate the epilogue
-exactly — gradients match the decomposed path to f32 tolerance.  Block
-sizes come from the tuning table (repro.api.tuning, keyed on the epilogue
-too) unless the caller pins them.
+Fused-epilogue/prologue backwards recompute the pre-activation from the
+saved matmul residuals (one extra XLA matmul per weight) and differentiate
+the epilogue/prologue exactly — gradients match the decomposed path to f32
+tolerance.  Block sizes come from the tuning table (repro.api.tuning, keyed
+on the epilogue too) unless the caller pins them.
 """
 
 from __future__ import annotations
@@ -89,6 +97,7 @@ from repro.api.quant import QuantizedDipWeight
 from repro.api.weights import PERM_TILE, DipWeight, as_dip_weight
 from repro.core import permute
 from repro.kernels import epilogue as epilogue_lib
+from repro.kernels import prologue as prologue_lib
 
 __all__ = [
     "MatmulBackend",
@@ -97,15 +106,18 @@ __all__ = [
     "list_backends",
     "backend_layout",
     "backend_epilogues",
+    "backend_prologues",
     "matmul",
     "default_interpret",
     "DEFAULT_BACKEND",
     "EPILOGUES",
+    "PROLOGUES",
 ]
 
 DEFAULT_BACKEND = "xla"
 
 EPILOGUES = epilogue_lib.EPILOGUES
+PROLOGUES = prologue_lib.PROLOGUES
 
 _LAYOUTS = ("natural", "dip", "dip_q", "sharded")
 
@@ -147,45 +159,68 @@ def _epilogue_recompute(epilogue: str, x32, wns32, eops32):
     return epilogue_lib.apply(epilogue, zs[0], *eops32)
 
 
+def _fused_recompute(prologue, epilogue, k_true, eps, x32, pops32, wns32, eops32):
+    """The full fused composition ``epilogue(prologue(x) @ w ...)`` in f32,
+    recomputed from the saved residuals — both fused backwards differentiate
+    this one definition, so prologue and epilogue gradients stay exact and
+    mutually consistent."""
+    if prologue_lib.spec(prologue).normalize:
+        (g32,) = pops32
+        inv = jax.lax.rsqrt(
+            jnp.sum(x32 * x32, axis=-1, keepdims=True) / k_true + eps
+        )
+        x32 = x32 * inv * g32.reshape(1, -1)
+    return _epilogue_recompute(epilogue, x32, wns32, eops32)
+
+
 def _build_tiled_caller(fn: Callable, layout: str):
     """custom_vjp wrapper around one 2-D padded kernel invocation.
 
     ``ws`` is the tuple of weight storages (two for the dual-weight
-    ``swiglu`` epilogue) and ``eops`` the tuple of non-weight epilogue
-    operands (bias row / residual block), both already padded.  Pallas calls
+    ``swiglu`` epilogue), ``pops`` the tuple of prologue operands (the
+    (1, Kp) norm gain row) and ``eops`` the tuple of non-weight epilogue
+    operands (bias row / residual block), all already padded.  Pallas calls
     with scratch accumulators have no jvp rule, so the backward recomputes
     the pre-activation(s) with plain XLA matmuls and differentiates the
-    shared epilogue definition.  For dip-layout storage the weight cotangent
-    is the permutated gradient of the natural weight.
+    shared prologue/epilogue definitions.  For dip-layout storage the weight
+    cotangent is the permutated gradient of the natural weight.
     """
 
-    @functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
-    def call(x2, ws, eops, opts):
-        block_m, block_n, block_k, perm_tile, interpret, epilogue = opts
+    @functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+    def call(x2, ws, pops, eops, opts):
+        block_m, block_n, block_k, perm_tile, interpret, epilogue = opts[:6]
+        prologue, k_true, p_eps = opts[6:]
         kw = dict(
             block_m=block_m, block_n=block_n, block_k=block_k,
             perm_tile=perm_tile, interpret=interpret,
         )
         if epilogue != "none":
             kw["epilogue"] = epilogue
+        if prologue != "none":
+            kw.update(prologue=prologue, prologue_operands=tuple(pops),
+                      prologue_k=k_true, prologue_eps=p_eps)
         return fn(x2, ws[0], *ws[1:], *eops, **kw)
 
-    def fwd(x2, ws, eops, opts):
-        return call(x2, ws, eops, opts), (x2, ws, eops)
+    def fwd(x2, ws, pops, eops, opts):
+        return call(x2, ws, pops, eops, opts), (x2, ws, pops, eops)
 
     def bwd(opts, res, g):
         perm_tile, epilogue = opts[3], opts[5]
-        x2, ws, eops = res
+        prologue, k_true, p_eps = opts[6:]
+        x2, ws, pops, eops = res
         wns32 = tuple(
             _f32(permute.unpermute_tiled(w, perm_tile) if layout == "dip" else w)
             for w in ws
         )
+        pops32 = tuple(_f32(p) for p in pops)
         eops32 = tuple(_f32(e) for e in eops)
         _, vjp = jax.vjp(
-            lambda x, wns, eo: _epilogue_recompute(epilogue, x, wns, eo),
-            _f32(x2), wns32, eops32,
+            lambda x, po, wns, eo: _fused_recompute(
+                prologue, epilogue, k_true, p_eps, x, po, wns, eo
+            ),
+            _f32(x2), pops32, wns32, eops32,
         )
-        dx, dwns, deops = vjp(_f32(g))
+        dx, dpops, dwns, deops = vjp(_f32(g))
         dws = tuple(
             (permute.permute_tiled(dwn, perm_tile) if layout == "dip" else dwn
              ).astype(w.dtype)
@@ -194,6 +229,7 @@ def _build_tiled_caller(fn: Callable, layout: str):
         return (
             dx.astype(x2.dtype),
             dws,
+            tuple(d.astype(p.dtype) for d, p in zip(dpops, pops)),
             tuple(d.astype(e.dtype) for d, e in zip(deops, eops)),
         )
 
@@ -207,41 +243,50 @@ def _build_quantized_caller(fn: Callable):
     ``qws`` is a tuple of ``(storage, scale)`` pairs (two for ``swiglu``).
     Forward runs the quantized kernel; backward differentiates through the
     *dequantized* weight (straight-through w.r.t. the activations — the
-    standard inference-time treatment) and through the epilogue exactly.
-    The quantized storage and its scales are frozen artifacts of an offline
-    calibration, so their cotangents are zero: float0 for integer storage
-    (JAX's tangent dtype for ints), zeros of the storage dtype for fp8.
+    standard inference-time treatment) and through the prologue/epilogue
+    exactly.  The quantized storage and its scales are frozen artifacts of
+    an offline calibration, so their cotangents are zero: float0 for integer
+    storage (JAX's tangent dtype for ints), zeros of the storage dtype for
+    fp8.
     """
 
-    @functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
-    def call(x2, qws, eops, opts):
-        block_m, block_n, block_k, perm_tile, interpret, epilogue = opts
+    @functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+    def call(x2, qws, pops, eops, opts):
+        block_m, block_n, block_k, perm_tile, interpret, epilogue = opts[:6]
+        prologue, k_true, p_eps = opts[6:]
         kw = dict(
             block_m=block_m, block_n=block_n, block_k=block_k,
             perm_tile=perm_tile, interpret=interpret,
         )
         if epilogue != "none":
             kw["epilogue"] = epilogue
+        if prologue != "none":
+            kw.update(prologue=prologue, prologue_operands=tuple(pops),
+                      prologue_k=k_true, prologue_eps=p_eps)
         (q0, s0), rest = qws[0], qws[1:]
         extra = tuple(t for pair in rest for t in pair) + tuple(eops)
         return fn(x2, q0, s0, *extra, **kw)
 
-    def fwd(x2, qws, eops, opts):
-        return call(x2, qws, eops, opts), (x2, qws, eops)
+    def fwd(x2, qws, pops, eops, opts):
+        return call(x2, qws, pops, eops, opts), (x2, qws, pops, eops)
 
     def bwd(opts, res, g):
         perm_tile, epilogue = opts[3], opts[5]
-        x2, qws, eops = res
+        prologue, k_true, p_eps = opts[6:]
+        x2, qws, pops, eops = res
         wns32 = tuple(
             _f32(permute.unpermute_tiled(q, perm_tile)) * _f32(s)
             for q, s in qws
         )
+        pops32 = tuple(_f32(p) for p in pops)
         eops32 = tuple(_f32(e) for e in eops)
         _, vjp = jax.vjp(
-            lambda x, eo: _epilogue_recompute(epilogue, x, wns32, eo),
-            _f32(x2), eops32,
+            lambda x, po, eo: _fused_recompute(
+                prologue, epilogue, k_true, p_eps, x, po, wns32, eo
+            ),
+            _f32(x2), pops32, eops32,
         )
-        dx, deops = vjp(_f32(g))
+        dx, dpops, deops = vjp(_f32(g))
 
         def zero_storage(q):
             if jnp.issubdtype(q.dtype, jnp.integer):
@@ -254,6 +299,7 @@ def _build_quantized_caller(fn: Callable):
         return (
             dx.astype(x2.dtype),
             dqws,
+            tuple(d.astype(p.dtype) for d, p in zip(dpops, pops)),
             tuple(d.astype(e.dtype) for d, e in zip(deops, eops)),
         )
 
@@ -296,6 +342,7 @@ class MatmulBackend:
     caller: Optional[Callable] = None  # custom_vjp'd tiled invocation
     scheme: Optional[str] = None       # quantization scheme (dip_q layouts)
     epilogues: FrozenSet[str] = frozenset({"none"})  # fused-epilogue support
+    prologues: FrozenSet[str] = frozenset({"none"})  # fused-prologue support
 
 
 _REGISTRY: Dict[str, MatmulBackend] = {}
@@ -321,6 +368,7 @@ def register_backend(
     description: str = "",
     scheme: Optional[str] = None,
     epilogues: Sequence[str] = ("none",),
+    prologues: Sequence[str] = ("none",),
     overwrite: bool = False,
 ):
     """Register a matmul backend (usable as a decorator).
@@ -330,13 +378,15 @@ def register_backend(
     ``layout="dip_q"`` plus the ``scheme`` they consume (see
     ``repro.api.quant.SCHEMES``).  ``epilogues`` lists the fused-epilogue
     variants the kernel applies in its flush (``kernels/epilogue.py``);
-    ``matmul`` decomposes any epilogue the backend does not declare.
+    ``prologues`` the fused-prologue variants it applies at its load stage
+    (``kernels/prologue.py``); ``matmul`` decomposes any variant the
+    backend does not declare.
     """
     if fn is None:
         return functools.partial(
             register_backend, name, layout=layout, tiled=tiled,
             description=description, scheme=scheme, epilogues=epilogues,
-            overwrite=overwrite,
+            prologues=prologues, overwrite=overwrite,
         )
     if layout not in _LAYOUTS:
         raise ValueError(f"layout must be one of {_LAYOUTS}, got {layout!r}")
@@ -368,6 +418,17 @@ def register_backend(
             "stage to fuse into) — matmul decomposes for them; drop the "
             "epilogues declaration"
         )
+    for p in prologues:
+        prologue_lib.spec(p)  # raises on unknown names
+    prologue_set = frozenset(prologues) | {"none"}
+    if not tiled and layout != "sharded" and prologue_set != {"none"}:
+        # sharded backends honour prologues too (fused into the per-shard
+        # kernels on the full-K paths, applied once before the K split)
+        raise ValueError(
+            "non-tiled backends cannot fuse prologues (there is no load "
+            "stage to fuse into) — matmul decomposes for them; drop the "
+            "prologues declaration"
+        )
     _ensure_builtins()
     if name in _REGISTRY and not overwrite:
         raise ValueError(f"backend {name!r} already registered (overwrite=True to replace)")
@@ -380,7 +441,7 @@ def register_backend(
     _REGISTRY[name] = MatmulBackend(
         name=name, layout=layout, fn=fn, tiled=tiled,
         description=description, caller=caller, scheme=scheme,
-        epilogues=epilogue_set,
+        epilogues=epilogue_set, prologues=prologue_set,
     )
     return fn
 
@@ -413,6 +474,12 @@ def backend_epilogues(name: Optional[str] = None) -> List[str]:
     return sorted(get_backend(name).epilogues)
 
 
+def backend_prologues(name: Optional[str] = None) -> List[str]:
+    """Prologues the named backend fuses into its load stage (always
+    includes "none"); anything else is decomposed by ``matmul``."""
+    return sorted(get_backend(name).prologues)
+
+
 # --------------------------------------------------------------------------
 # dispatch
 def _tiled_dispatch(
@@ -427,6 +494,10 @@ def _tiled_dispatch(
     interpret: Optional[bool],
     epilogue: str,
     operands: Tuple[jax.Array, ...],
+    prologue: str = "none",
+    pro_operands: Tuple[jax.Array, ...] = (),
+    k_true: Optional[int] = None,
+    prologue_eps: float = prologue_lib.DEFAULT_EPS,
 ) -> jax.Array:
     if interpret is None:
         interpret = default_interpret()
@@ -440,9 +511,26 @@ def _tiled_dispatch(
     bk = block_k or blocks.block_k
     x2 = _pad_dim(_pad_dim(x2, 0, bm), 1, bk)
     ws2 = tuple(_pad_dim(_pad_dim(w, 0, bk), 1, bn) for w in ws)
+    pops2 = _padded_prologue_operands(prologue, pro_operands, x2.shape[1])
     eops2 = _padded_epilogue_operands(epilogue, operands, out_cols, bm, bn)
-    out = be.caller(x2, ws2, eops2, (bm, bn, bk, perm_tile, interpret, epilogue))
+    out = be.caller(
+        x2, ws2, pops2, eops2,
+        (bm, bn, bk, perm_tile, interpret, epilogue, prologue,
+         k_true if k_true is not None else k, prologue_eps),
+    )
     return out[:m, :out_cols].reshape(lead + (out_cols,))
+
+
+def _padded_prologue_operands(
+    prologue: str, pro_operands: Tuple[jax.Array, ...], k_padded: int,
+) -> Tuple[jax.Array, ...]:
+    """The rmsnorm gain rides as a (1, Kp) row; padding is zeros (the padded
+    x columns are zero too, so the normalized block stays zero there and
+    contributes nothing to the dot)."""
+    if not prologue_lib.spec(prologue).normalize:
+        return ()
+    g = pro_operands[0].reshape(1, -1)
+    return (jnp.pad(g, ((0, 0), (0, k_padded - g.shape[1]))),)
 
 
 def _padded_epilogue_operands(
@@ -498,6 +586,10 @@ def _quantized_dispatch(
     interpret: Optional[bool],
     epilogue: str,
     operands: Tuple[jax.Array, ...],
+    prologue: str = "none",
+    pro_operands: Tuple[jax.Array, ...] = (),
+    k_true: Optional[int] = None,
+    prologue_eps: float = prologue_lib.DEFAULT_EPS,
 ) -> jax.Array:
     if interpret is None:
         interpret = default_interpret()
@@ -519,8 +611,13 @@ def _quantized_dispatch(
         (_pad_dim(_pad_dim(w.data, 0, bk), 1, bn), _pad_dim(w.scale, 1, bn))
         for w in qws
     )
+    pops2 = _padded_prologue_operands(prologue, pro_operands, x2.shape[1])
     eops2 = _padded_epilogue_operands(epilogue, operands, qw.d_out, bm, bn)
-    out = be.caller(x2, pairs, eops2, (bm, bn, bk, qw.perm_tile, interpret, epilogue))
+    out = be.caller(
+        x2, pairs, pops2, eops2,
+        (bm, bn, bk, qw.perm_tile, interpret, epilogue, prologue,
+         k_true if k_true is not None else qw.d_in, prologue_eps),
+    )
     return out[:m, : qw.d_out].reshape(lead + (qw.d_out,))
 
 
@@ -570,6 +667,50 @@ def _check_epilogue_inputs(x, weights, epilogue: str, operands) -> None:
             )
 
 
+def _check_prologue_inputs(x, weights, prologue: str, pro_operands) -> None:
+    """Shape validation shared by the fused and decomposed prologue paths:
+    the rmsnorm gain must span x's (logical) contraction dim."""
+    spec = prologue_lib.spec(prologue)
+    if len(pro_operands) != spec.n_operands:
+        raise ValueError(
+            f"prologue {prologue!r} takes {spec.n_operands} "
+            f"prologue_operands, got {len(pro_operands)}"
+        )
+    if spec.normalize:
+        d_in = _logical_dims(weights[0])[0]
+        g = pro_operands[0]
+        if g.shape not in ((d_in,), (1, d_in)):
+            raise ValueError(
+                f"prologue {prologue!r} gain must be ({d_in},) or "
+                f"(1, {d_in}), got {g.shape}"
+            )
+
+
+def _decomposed_prologue(
+    be: MatmulBackend,
+    x: jax.Array,
+    w,
+    prologue: str,
+    pro_operands,
+    prologue_eps: float,
+    epilogue, operands, block_m, block_n, block_k, interpret,
+) -> jax.Array:
+    """Unfused fallback for backends without in-kernel prologue support:
+    the SAME f32 normalize-and-cast arithmetic (kernels/prologue.py —
+    identical to ``layers.rms_norm``) as an ordinary jnp expression, then
+    the matmul through that same backend with any epilogue still in play;
+    semantics and gradients match the fused path."""
+    xn = prologue_lib.apply(
+        prologue, x, *(g.reshape(-1) for g in pro_operands), eps=prologue_eps
+    )
+    return matmul(
+        x=xn, w=w, backend=be.name,
+        epilogue=epilogue if epilogue != "none" else None,
+        epilogue_operands=operands, block_m=block_m, block_n=block_n,
+        block_k=block_k, interpret=interpret,
+    )
+
+
 def _decomposed_epilogue(
     be: MatmulBackend,
     x: jax.Array,
@@ -577,15 +718,19 @@ def _decomposed_epilogue(
     epilogue: str,
     operands,
     block_m, block_n, block_k, interpret,
+    prologue="none", pro_operands=(), prologue_eps=prologue_lib.DEFAULT_EPS,
 ) -> jax.Array:
     """Unfused fallback for backends without in-kernel epilogue support:
-    the plain matmul(s) through the same backend, then the SAME f32 epilogue
-    arithmetic (kernels/epilogue.py) as an ordinary jnp expression — XLA is
-    free to fuse it; semantics and gradients match the fused path."""
+    the plain matmul(s) through the same backend (any supported prologue
+    stays fused in them), then the SAME f32 epilogue arithmetic
+    (kernels/epilogue.py) as an ordinary jnp expression — XLA is free to
+    fuse it; semantics and gradients match the fused path."""
     outs = [
         matmul(
             x, w, backend=be.name, block_m=block_m, block_n=block_n,
             block_k=block_k, interpret=interpret,
+            prologue=prologue if prologue != "none" else None,
+            prologue_operands=pro_operands, prologue_eps=prologue_eps,
         )
         for w in weights
     ]
@@ -610,12 +755,15 @@ def matmul(
     backend: Optional[str] = None,
     epilogue: Optional[str] = None,
     epilogue_operands: Sequence[jax.Array] = (),
+    prologue: Optional[str] = None,
+    prologue_operands: Sequence[jax.Array] = (),
+    prologue_eps: float = prologue_lib.DEFAULT_EPS,
     block_m: Optional[int] = None,
     block_n: Optional[int] = None,
     block_k: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
-    """``epilogue(x @ w)`` through a registered backend.
+    """``epilogue(prologue(x) @ w)`` through a registered backend.
 
     ``x``: (..., d_in); ``w``: natural (d_in, d_out) array, ``DipWeight``,
     or ``QuantizedDipWeight`` — or a pair of those for the dual-weight
@@ -632,10 +780,20 @@ def matmul(
     output's shape; ``swiglu`` takes the weight pair through ``w`` and no
     operands.  Backends that do not fuse the requested epilogue decompose
     to the unfused path with identical semantics.
+
+    ``prologue`` (default ``"none"``) selects a fused load-stage prologue
+    (``kernels/prologue.py``): ``rmsnorm`` takes
+    ``prologue_operands=(g,)`` — the (d_in,) norm gain — and normalizes
+    each x row with ``prologue_eps`` inside the kernel's x-block load, so
+    the normalized activations never round-trip HBM.  Backends that do not
+    fuse it decompose to ``rms_norm -> matmul`` with identical semantics.
     """
     epilogue = epilogue or "none"
+    prologue = prologue or "none"
     spec = epilogue_lib.spec(epilogue)
+    prologue_lib.spec(prologue)  # raises on unknown names
     operands = tuple(epilogue_operands)
+    pro_operands = tuple(prologue_operands)
 
     if spec.dual_weight:
         if not (isinstance(w, (tuple, list)) and len(w) == 2):
@@ -661,12 +819,22 @@ def matmul(
         backend = weights[0].default_backend
     be = get_backend(backend)
 
+    if prologue != "none":
+        _check_prologue_inputs(x, weights, prologue, pro_operands)
+        if prologue not in be.prologues:
+            return _decomposed_prologue(
+                be, x, w, prologue, pro_operands, prologue_eps,
+                epilogue, operands, block_m, block_n, block_k, interpret,
+            )
+
     if epilogue != "none":
         _check_epilogue_inputs(x, weights, epilogue, operands)
         if epilogue not in be.epilogues:
             return _decomposed_epilogue(
                 be, x, weights, epilogue, operands,
                 block_m, block_n, block_k, interpret,
+                prologue=prologue, pro_operands=pro_operands,
+                prologue_eps=prologue_eps,
             )
 
     if be.layout == "sharded":
@@ -684,11 +852,16 @@ def matmul(
         ):
             return matmul(
                 x, w, backend=None, epilogue=epilogue if epilogue != "none" else None,
-                epilogue_operands=operands, block_m=block_m, block_n=block_n,
+                epilogue_operands=operands,
+                prologue=prologue if prologue != "none" else None,
+                prologue_operands=pro_operands, prologue_eps=prologue_eps,
+                block_m=block_m, block_n=block_n,
                 block_k=block_k, interpret=interpret,
             )
         return be.fn(
             x, weights, operands, plan=plan, epilogue=epilogue,
+            prologue=prologue, prologue_operands=pro_operands,
+            prologue_eps=prologue_eps,
             interpret=interpret, block_m=block_m, block_n=block_n,
             block_k=block_k,
         )
@@ -711,7 +884,8 @@ def matmul(
         xk = _validated_dip_x(x, qws[0])
         return _quantized_dispatch(
             be, xk, tuple(qws), block_m, block_n, block_k, interpret,
-            epilogue, operands,
+            epilogue, operands, prologue, pro_operands,
+            k_true=qws[0].d_in, prologue_eps=prologue_eps,
         )
 
     if any(isinstance(wi, QuantizedDipWeight) for wi in weights):
@@ -735,7 +909,8 @@ def matmul(
         return _tiled_dispatch(
             be, xk, tuple(dw.data for dw in dws), dws[0].d_out,
             dws[0].perm_tile, block_m, block_n, block_k, interpret,
-            epilogue, operands,
+            epilogue, operands, prologue, pro_operands,
+            k_true=dws[0].d_in, prologue_eps=prologue_eps,
         )
 
     wns = tuple(
@@ -752,7 +927,8 @@ def matmul(
         return be.fn(x, wns[0])
     return _tiled_dispatch(
         be, x, wns, wns[0].shape[-1], PERM_TILE, block_m, block_n, block_k,
-        interpret, epilogue, operands,
+        interpret, epilogue, operands, prologue, pro_operands,
+        k_true=x.shape[-1], prologue_eps=prologue_eps,
     )
 
 
@@ -773,34 +949,48 @@ def _register_builtins() -> None:
         return jnp.matmul(x, wn)
 
     def ws_fn(x2, w2, *eops, block_m, block_n, block_k, perm_tile, interpret,
-              epilogue="none"):
+              epilogue="none", prologue="none", prologue_operands=(),
+              prologue_k=None, prologue_eps=prologue_lib.DEFAULT_EPS):
         del perm_tile
         return ws_matmul_pallas(
             x2, w2, *eops, block_m=block_m, block_n=block_n, block_k=block_k,
-            interpret=interpret, epilogue=epilogue,
+            interpret=interpret, epilogue=epilogue, prologue=prologue,
+            prologue_operands=prologue_operands, prologue_k=prologue_k,
+            prologue_eps=prologue_eps,
         )
 
     def dip_fn(x2, p2, *eops, block_m, block_n, block_k, perm_tile, interpret,
-               epilogue="none"):
+               epilogue="none", prologue="none", prologue_operands=(),
+               prologue_k=None, prologue_eps=prologue_lib.DEFAULT_EPS):
         return dip_matmul_pallas(
             x2, p2, *eops, block_m=block_m, block_n=block_n, block_k=block_k,
             perm_tile=perm_tile, interpret=interpret, epilogue=epilogue,
+            prologue=prologue, prologue_operands=prologue_operands,
+            prologue_k=prologue_k, prologue_eps=prologue_eps,
         )
 
     def systolic_fn(x2, p2, *eops, block_m, block_n, block_k, perm_tile,
-                    interpret, epilogue="none"):
+                    interpret, epilogue="none", prologue="none",
+                    prologue_operands=(), prologue_k=None,
+                    prologue_eps=prologue_lib.DEFAULT_EPS):
         del block_n, block_k
         return dip_systolic_pallas(
             x2, p2, *eops, block_m=block_m, array_n=perm_tile,
-            interpret=interpret, epilogue=epilogue,
+            interpret=interpret, epilogue=epilogue, prologue=prologue,
+            prologue_operands=prologue_operands, prologue_k=prologue_k,
+            prologue_eps=prologue_eps,
         )
 
     def quant_fn(x2, q2, ws, *eops, block_m, block_n, block_k, perm_tile,
-                 interpret, epilogue="none"):
+                 interpret, epilogue="none", prologue="none",
+                 prologue_operands=(), prologue_k=None,
+                 prologue_eps=prologue_lib.DEFAULT_EPS):
         return dip_matmul_q_pallas(
             x2, q2, ws, *eops, block_m=block_m, block_n=block_n,
             block_k=block_k, perm_tile=perm_tile, interpret=interpret,
-            epilogue=epilogue,
+            epilogue=epilogue, prologue=prologue,
+            prologue_operands=prologue_operands, prologue_k=prologue_k,
+            prologue_eps=prologue_eps,
         )
 
     register_backend(
@@ -809,39 +999,42 @@ def _register_builtins() -> None:
     )
     register_backend(
         "ws", ws_fn, layout="natural", epilogues=EPILOGUES,
+        prologues=PROLOGUES,
         description="weight-stationary tiled Pallas kernel (baseline)",
     )
     register_backend(
         "pallas_dip", dip_fn, layout="dip", epilogues=EPILOGUES,
+        prologues=PROLOGUES,
         description="fused de-shear + MXU Pallas kernel (paper fast path)",
     )
     register_backend(
-        "pallas_systolic", systolic_fn, layout="dip", epilogues=EPILOGUES,
+        "pallas_systolic", systolic_fn, layout="dip",
+        epilogues=EPILOGUES, prologues=PROLOGUES,
         description="wavefront-emulation Pallas kernel (validation path)",
     )
     register_backend(
         "dip_int8w", quant_fn, layout="dip_q", scheme="int8",
-        epilogues=EPILOGUES,
+        epilogues=EPILOGUES, prologues=PROLOGUES,
         description="W8A8-dynamic int8 kernel: per-row int8 acts x "
                     "per-column int8 weights, int32 accumulation, fused "
                     "scale-on-output (ADiP-style mixed precision)",
     )
     register_backend(
         "dip_fp8", quant_fn, layout="dip_q", scheme="fp8_e4m3",
-        epilogues=EPILOGUES,
+        epilogues=EPILOGUES, prologues=PROLOGUES,
         description="fp8-e4m3-weight kernel: device-gated compute width "
                     "with emulated (f32) fallback, fused scale-on-output",
     )
     register_backend(
         "dip_tp", dip_tp_matmul, layout="sharded", tiled=False,
-        epilogues=EPILOGUES,
+        epilogues=EPILOGUES, prologues=PROLOGUES,
         description="explicit tensor-parallel shard_map backend: column/row "
                     "per the weight's WeightPlan; zero collectives for "
                     "column, ONE psum (past the epilogue) for row",
     )
     register_backend(
         "dip_fsdp", dip_fsdp_matmul, layout="sharded", tiled=False,
-        epilogues=EPILOGUES,
+        epilogues=EPILOGUES, prologues=PROLOGUES,
         description="explicit ZeRO-3 shard_map backend: K-sharded storage, "
                     "all-gather-on-load, batch(M)-sharded compute",
     )

@@ -51,7 +51,7 @@ def shape_cells_for(cfg: ArchConfig) -> List[ShapeCell]:
     cells = []
     for cell in SHAPE_CELLS:
         if cell.name == "long_500k" and not cfg.sub_quadratic:
-            continue  # skip recorded in DESIGN.md §4 / EXPERIMENTS.md §Dry-run
+            continue  # skip recorded in DESIGN.md §4 / docs/benchmarks.md §Dry-run
         cells.append(cell)
     return cells
 

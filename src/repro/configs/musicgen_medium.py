@@ -21,5 +21,5 @@ CONFIG = ArchConfig(
     frontend="audio_stub",
     rope_theta=10_000.0,
     notes="24 heads (not divisible by 16-way TP) — attention uses "
-          "sequence sharding instead of head sharding; see EXPERIMENTS §Perf.",
+          "sequence sharding instead of head sharding; see docs/benchmarks.md §Perf.",
 )

@@ -16,12 +16,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["VMEM", "CompilerParams", "deshear_block", "shear_block", "rotate_left_dynamic"]
+__all__ = ["VMEM", "SMEM", "CompilerParams", "deshear_block", "shear_block",
+           "rotate_left_dynamic"]
 
 # jax renamed these between releases (MemorySpace.VMEM <-> VMEM,
 # CompilerParams <-> TPUCompilerParams); resolve whichever spelling exists so
 # the kernels compile against any toolchain the container bakes in.
 VMEM = getattr(pltpu, "VMEM", None) or pltpu.MemorySpace.VMEM
+SMEM = getattr(pltpu, "SMEM", None) or pltpu.MemorySpace.SMEM
 CompilerParams = getattr(pltpu, "TPUCompilerParams", None) or pltpu.CompilerParams
 
 

@@ -24,6 +24,12 @@ f32 accumulator while it is still in VMEM, so the activated result is the
 only (M, N) tensor that reaches HBM.  ``swiglu`` is dual-weight: the gate
 and up projections stream over the same x block with two accumulators — one
 read of x, no intermediate gate/up arrays.
+
+Fused prologues (kernels/prologue.py) mirror that on the load stage: the
+per-row inverse RMS (reduced once in the wrapper, O(M) data) and the norm
+gain rescale each x block right after it lands in VMEM, so the raw
+activations are the only x tensor that ever reaches HBM — still ONE pallas
+launch per dispatch.
 """
 
 from __future__ import annotations
@@ -36,14 +42,18 @@ from jax.experimental import pallas as pl
 
 from repro.kernels import common
 from repro.kernels import epilogue as epi
+from repro.kernels import prologue as pro
 from repro.kernels.ref import acc_dtype_for
 
 __all__ = ["dip_matmul_pallas"]
 
 
 def _kernel(x_ref, p_ref, *rest, perm_tile: int, fuse_deshear: bool,
-            epilogue: str):
+            epilogue: str, prologue: str):
     spec = epi.spec(epilogue)
+    n_pro = 2 * pro.n_operands(prologue)
+    pro_refs = rest[:n_pro]
+    rest = rest[n_pro:]
     extra = rest[: spec.n_operands]
     o_ref = rest[spec.n_operands]
     acc_refs = rest[spec.n_operands + 1:]
@@ -54,7 +64,7 @@ def _kernel(x_ref, p_ref, *rest, perm_tile: int, fuse_deshear: bool,
         for acc in acc_refs:
             acc[...] = jnp.zeros_like(acc)
 
-    x = x_ref[...]
+    x = pro.kernel_load(prologue, x_ref, pro_refs)
     w = common.deshear_block(p_ref[...], perm_tile) if fuse_deshear else p_ref[...]
     acc_refs[0][...] += jnp.dot(x, w, preferred_element_type=acc_refs[0].dtype)
     if spec.dual_weight:  # up projection over the SAME x block
@@ -72,7 +82,8 @@ def _kernel(x_ref, p_ref, *rest, perm_tile: int, fuse_deshear: bool,
 @functools.partial(
     jax.jit,
     static_argnames=("block_m", "block_n", "block_k", "perm_tile", "interpret",
-                     "out_dtype", "fuse_deshear", "epilogue"),
+                     "out_dtype", "fuse_deshear", "epilogue", "prologue",
+                     "prologue_k", "prologue_eps"),
 )
 def dip_matmul_pallas(
     x: jax.Array,
@@ -86,9 +97,14 @@ def dip_matmul_pallas(
     out_dtype=None,
     fuse_deshear: bool = True,
     epilogue: str = "none",
+    prologue: str = "none",
+    prologue_operands=(),
+    prologue_k=None,
+    prologue_eps: float = pro.DEFAULT_EPS,
 ):
-    """``epilogue(x @ unpermute_tiled(p))`` with the de-shear fused into the
-    MXU loop and the epilogue fused into the accumulator flush.
+    """``epilogue(prologue(x) @ unpermute_tiled(p))`` with the de-shear
+    fused into the MXU loop, the prologue fused into the x-block load, and
+    the epilogue fused into the accumulator flush.
 
     Shapes must already be padded to block multiples (the registry dispatch
     shim handles padding); ``p`` is the DiP-permutated weight (K, N).  With
@@ -96,7 +112,9 @@ def dip_matmul_pallas(
     the baseline and for pre-desheared weights).  ``epilogue_operands`` per
     variant: ``(p_up,)`` for ``swiglu`` (a second (K, N) weight), ``(b,)``
     of shape (1, N) for the bias variants, ``(r,)`` of shape (M, N) for
-    ``residual`` — see kernels/epilogue.py.
+    ``residual`` — see kernels/epilogue.py.  ``prologue_operands`` is the
+    (1, K) norm gain row for ``rmsnorm``; ``prologue_k`` is the logical
+    (un-padded) contraction dim the RMS mean divides by.
     """
     m, kdim = x.shape
     k2, n = p.shape
@@ -111,6 +129,13 @@ def dip_matmul_pallas(
     epi.validate_operands(
         epilogue, epilogue_operands, m=m, n=n, w_shape=p.shape, w_dtype=p.dtype
     )
+    pro_in = []
+    if pro.spec(prologue).normalize:
+        (gain,) = prologue_operands
+        gain = gain.reshape(1, kdim)
+        inv = pro.inv_rms(x, k_true=prologue_k, eps=prologue_eps)
+        pro_in = [inv, gain]
+        pro.validate_operands(prologue, pro_in, m=m, k=kdim)
 
     acc_dtype = acc_dtype_for(x, p)
     if epilogue == "none":
@@ -124,6 +149,7 @@ def dip_matmul_pallas(
     grid = (m // block_m, n // block_n, kdim // block_k)
 
     extra_in = list(epilogue_operands)
+    pro_specs = pro.operand_block_specs(prologue, block_m=block_m, block_k=block_k)
     extra_specs = epi.operand_block_specs(
         epilogue, block_m=block_m, block_n=block_n, block_k=block_k
     )
@@ -134,12 +160,13 @@ def dip_matmul_pallas(
     return pl.pallas_call(
         functools.partial(
             _kernel, perm_tile=perm_tile, fuse_deshear=fuse_deshear,
-            epilogue=epilogue,
+            epilogue=epilogue, prologue=prologue,
         ),
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
             pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+            *pro_specs,
             *extra_specs,
         ],
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
@@ -149,4 +176,4 @@ def dip_matmul_pallas(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(x, p, *extra_in)
+    )(x, p, *pro_in, *extra_in)

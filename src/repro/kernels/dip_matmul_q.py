@@ -39,6 +39,7 @@ from jax.experimental import pallas as pl
 
 from repro.kernels import common
 from repro.kernels import epilogue as epi
+from repro.kernels import prologue as pro
 from repro.kernels.ref import quantize_acts_int8
 
 __all__ = ["dip_matmul_q_pallas", "fp8_compute_dtype", "fp8_native_supported"]
@@ -110,7 +111,8 @@ def _kernel(x_ref, p_ref, xs_ref, ws_ref, *rest, perm_tile: int,
 @functools.partial(
     jax.jit,
     static_argnames=("block_m", "block_n", "block_k", "perm_tile", "interpret",
-                     "out_dtype", "epilogue"),
+                     "out_dtype", "epilogue", "prologue", "prologue_k",
+                     "prologue_eps"),
 )
 def dip_matmul_q_pallas(
     x: jax.Array,
@@ -124,6 +126,10 @@ def dip_matmul_q_pallas(
     interpret: bool = False,
     out_dtype=None,
     epilogue: str = "none",
+    prologue: str = "none",
+    prologue_operands=(),
+    prologue_k=None,
+    prologue_eps: float = pro.DEFAULT_EPS,
 ):
     """``epilogue(x @ dequant(unpermute_tiled(q)))`` with quantized arithmetic.
 
@@ -154,6 +160,15 @@ def dip_matmul_q_pallas(
         epilogue, epilogue_operands, m=m, n=n, w_shape=q.shape,
         w_dtype=q.dtype, with_scales=True,
     )
+    if pro.spec(prologue).normalize:
+        # The quantized kernels' load stage IS the activation quantization,
+        # which happens here in the wrapper (one jnp pass over x).  The
+        # RMSNorm folds into that same pass — x is normalized before the
+        # per-row amax/rounding so the int8/fp8 operands carry the
+        # normalized values, and the dispatch stays ONE pallas launch.
+        (gain,) = prologue_operands
+        x = pro.apply(prologue, x, gain.reshape(-1),
+                      k_true=prologue_k, eps=prologue_eps)
 
     int_path = jnp.issubdtype(q.dtype, jnp.integer)
     if int_path:

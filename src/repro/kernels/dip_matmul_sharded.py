@@ -53,6 +53,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.kernels import epilogue as epilogue_lib
+from repro.kernels import prologue as prologue_lib
 
 __all__ = ["dip_tp_matmul", "dip_fsdp_matmul", "count_collectives"]
 
@@ -151,6 +152,25 @@ def _epilogue_out_dtype(x: jax.Array) -> jnp.dtype:
     return x.dtype if jnp.issubdtype(x.dtype, jnp.floating) else jnp.float32
 
 
+def _resolve_prologue(prologue, pro_operands, prologue_eps, x, w0,
+                      full_k_local: bool):
+    """Decide where the prologue runs.  Full-K shards with perm-tile-aligned
+    d_in fuse it into the per-shard kernel launch (inner ``api.matmul`` —
+    the normalized block never round-trips HBM).  Row plans split K across
+    shards (no shard sees a whole row to normalize) and unaligned d_in
+    would lose the logical sum-of-squares divisor inside the shard, so
+    those normalize ONCE here before the shard_map — same arithmetic,
+    unfused.  Returns (normalized-or-original x, fuse flag)."""
+    if prologue == "none":
+        return x, False
+    if full_k_local and w0.d_in == w0.data.shape[-2]:
+        return x, True
+    xn = prologue_lib.apply(
+        prologue, x, *(g.reshape(-1) for g in pro_operands), eps=prologue_eps
+    )
+    return xn, False
+
+
 # --------------------------------------------------------------------------
 def dip_tp_matmul(
     x: jax.Array,
@@ -159,13 +179,19 @@ def dip_tp_matmul(
     *,
     plan,
     epilogue: str = "none",
+    prologue: str = "none",
+    prologue_operands: Sequence[jax.Array] = (),
+    prologue_eps: float = prologue_lib.DEFAULT_EPS,
     interpret: Optional[bool] = None,
     block_m: Optional[int] = None,
     block_n: Optional[int] = None,
     block_k: Optional[int] = None,
 ) -> jax.Array:
-    """Tensor-parallel dispatch of ``epilogue(x @ w ...)`` per the weight's
-    plan kind (column / row) — see the module doc for collective placement."""
+    """Tensor-parallel dispatch of ``epilogue(prologue(x) @ w ...)`` per the
+    weight's plan kind (column / row) — see the module doc for collective
+    placement.  Column plans keep the full contraction on every shard, so
+    the prologue fuses into the per-shard launch; row plans split K, so the
+    prologue runs once before the shard_map (``_resolve_prologue``)."""
     from repro import api
 
     _validate(weights, plan, "dip_tp")
@@ -191,6 +217,13 @@ def dip_tp_matmul(
     spec = epilogue_lib.spec(epilogue)
     blocks = dict(block_m=block_m, block_n=block_n, block_k=block_k,
                   interpret=interpret)
+    x, fuse_pro = _resolve_prologue(
+        prologue, prologue_operands, prologue_eps, x, w0,
+        full_k_local=plan.kind == "column",
+    )
+    pops = (
+        tuple(g.reshape(1, -1) for g in prologue_operands) if fuse_pro else ()
+    )
 
     lead = x.shape[:-1]
     x2 = _pad_dim(x.reshape((-1, x.shape[-1])), 1, w0.perm_tile)
@@ -217,7 +250,7 @@ def dip_tp_matmul(
             eops = ()
             eop_specs = ()
 
-        def body(xl, datas_l, scales_l, eops_l):
+        def body(xl, datas_l, scales_l, pops_l, eops_l):
             # local d_in = Kp (x arrives already padded): the shard storage
             # keeps the full contraction, only N is split
             wl = tuple(
@@ -228,11 +261,15 @@ def dip_tp_matmul(
             )
             wl = wl[0] if not spec.dual_weight else wl
             # ONE fused launch per shard: disjoint output columns, so the
-            # epilogue (bias/activation/residual shards included) fuses fully
+            # prologue (gain replicated, full K local) and epilogue
+            # (bias/activation/residual shards included) fuse fully
             return api.matmul(
                 xl, wl, backend=_inner_backend(w0),
                 epilogue=epilogue if epilogue != "none" else None,
-                epilogue_operands=eops_l, **blocks,
+                epilogue_operands=eops_l,
+                prologue=prologue if fuse_pro else None,
+                prologue_operands=pops_l, prologue_eps=prologue_eps,
+                **blocks,
             )
 
         out2 = shard_map(
@@ -241,11 +278,12 @@ def dip_tp_matmul(
                 P(None, None),
                 tuple(P(None, ax) for _ in datas),
                 tuple(P(None, ax) for _ in scales),
+                tuple(P(None, None) for _ in pops),
                 tuple(eop_specs),
             ),
             out_specs=P(None, ax),
             check_rep=False,
-        )(x2, datas, scales, eops)
+        )(x2, datas, scales, pops, eops)
         return out2[:m2, : w0.d_out].reshape(lead + (w0.d_out,))
 
     # ---- row-parallel: K sharded, ONE psum, epilogue post-reduction -------
@@ -323,13 +361,18 @@ def dip_fsdp_matmul(
     *,
     plan,
     epilogue: str = "none",
+    prologue: str = "none",
+    prologue_operands: Sequence[jax.Array] = (),
+    prologue_eps: float = prologue_lib.DEFAULT_EPS,
     interpret: Optional[bool] = None,
     block_m: Optional[int] = None,
     block_n: Optional[int] = None,
     block_k: Optional[int] = None,
 ) -> jax.Array:
     """ZeRO-3 dispatch: K-sharded storage, all-gather-on-load, batch-sharded
-    compute — see the module doc for collective placement."""
+    compute — see the module doc for collective placement.  Each shard owns
+    whole x rows (M split, K whole), so the prologue fuses into the local
+    launch with the gain replicated (``_resolve_prologue``)."""
     from repro import api
 
     _validate(weights, plan, "dip_fsdp")
@@ -359,6 +402,12 @@ def dip_fsdp_matmul(
     spec = epilogue_lib.spec(epilogue)
     blocks = dict(block_m=block_m, block_n=block_n, block_k=block_k,
                   interpret=interpret)
+    x, fuse_pro = _resolve_prologue(
+        prologue, prologue_operands, prologue_eps, x, w0, full_k_local=True
+    )
+    pops = (
+        tuple(g.reshape(1, -1) for g in prologue_operands) if fuse_pro else ()
+    )
 
     lead = x.shape[:-1]
     x2 = _pad_dim(x.reshape((-1, x.shape[-1])), 1, w0.perm_tile)
@@ -377,7 +426,7 @@ def dip_fsdp_matmul(
         eops = ()
         eop_specs = ()
 
-    def body(xl, datas_l, scales_l, eops_l):
+    def body(xl, datas_l, scales_l, pops_l, eops_l):
         # the ZeRO-3 "on-load" gather: one all_gather per weight, at the
         # storage width (int8/fp8 bytes for quantized weights)
         full = tuple(
@@ -391,11 +440,15 @@ def dip_fsdp_matmul(
             )
         )
         wl = wl[0] if not spec.dual_weight else wl
-        # ONE fused launch over the local M rows, epilogue included
+        # ONE fused launch over the local M rows, prologue and epilogue
+        # included (x rows are whole per shard, so the per-row norm is local)
         return api.matmul(
             xl, wl, backend=_inner_backend(w0),
             epilogue=epilogue if epilogue != "none" else None,
-            epilogue_operands=eops_l, **blocks,
+            epilogue_operands=eops_l,
+            prologue=prologue if fuse_pro else None,
+            prologue_operands=pops_l, prologue_eps=prologue_eps,
+            **blocks,
         )
 
     out2 = shard_map(
@@ -404,9 +457,10 @@ def dip_fsdp_matmul(
             P(ax, None),
             tuple(P(ax, None) for _ in datas),
             tuple(P(None, None) for _ in scales),
+            tuple(P(None, None) for _ in pops),
             tuple(eop_specs),
         ),
         out_specs=P(ax, None),
         check_rep=False,
-    )(x2p, datas, scales, eops)
+    )(x2p, datas, scales, pops, eops)
     return out2[:m2, : w0.d_out].reshape(lead + (w0.d_out,))

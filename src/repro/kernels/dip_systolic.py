@@ -33,13 +33,17 @@ from jax.experimental import pallas as pl
 
 from repro.kernels import common
 from repro.kernels import epilogue as epi
+from repro.kernels import prologue as pro
 from repro.kernels.ref import acc_dtype_for
 
 __all__ = ["dip_systolic_pallas"]
 
 
-def _kernel(x_ref, p_ref, *rest, array_n: int, epilogue: str):
+def _kernel(x_ref, p_ref, *rest, array_n: int, epilogue: str, prologue: str):
     spec = epi.spec(epilogue)
+    n_pro = 2 * pro.n_operands(prologue)
+    pro_refs = rest[:n_pro]
+    rest = rest[n_pro:]
     extra = rest[: spec.n_operands]
     o_ref = rest[spec.n_operands]
     acc_refs = rest[spec.n_operands + 1:]
@@ -50,7 +54,7 @@ def _kernel(x_ref, p_ref, *rest, array_n: int, epilogue: str):
         for acc in acc_refs:
             acc[...] = jnp.zeros_like(acc)
 
-    x = x_ref[...]
+    x = pro.kernel_load(prologue, x_ref, pro_refs)
 
     def sweep(p, acc0):
         def wavefront(r, acc):
@@ -72,7 +76,8 @@ def _kernel(x_ref, p_ref, *rest, array_n: int, epilogue: str):
 
 @functools.partial(
     jax.jit, static_argnames=("block_m", "array_n", "interpret", "out_dtype",
-                              "epilogue")
+                              "epilogue", "prologue", "prologue_k",
+                              "prologue_eps")
 )
 def dip_systolic_pallas(
     x: jax.Array,
@@ -83,13 +88,19 @@ def dip_systolic_pallas(
     interpret: bool = False,
     out_dtype=None,
     epilogue: str = "none",
+    prologue: str = "none",
+    prologue_operands=(),
+    prologue_k=None,
+    prologue_eps: float = pro.DEFAULT_EPS,
 ):
-    """``epilogue(x @ unpermute_tiled(p))`` via explicit wavefront emulation.
+    """``epilogue(prologue(x) @ unpermute_tiled(p))`` via explicit wavefront
+    emulation.
 
     ``p`` is the (K, N) DiP-permutated weight with K, N multiples of
     ``array_n`` (the physical array dimension, 64 in the paper).
     ``epilogue_operands`` follow the kernels/epilogue.py contract: a second
-    (K, N) weight for ``swiglu``, a (1, N) bias row, or an (M, N) residual.
+    (K, N) weight for ``swiglu``, a (1, N) bias row, or an (M, N) residual;
+    ``prologue_operands`` is the (1, K) norm gain for ``rmsnorm``.
     """
     m, kdim = x.shape
     k2, n = p.shape
@@ -101,6 +112,13 @@ def dip_systolic_pallas(
     epi.validate_operands(
         epilogue, epilogue_operands, m=m, n=n, w_shape=p.shape, w_dtype=p.dtype
     )
+    pro_in = []
+    if pro.spec(prologue).normalize:
+        (gain,) = prologue_operands
+        gain = gain.reshape(1, kdim)
+        inv = pro.inv_rms(x, k_true=prologue_k, eps=prologue_eps)
+        pro_in = [inv, gain]
+        pro.validate_operands(prologue, pro_in, m=m, k=kdim)
 
     acc_dtype = acc_dtype_for(x, p)
     if epilogue == "none":
@@ -112,6 +130,7 @@ def dip_systolic_pallas(
     grid = (m // block_m, n // array_n, kdim // array_n)
 
     extra_in = list(epilogue_operands)
+    pro_specs = pro.operand_block_specs(prologue, block_m=block_m, block_k=array_n)
     extra_specs = epi.operand_block_specs(
         epilogue, block_m=block_m, block_n=array_n, block_k=array_n
     )
@@ -121,11 +140,14 @@ def dip_systolic_pallas(
         scratch.append(common.VMEM((block_m, array_n), acc_dtype))
 
     return pl.pallas_call(
-        functools.partial(_kernel, array_n=array_n, epilogue=epilogue),
+        functools.partial(
+            _kernel, array_n=array_n, epilogue=epilogue, prologue=prologue
+        ),
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_m, array_n), lambda i, j, k: (i, k)),
             pl.BlockSpec((array_n, array_n), lambda i, j, k: (k, j)),
+            *pro_specs,
             *extra_specs,
         ],
         out_specs=pl.BlockSpec((block_m, array_n), lambda i, j, k: (i, j)),
@@ -135,4 +157,4 @@ def dip_systolic_pallas(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(x, p, *extra_in)
+    )(x, p, *pro_in, *extra_in)

@@ -1,0 +1,201 @@
+"""Shared prologue library for the fused matmul kernels.
+
+PR 4 fused everything *downstream* of the matmul (``kernels/epilogue.py``):
+bias / activation / SwiGLU / residual ride the accumulator flush.  This
+module is the mirror image for the *upstream* side.  Every transformer
+projection is preceded by an RMSNorm of the same activation block, and the
+unfused form pays one full HBM round-trip for it: the norm writes its
+(M, K) result only for the kernel to immediately stream it back in.  The
+tiled kernels already own the natural fusion point — the ``x`` block load
+at the top of each grid step — so the prologue is applied there, on the
+block that is already in VMEM, and the raw (un-normalized) activations are
+the only x tensor that ever reaches HBM.
+
+The split mirrors how RMSNorm factorizes: the *reduction* (one scalar
+``1/rms`` per row) is O(M) data and runs as a plain XLA reduction in the
+dispatch wrapper, while the O(M*K) *elementwise application* — the part
+that costs a round-trip — happens inside the kernel:
+
+    inv[i]  = rsqrt( sum_k x[i,k]^2 / k_true + eps )     (wrapper, XLA)
+    xn[i,k] = cast( x32[i,k] * inv[i] * g[k] )           (kernel load stage)
+
+so a fused dispatch is still exactly ONE pallas launch.  The cast back to
+the input dtype makes the fused path bit-match the decomposed
+``layers.rms_norm(x, g) -> matmul`` composition.
+
+One definition serves three consumers (same contract as the epilogue
+library): the Pallas kernels apply :func:`kernel_load` at their load stage;
+the pure-jnp oracles in ``kernels/ref.py`` and the registry's decomposed
+fallback (backends without prologue support, e.g. ``xla``) apply
+:func:`apply` to the full activation.
+
+Variants (``PROLOGUES``):
+
+    none        identity (the historical load)
+    rmsnorm     rms-normalize each x row, scale by a learned (K,) gain
+                operands: (g,) — the norm weight
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = [
+    "PROLOGUES",
+    "PrologueSpec",
+    "DEFAULT_EPS",
+    "spec",
+    "n_operands",
+    "apply",
+    "inv_rms",
+    "validate_operands",
+    "operand_block_specs",
+    "kernel_load",
+]
+
+DEFAULT_EPS = 1e-5  # matches layers.rms_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class PrologueSpec:
+    """Static description of one prologue variant.
+
+    ``normalize`` marks the rmsnorm family: the kernel receives the
+    per-row ``(M, 1)`` inverse-rms column (reduced in the wrapper) plus the
+    ``(1, K)`` gain row, and rescales each x block at load time.
+    """
+
+    name: str
+    normalize: bool = False
+
+    @property
+    def n_operands(self) -> int:
+        """Extra operands beyond (x, w) at the *dispatch* level: the norm
+        gain for ``rmsnorm``.  (Kernels additionally receive the derived
+        inverse-rms column — see :func:`operand_block_specs`.)"""
+        return int(self.normalize)
+
+
+PROLOGUES: Tuple[str, ...] = ("none", "rmsnorm")
+
+_SPECS = {
+    "none": PrologueSpec("none"),
+    "rmsnorm": PrologueSpec("rmsnorm", normalize=True),
+}
+
+
+def spec(name: Optional[str]) -> PrologueSpec:
+    """Resolve a prologue name (``None`` means ``"none"``); raises on
+    unknown names so a typo fails at dispatch, not silently unfused."""
+    try:
+        return _SPECS[name or "none"]
+    except KeyError:
+        raise ValueError(
+            f"unknown prologue {name!r}; supported: {list(PROLOGUES)}"
+        ) from None
+
+
+def n_operands(name: Optional[str]) -> int:
+    return spec(name).n_operands
+
+
+def inv_rms(
+    x: jax.Array, *, k_true: Optional[int] = None, eps: float = DEFAULT_EPS
+) -> jax.Array:
+    """Per-row ``(M, 1)`` float32 inverse RMS of ``x``.
+
+    ``k_true`` is the *logical* contraction dim: dispatch pads K with zero
+    columns, which add nothing to the sum of squares, but the mean's
+    divisor must stay the un-padded width for fused/decomposed parity.
+    """
+    x32 = x.astype(jnp.float32)
+    k = x.shape[-1] if k_true is None else k_true
+    ssq = jnp.sum(x32 * x32, axis=-1, keepdims=True)
+    return jax.lax.rsqrt(ssq / k + eps)
+
+
+def apply(
+    name: Optional[str],
+    x: jax.Array,
+    *operands: jax.Array,
+    k_true: Optional[int] = None,
+    eps: float = DEFAULT_EPS,
+) -> jax.Array:
+    """Apply one prologue to the activation ``x`` (reference / decomposed
+    form).  Math runs in float32 and casts back to ``x.dtype`` — identical
+    to ``layers.rms_norm`` and to what the fused kernels compute blockwise.
+    """
+    s = spec(name)
+    if len(operands) != s.n_operands:
+        raise ValueError(
+            f"prologue {s.name!r} takes {s.n_operands} operand(s), "
+            f"got {len(operands)}"
+        )
+    if not s.normalize:
+        return x
+    (g,) = operands
+    inv = inv_rms(x, k_true=k_true, eps=eps)
+    xn = x.astype(jnp.float32) * inv * g.reshape(1, -1).astype(jnp.float32)
+    return xn.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# shared kernel-side plumbing: ONE operand contract and ONE load across the
+# fused kernels (dip_matmul / dip_systolic; the quantized wrapper normalizes
+# before activation quantization), so the contract cannot drift between them.
+def validate_operands(name: Optional[str], operands, *, m: int, k: int) -> None:
+    """Check a kernel's ``prologue_operands`` against the shared contract:
+    the ``(M, 1)`` float32 inverse-rms column (reduced by the wrapper)
+    followed by the ``(1, K)`` gain row."""
+    s = spec(name)
+    expected = 2 * s.n_operands  # (inv, gain) per normalizing prologue
+    if len(operands) != expected:
+        raise ValueError(
+            f"prologue {s.name!r} takes {expected} kernel operand(s), "
+            f"got {len(operands)}"
+        )
+    if s.normalize:
+        inv, g = operands
+        if tuple(inv.shape) != (m, 1) or inv.dtype != jnp.float32:
+            raise ValueError(
+                f"prologue inverse-rms must be ({m}, 1) float32, "
+                f"got {inv.shape}:{inv.dtype}"
+            )
+        if tuple(g.shape) != (1, k):
+            raise ValueError(
+                f"prologue gain must be (1, {k}), got {g.shape}"
+            )
+
+
+def operand_block_specs(name: Optional[str], *, block_m: int, block_k: int):
+    """BlockSpecs for the validated prologue operands, in the kernels'
+    shared ``(i, j, k)`` grid convention: the inverse-rms column rides as a
+    (bm, 1) block at (i, 0), the gain row as a (1, bk) block at (0, k) —
+    both revisited per j like the x block itself.  The wavefront kernel
+    passes its ``array_n`` as ``block_k``."""
+    s = spec(name)
+    if not s.normalize:
+        return []
+    return [
+        pl.BlockSpec((block_m, 1), lambda i, j, k: (i, 0)),
+        pl.BlockSpec((1, block_k), lambda i, j, k: (0, k)),
+    ]
+
+
+def kernel_load(name: Optional[str], x_ref, pro_refs):
+    """The fused kernels' x-block load: ``none`` reads the block straight
+    through (the historical load); ``rmsnorm`` rescales it by the per-row
+    inverse rms and the gain row in float32, then casts ONCE back to the
+    input dtype so the streamed block bit-matches the decomposed
+    ``rms_norm -> matmul`` composition (the MXU sees the same operand)."""
+    x = x_ref[...]
+    if (name or "none") == "none":
+        return x
+    inv_ref, g_ref = pro_refs
+    xn = x.astype(jnp.float32) * inv_ref[...] * g_ref[...].astype(jnp.float32)
+    return xn.astype(x.dtype)

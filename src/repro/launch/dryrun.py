@@ -14,7 +14,7 @@ Usage:
 
 Per cell it prints/records: compile ok, memory_analysis, cost_analysis
 FLOPs/bytes, per-kind collective bytes, and the three roofline terms
-(EXPERIMENTS.md §Dry-run / §Roofline read from the JSONL).
+(docs/benchmarks.md §Dry-run / §Roofline read from the JSONL).
 """
 
 import argparse

@@ -1,6 +1,6 @@
 """Roofline-term extraction from compiled dry-run artifacts.
 
-Per (arch x shape x mesh) the three terms (EXPERIMENTS.md §Roofline):
+Per (arch x shape x mesh) the three terms (docs/benchmarks.md §Roofline):
 
     compute_s    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
     memory_s     = HLO_bytes_per_device / HBM_bandwidth_per_chip

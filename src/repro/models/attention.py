@@ -69,12 +69,21 @@ def attention_core(
     constrain: Constrain = _id,
     unroll: bool = False,   # cost-probe mode: unroll the chunk scan so XLA
                             # cost analysis counts every chunk (launch/dryrun)
+    backend: Optional[str] = None,  # api.attention backend name; None = the
+                                    # XLA dense/chunked paths below
 ) -> jax.Array:
     """Scaled-dot-product GQA attention, optionally KV-chunked.
 
     ``kv_chunk > 0`` streams KV in chunks with an online softmax
     (flash-attention recurrence) — O(Sq * chunk) live scores instead of
     O(Sq * Sk).  Exact (not approximate); validated against the dense path.
+
+    ``backend`` routes through the ``api.attention`` registry instead
+    (e.g. the fused ``"flash"`` kernel for serving prefill — forward-only).
+    That path requires the contiguous-position layout every caller here
+    uses (``q_pos``/``k_pos`` are aranges; the query block sits at offset
+    ``q_pos[0] - k_pos[0]`` in the key sequence) and subsumes ``kv_chunk``:
+    the kernel streams KV blocks internally.
     """
     b, sq, h, d = q.shape
     _, sk, kv, dv = v.shape
@@ -87,6 +96,17 @@ def attention_core(
     if groups > 1:
         k = jnp.broadcast_to(k[:, :, :, None, :], (b, sk, kv, groups, d)).reshape(b, sk, h, d)
         v = jnp.broadcast_to(v[:, :, :, None, :], (b, sk, kv, groups, dv)).reshape(b, sk, h, dv)
+
+    if backend is not None:
+        q_f = jnp.moveaxis(q, 2, 1).reshape(b * h, sq, d)
+        k_f = jnp.moveaxis(k, 2, 1).reshape(b * h, sk, d)
+        v_f = jnp.moveaxis(v, 2, 1).reshape(b * h, sk, dv)
+        out = api.attention(
+            q_f, k_f, v_f, backend=backend, causal=True,
+            q_offset=(q_pos[0] - k_pos[0]).astype(jnp.int32),
+            kv_len=kv_valid_len, scale=1.0,  # q pre-scaled above
+        )
+        return jnp.moveaxis(out.reshape(b, h, sq, dv), 1, 2).astype(v.dtype)
 
     def dense(k, v, k_pos):
         scores = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32), k.astype(jnp.float32))
@@ -156,6 +176,8 @@ def gqa_attention(
     unroll: bool = False,
     rope=None,                     # precomputed layers.rope_tables (hoisted)
     residual: Optional[jax.Array] = None,  # fused into the out-projection
+    norm: Optional[jax.Array] = None,  # attn_norm gain fused as a prologue
+    attn_backend: Optional[str] = None,  # api.attention backend (e.g. "flash")
 ) -> Tuple[jax.Array, Optional[Dict]]:
     """Full GQA block: projections + RoPE + cache update + attention + out.
 
@@ -163,15 +185,23 @@ def gqa_attention(
     them; ``residual`` fuses the block's ``x + attn(x)`` into the
     out-projection's flush-stage epilogue (the returned tensor then IS the
     updated residual stream).  QKV biases ride the projections' fused bias
-    epilogue.
+    epilogue.  ``norm`` takes the pre-attention RMSNorm gain when the
+    backend fuses prologues: ``x`` then arrives UN-normalized and each
+    q/k/v projection normalizes it in its kernel's load stage (the normed
+    (B, S, d) tensor never reaches HBM) — callers without fusion normalize
+    first and pass ``norm=None``.
     """
     constrain = layers.resolve_constrain(plan, constrain)
     b, s, _ = x.shape
     h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
     lk = dict(backend=cfg.matmul_backend, compute_dtype=x.dtype)
-    q = layers.linear(x, p["wq"], p.get("bq"), **lk).reshape(b, s, h, hd)
-    k = layers.linear(x, p["wk"], p.get("bk"), **lk).reshape(b, s, kv, hd)
-    v = layers.linear(x, p["wv"], p.get("bv"), **lk).reshape(b, s, kv, hd)
+    nk = dict(lk) if norm is None else dict(
+        lk, prologue="rmsnorm", prologue_operands=(norm,),
+        prologue_eps=cfg.norm_eps,
+    )
+    q = layers.linear(x, p["wq"], p.get("bq"), **nk).reshape(b, s, h, hd)
+    k = layers.linear(x, p["wk"], p.get("bk"), **nk).reshape(b, s, kv, hd)
+    v = layers.linear(x, p["wv"], p.get("bv"), **nk).reshape(b, s, kv, hd)
 
     q = layers.apply_rope(q, positions, cfg.rope_theta, tables=rope)
     k = layers.apply_rope(k, positions, cfg.rope_theta, tables=rope)
@@ -182,7 +212,7 @@ def gqa_attention(
     if cache is None:
         out = attention_core(
             q, k, v, positions, positions, kv_chunk=kv_chunk, constrain=constrain,
-            unroll=unroll,
+            unroll=unroll, backend=attn_backend,
         )
         new_cache = None
     else:
@@ -196,7 +226,7 @@ def gqa_attention(
         out = attention_core(
             q, ck, cv, positions, k_pos,
             kv_valid_len=pos + s, kv_chunk=kv_chunk, constrain=constrain,
-            unroll=unroll,
+            unroll=unroll, backend=attn_backend,
         )
         new_cache = {"k": ck, "v": cv, "pos": pos + s}
 
@@ -238,6 +268,9 @@ def mla_attention(
     unroll: bool = False,
     rope=None,                     # precomputed layers.rope_tables (hoisted)
     residual: Optional[jax.Array] = None,  # fused into the out-projection
+    norm: Optional[jax.Array] = None,  # attn_norm gain fused as a prologue
+    attn_backend: Optional[str] = None,  # api.attention backend (prefill only;
+                                         # absorbed decode stays latent-space)
 ) -> Tuple[jax.Array, Optional[Dict]]:
     """DeepSeek-V2 multi-head latent attention.
 
@@ -257,13 +290,19 @@ def mla_attention(
     dn, dr, dv_ = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
     r = cfg.kv_lora_rank
     lk = dict(backend=cfg.matmul_backend, compute_dtype=x.dtype)
+    # fused attn_norm (see gqa_attention): every projection reading x
+    # normalizes it in its kernel's load stage
+    nk = dict(lk) if norm is None else dict(
+        lk, prologue="rmsnorm", prologue_operands=(norm,),
+        prologue_eps=cfg.norm_eps,
+    )
 
-    q = layers.linear(x, p["wq"], **lk).reshape(b, s, h, dn + dr)
+    q = layers.linear(x, p["wq"], **nk).reshape(b, s, h, dn + dr)
     q_nope, q_rope = q[..., :dn], q[..., dn:]
     q_rope = layers.apply_rope(q_rope, positions, cfg.rope_theta, tables=rope)
 
-    c_kv = layers.linear(x, p["w_dkv"], **lk)                               # (B,S,r)
-    k_rope = layers.linear(x, p["w_krope"], **lk)                           # (B,S,dr) shared
+    c_kv = layers.linear(x, p["w_dkv"], **nk)                               # (B,S,r)
+    k_rope = layers.linear(x, p["w_krope"], **nk)                           # (B,S,dr) shared
     k_rope = layers.apply_rope(
         k_rope[:, :, None, :], positions, cfg.rope_theta, tables=rope
     )[:, :, 0, :]
@@ -280,7 +319,8 @@ def mla_attention(
         qc = jnp.concatenate([q_nope, q_rope], -1)
         qc, k, v = constrain(qc, "q_bthd"), constrain(k, "q_bthd"), constrain(v, "q_bthd")
         out = attention_core(qc, k, v, positions, positions, kv_chunk=kv_chunk,
-                             constrain=constrain, unroll=unroll)
+                             constrain=constrain, unroll=unroll,
+                             backend=attn_backend)
         new_cache = None
     else:
         pos = cache["pos"]
@@ -419,6 +459,7 @@ def paged_gqa_attention(
     constrain: Optional[Constrain] = None,
     rope=None,
     residual: Optional[jax.Array] = None,
+    norm: Optional[jax.Array] = None,  # attn_norm gain fused as a prologue
 ) -> Tuple[jax.Array, Dict]:
     """GQA decode against the paged pool: write this token's K/V into its
     slot's block, gather the slot's whole context, attend with per-row valid
@@ -429,9 +470,13 @@ def paged_gqa_attention(
     h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
     bs = cache["k"].shape[1]
     lk = dict(backend=cfg.matmul_backend, compute_dtype=x.dtype)
-    q = layers.linear(x, p["wq"], p.get("bq"), **lk).reshape(b, s, h, hd)
-    k = layers.linear(x, p["wk"], p.get("bk"), **lk).reshape(b, s, kv, hd)
-    v = layers.linear(x, p["wv"], p.get("bv"), **lk).reshape(b, s, kv, hd)
+    nk = dict(lk) if norm is None else dict(
+        lk, prologue="rmsnorm", prologue_operands=(norm,),
+        prologue_eps=cfg.norm_eps,
+    )
+    q = layers.linear(x, p["wq"], p.get("bq"), **nk).reshape(b, s, h, hd)
+    k = layers.linear(x, p["wk"], p.get("bk"), **nk).reshape(b, s, kv, hd)
+    v = layers.linear(x, p["wv"], p.get("bv"), **nk).reshape(b, s, kv, hd)
 
     pos2 = positions[:, None]                                   # (B, 1)
     q = layers.apply_rope(q, pos2, cfg.rope_theta, tables=rope)
@@ -494,6 +539,7 @@ def paged_mla_attention(
     constrain: Optional[Constrain] = None,
     rope=None,
     residual: Optional[jax.Array] = None,
+    norm: Optional[jax.Array] = None,  # attn_norm gain fused as a prologue
 ) -> Tuple[jax.Array, Dict]:
     """Absorbed-form MLA decode against the paged latent pool (the compressed
     c_kv / shared k_rope page exactly like K/V — one row per token)."""
@@ -504,14 +550,18 @@ def paged_mla_attention(
     r = cfg.kv_lora_rank
     bs = cache["c_kv"].shape[1]
     lk = dict(backend=cfg.matmul_backend, compute_dtype=x.dtype)
+    nk = dict(lk) if norm is None else dict(
+        lk, prologue="rmsnorm", prologue_operands=(norm,),
+        prologue_eps=cfg.norm_eps,
+    )
 
-    q = layers.linear(x, p["wq"], **lk).reshape(b, s, h, dn + dr)
+    q = layers.linear(x, p["wq"], **nk).reshape(b, s, h, dn + dr)
     q_nope, q_rope = q[..., :dn], q[..., dn:]
     pos2 = positions[:, None]
     q_rope = layers.apply_rope(q_rope, pos2, cfg.rope_theta, tables=rope)
 
-    c_kv = layers.linear(x, p["w_dkv"], **lk)                   # (B, 1, r)
-    k_rope = layers.linear(x, p["w_krope"], **lk)               # (B, 1, dr)
+    c_kv = layers.linear(x, p["w_dkv"], **nk)                   # (B, 1, r)
+    k_rope = layers.linear(x, p["w_krope"], **nk)               # (B, 1, dr)
     k_rope = layers.apply_rope(
         k_rope[:, :, None, :], pos2, cfg.rope_theta, tables=rope
     )[:, :, 0, :]

@@ -55,8 +55,11 @@ def linear(
     compute_dtype=jnp.bfloat16,
     epilogue: Optional[str] = None,
     epilogue_operands=(),
+    prologue: Optional[str] = None,
+    prologue_operands=(),
+    prologue_eps: float = 1e-5,
 ) -> jax.Array:
-    """``epilogue(x @ W)`` through the registered matmul backend.
+    """``epilogue(prologue(x) @ W)`` through the registered matmul backend.
 
     The output width comes from the weight itself (``DipWeight.d_out`` for
     permutated storage — the padding bookkeeping lives in the type).  A
@@ -70,6 +73,11 @@ def linear(
     rides the epilogue path — fused into the kernel flush on backends that
     support it, applied in the same f32 epilogue arithmetic otherwise — so
     there is no per-call output-sized ``b.astype`` copy on either path.
+
+    ``prologue="rmsnorm"`` fuses the pre-projection RMSNorm into the
+    kernel's x-block load (``prologue_operands=(gain,)``, ``prologue_eps``
+    the norm epsilon) — same arithmetic as ``rms_norm(x, gain) @ W``, one
+    kernel launch on backends that fuse it, decomposed elsewhere.
     """
     x = x.astype(compute_dtype)
 
@@ -88,7 +96,9 @@ def linear(
             )
         operands = (b,) + operands
     return api.matmul(
-        x, w, backend=backend, epilogue=epilogue, epilogue_operands=operands
+        x, w, backend=backend, epilogue=epilogue, epilogue_operands=operands,
+        prologue=prologue, prologue_operands=tuple(prologue_operands),
+        prologue_eps=prologue_eps,
     )
 
 
@@ -141,13 +151,31 @@ def apply_rope(
 
 
 def cross_entropy_loss(
-    logits: jax.Array, labels: jax.Array, *, z_loss: float = 1e-4
+    logits: jax.Array,
+    labels: jax.Array,
+    *,
+    z_loss: float = 1e-4,
+    mask: Optional[jax.Array] = None,
+    ignore_index: int = -100,
 ) -> jax.Array:
-    """Token-mean cross entropy with an optional z-loss stabilizer."""
+    """Valid-token-mean cross entropy with an optional z-loss stabilizer.
+
+    Tokens whose label equals ``ignore_index`` (the -100 convention, used
+    for padding and prompt tokens) and tokens zeroed by ``mask`` are
+    excluded from both the mean and the gradient; the divisor is the count
+    of valid tokens, not the batch size.  With every token valid this is
+    exactly the historical unmasked mean.  ``kernels.lm_head_ce`` honours
+    the same contract without materializing the logits.
+    """
     logits = logits.astype(jnp.float32)
+    valid = labels != ignore_index
+    if mask is not None:
+        valid = valid & (mask != 0)
+    safe = jnp.where(valid, labels, 0)  # ignore_index would be a bad gather
     logz = jax.nn.logsumexp(logits, axis=-1)
-    label_logits = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    label_logits = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
     loss = logz - label_logits
     if z_loss:
         loss = loss + z_loss * jnp.square(logz)
-    return jnp.mean(loss)
+    loss = jnp.where(valid, loss, 0.0)
+    return jnp.sum(loss) / jnp.maximum(jnp.sum(valid.astype(jnp.float32)), 1.0)

@@ -37,6 +37,7 @@ __all__ = ["moe_ffn", "dense_ffn", "moe_capacity"]
 def dense_ffn(
     x: jax.Array, p: Dict, cfg, *, plan=None,
     constrain: Optional[Constrain] = None, residual: jax.Array = None,
+    norm: Optional[jax.Array] = None,
 ) -> jax.Array:
     """SwiGLU MLP (dense archs and MoE shared experts).
 
@@ -48,11 +49,18 @@ def dense_ffn(
     pair: the column-parallel gate/up swiglu runs collective-free and the
     row-parallel down-projection pays the block's single psum.
     ``residual`` fuses the block's skip connection into the down-projection
-    the same way.
+    the same way.  ``norm`` takes the pre-FFN RMSNorm gain when the backend
+    fuses prologues: x arrives UN-normalized and the swiglu dispatch
+    normalizes it in its load stage — rmsnorm + gate + up + silu·mul in ONE
+    kernel launch.
     """
     constrain = layers.resolve_constrain(plan, constrain)
     lk = dict(backend=cfg.matmul_backend, compute_dtype=x.dtype)
-    h = layers.linear(x, (p["w_gate"], p["w_up"]), epilogue="swiglu", **lk)
+    gk = dict(lk) if norm is None else dict(
+        lk, prologue="rmsnorm", prologue_operands=(norm,),
+        prologue_eps=cfg.norm_eps,
+    )
+    h = layers.linear(x, (p["w_gate"], p["w_up"]), epilogue="swiglu", **gk)
     h = constrain(h, "ffn_hidden")
     if residual is not None:
         return layers.linear(h, p["w_down"], epilogue="residual",

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import api
+from repro.kernels import lm_head_ce
 from repro.models import attention, layers, moe, ssm
 
 Constrain = Callable[[jax.Array, str], jax.Array]
@@ -255,9 +256,23 @@ def init_params(key: jax.Array, cfg) -> Dict[str, Any]:
 
 
 # ---------------------------------------------------------------- forward ---
+def _fuses_rmsnorm(cfg) -> bool:
+    """Whether the configured backend fuses the RMSNorm prologue into its
+    kernels' load stage (``api.backend_prologues``).  When it does, the
+    blocks hand the UN-normalized residual stream plus the norm gain to the
+    projections and the normed (B, S, d) tensor never round-trips HBM; when
+    it does not, the blocks normalize up front exactly as before (passing
+    the prologue anyway would decompose to one rms_norm PER projection)."""
+    return "rmsnorm" in api.get_backend(cfg.matmul_backend).prologues
+
+
 def _transformer_block(x, lp, cfg, *, positions, rope, cache, kv_chunk,
-                       constrain, unroll=False):
-    attn_in = layers.rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+                       constrain, unroll=False, attn_backend=None):
+    fuse_norm = _fuses_rmsnorm(cfg)
+    attn_in, attn_g = (
+        (x, lp["attn_norm"]) if fuse_norm
+        else (layers.rms_norm(x, lp["attn_norm"], cfg.norm_eps), None)
+    )
     # mid-block residual fused into the attention out-projection's flush
     # (one HBM write instead of write + re-read + add); the fused result is
     # left to propagation like the explicit add was (constraining it forces
@@ -266,15 +281,23 @@ def _transformer_block(x, lp, cfg, *, positions, rope, cache, kv_chunk,
     x, new_cache = attn(
         attn_in, lp, cfg, positions=positions, cache=cache,
         kv_chunk=kv_chunk, constrain=constrain, unroll=unroll,
-        rope=rope, residual=x,
+        rope=rope, residual=x, norm=attn_g, attn_backend=attn_backend,
     )
-    ffn_in = layers.rms_norm(x, lp["ffn_norm"], cfg.norm_eps)
     if cfg.is_moe:
+        # the router and the experts both read the normed stream; MoE keeps
+        # the explicit norm (fusing it into each expert dispatch would
+        # recompute it per projection)
+        ffn_in = layers.rms_norm(x, lp["ffn_norm"], cfg.norm_eps)
         f, aux = moe.moe_ffn(ffn_in, lp, cfg, constrain=constrain)
         x = x + f
     else:
+        ffn_in, ffn_g = (
+            (x, lp["ffn_norm"]) if fuse_norm
+            else (layers.rms_norm(x, lp["ffn_norm"], cfg.norm_eps), None)
+        )
         # skip connection fused into the down-projection
-        x = moe.dense_ffn(ffn_in, lp, cfg, constrain=constrain, residual=x)
+        x = moe.dense_ffn(ffn_in, lp, cfg, constrain=constrain, residual=x,
+                          norm=ffn_g)
         aux = jnp.zeros((), jnp.float32)
     # the scan carry is saved per layer for backward — constraining it keeps
     # the saved residuals in the sequence-sharded layout (16x less memory)
@@ -304,6 +327,14 @@ def forward(
                                                # launch/dryrun.py probe logic)
     logits_positions: str = "all",             # "all" | "last" — serving prefill
                                                # needs only the next-token logits
+    return_hidden: bool = False,               # skip the lm_head: return the
+                                               # final-normed hidden states for
+                                               # the fused lm_head+CE loss
+                                               # (kernels.lm_head_ce)
+    attn_backend: Optional[str] = None,        # api.attention backend for the
+                                               # attention core ("flash" routes
+                                               # serving prefill through the
+                                               # fused kernel; forward-only)
 ) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
     """Returns (logits, new_cache, aux_loss).
 
@@ -327,7 +358,7 @@ def forward(
 
     if cfg.ssm_state:
         x, new_layer_caches = _scan_mamba(params, cfg, x, cache, remat, constrain,
-                                          unroll, kv_chunk)
+                                          unroll, kv_chunk, attn_backend)
         if cfg.is_hybrid:
             pass  # handled inside _scan_mamba
         aux_total = jnp.zeros((), jnp.float32)
@@ -346,6 +377,7 @@ def forward(
             x, new_cache, aux_i = _transformer_block(
                 x, lp, cfg, positions=positions, rope=rope, cache=lcache,
                 kv_chunk=kv_chunk, constrain=constrain, unroll=unroll,
+                attn_backend=attn_backend,
             )
             if new_cache is not None:
                 new_cache = _strip_pos(new_cache)
@@ -363,6 +395,19 @@ def forward(
         # serving prefill: one row through the lm_head instead of S rows —
         # removes the (B, S, V) logits and their gathers (§Perf pair 3)
         x = x[:, -1:]
+
+    new_cache = None
+    if cache is not None:
+        new_cache = dict(cache)
+        new_cache["layers"] = new_layer_caches
+        new_cache["pos"] = cache["pos"] + s
+
+    if return_hidden:
+        # fused lm_head+CE training path: the caller feeds these hidden
+        # states straight into kernels.lm_head_ce, so the (B, S, V) logits
+        # are never formed at all
+        return x, new_cache, aux_total
+
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     if cfg.tie_embeddings:
         logits = jnp.matmul(
@@ -378,16 +423,11 @@ def forward(
         lane = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
         logits = jnp.where(lane < cfg.vocab_size, logits, -1e30)
     logits = constrain(logits, "logits")
-
-    new_cache = None
-    if cache is not None:
-        new_cache = dict(cache)
-        new_cache["layers"] = new_layer_caches
-        new_cache["pos"] = cache["pos"] + s
     return logits, new_cache, aux_total
 
 
-def _scan_mamba(params, cfg, x, cache, remat, constrain, unroll=False, kv_chunk=0):
+def _scan_mamba(params, cfg, x, cache, remat, constrain, unroll=False,
+                kv_chunk=0, attn_backend=None):
     """Scan over mamba blocks; hybrid: shared attn applied per superblock."""
     lp_all = params["layers"]
     lcaches = cache["layers"] if cache is not None else None
@@ -430,17 +470,26 @@ def _scan_mamba(params, cfg, x, cache, remat, constrain, unroll=False, kv_chunk=
     )
     acache = lcaches["attn"] if lcaches is not None else None
 
+    fuse_norm = _fuses_rmsnorm(cfg)
+
     def shared_block(x, sc):
         if sc is not None:
             sc = dict(sc, pos=pos_now)
-        attn_in = layers.rms_norm(x, shared["attn_norm"], cfg.norm_eps)
+        attn_in, attn_g = (
+            (x, shared["attn_norm"]) if fuse_norm
+            else (layers.rms_norm(x, shared["attn_norm"], cfg.norm_eps), None)
+        )
         x, new_sc = attention.gqa_attention(
             attn_in, shared, cfg, positions=positions, cache=sc,
             kv_chunk=kv_chunk, constrain=constrain, unroll=unroll,
-            rope=rope, residual=x,
+            rope=rope, residual=x, norm=attn_g, attn_backend=attn_backend,
         )
-        ffn_in = layers.rms_norm(x, shared["ffn_norm"], cfg.norm_eps)
-        x = moe.dense_ffn(ffn_in, shared, cfg, constrain=constrain, residual=x)
+        ffn_in, ffn_g = (
+            (x, shared["ffn_norm"]) if fuse_norm
+            else (layers.rms_norm(x, shared["ffn_norm"], cfg.norm_eps), None)
+        )
+        x = moe.dense_ffn(ffn_in, shared, cfg, constrain=constrain, residual=x,
+                          norm=ffn_g)
         return x, (_strip_pos(new_sc) if new_sc is not None else None)
 
     def superblock(x, xs):
@@ -581,21 +630,32 @@ def paged_decode_step_fn(cfg, *, plan=None, constrain: Optional[Constrain] = Non
             attn = (attention.paged_mla_attention if cfg.use_mla
                     else attention.paged_gqa_attention)
 
+            fuse_norm = _fuses_rmsnorm(cfg)
+
             def block(x, xs):
                 lp, lcache = xs
-                attn_in = layers.rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+                attn_in, attn_g = (
+                    (x, lp["attn_norm"]) if fuse_norm
+                    else (layers.rms_norm(x, lp["attn_norm"], cfg.norm_eps),
+                          None)
+                )
                 x, new_cache = attn(
                     attn_in, lp, cfg, positions=positions, cache=lcache,
                     block_tables=block_tables, kv_quant=kvq,
-                    constrain=constrain, rope=rope, residual=x,
+                    constrain=constrain, rope=rope, residual=x, norm=attn_g,
                 )
-                ffn_in = layers.rms_norm(x, lp["ffn_norm"], cfg.norm_eps)
                 if cfg.is_moe:
+                    ffn_in = layers.rms_norm(x, lp["ffn_norm"], cfg.norm_eps)
                     f, _ = moe.moe_ffn(ffn_in, lp, cfg, constrain=constrain)
                     x = x + f
                 else:
+                    ffn_in, ffn_g = (
+                        (x, lp["ffn_norm"]) if fuse_norm
+                        else (layers.rms_norm(x, lp["ffn_norm"], cfg.norm_eps),
+                              None)
+                    )
                     x = moe.dense_ffn(ffn_in, lp, cfg, constrain=constrain,
-                                      residual=x)
+                                      residual=x, norm=ffn_g)
                 return constrain(x, "act_btd"), new_cache
 
             x, new_layer_caches = jax.lax.scan(
@@ -657,15 +717,24 @@ def _paged_scan_mamba(params, cfg, x, cache, positions, block_tables, kvq,
     )
     acache = lcaches["attn"]
 
+    fuse_norm = _fuses_rmsnorm(cfg)
+
     def shared_block(x, sc):
-        attn_in = layers.rms_norm(x, shared["attn_norm"], cfg.norm_eps)
+        attn_in, attn_g = (
+            (x, shared["attn_norm"]) if fuse_norm
+            else (layers.rms_norm(x, shared["attn_norm"], cfg.norm_eps), None)
+        )
         x, new_sc = attention.paged_gqa_attention(
             attn_in, shared, cfg, positions=positions, cache=sc,
             block_tables=block_tables, kv_quant=kvq,
-            constrain=constrain, rope=rope, residual=x,
+            constrain=constrain, rope=rope, residual=x, norm=attn_g,
         )
-        ffn_in = layers.rms_norm(x, shared["ffn_norm"], cfg.norm_eps)
-        x = moe.dense_ffn(ffn_in, shared, cfg, constrain=constrain, residual=x)
+        ffn_in, ffn_g = (
+            (x, shared["ffn_norm"]) if fuse_norm
+            else (layers.rms_norm(x, shared["ffn_norm"], cfg.norm_eps), None)
+        )
+        x = moe.dense_ffn(ffn_in, shared, cfg, constrain=constrain, residual=x,
+                          norm=ffn_g)
         return x, new_sc
 
     def superblock(x, xs):
@@ -686,19 +755,61 @@ def _paged_scan_mamba(params, cfg, x, cache, positions, block_tables, kvq,
 
 
 # ------------------------------------------------------------- objectives ---
+def _natural_head(params, cfg):
+    """The lm_head as a natural (D, padded_vocab) array for the fused loss."""
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    if isinstance(head, api.QuantizedDipWeight):
+        return head.to_natural(jnp.float32)
+    if isinstance(head, api.DipWeight):
+        return head.to_natural()
+    return head
+
+
 def loss_fn(params, cfg, batch, *, plan=None, constrain: Optional[Constrain] = None,
-            unroll: bool = False, kv_chunk: int = 0) -> jax.Array:
+            unroll: bool = False, kv_chunk: int = 0,
+            fused_ce: Optional[bool] = None) -> jax.Array:
+    """Next-token cross entropy (+ router aux).  ``batch["loss_mask"]``
+    (optional, (B, S), nonzero = train on this position) and the -100
+    ``ignore_index`` convention in ``labels`` both exclude tokens from the
+    loss mean and gradient.
+
+    ``fused_ce=None`` auto-selects the fused lm_head+cross-entropy kernel
+    (``kernels.lm_head_ce``) whenever no sharding plan / constrain hook
+    needs to see the logits: the (B, S, V) logits then never reach HBM in
+    either direction.  Pass ``False`` to force the unfused path (oracle for
+    parity tests), ``True`` to force fusion.
+    """
+    mask = batch.get("loss_mask")
+    shift_mask = None if mask is None else mask[:, 1:]
+    if fused_ce is None:
+        fused_ce = plan is None and constrain is None
+    if fused_ce:
+        hidden, _, aux = forward(
+            params, cfg,
+            tokens=batch.get("tokens"), embeddings=batch.get("embeddings"),
+            plan=plan, constrain=constrain, unroll=unroll, kv_chunk=kv_chunk,
+            return_hidden=True,
+        )
+        loss = lm_head_ce.fused_cross_entropy_loss(
+            hidden[:, :-1], _natural_head(params, cfg),
+            batch["labels"][:, 1:], mask=shift_mask,
+            vocab_size=cfg.vocab_size, interpret=api.default_interpret(),
+        )
+        return loss + aux
     logits, _, aux = forward(
         params, cfg,
         tokens=batch.get("tokens"), embeddings=batch.get("embeddings"),
         plan=plan, constrain=constrain, unroll=unroll, kv_chunk=kv_chunk,
     )
-    loss = layers.cross_entropy_loss(logits[:, :-1], batch["labels"][:, 1:])
+    loss = layers.cross_entropy_loss(
+        logits[:, :-1], batch["labels"][:, 1:], mask=shift_mask,
+    )
     return loss + aux
 
 
 def train_step_fn(cfg, optimizer, *, plan=None, constrain: Optional[Constrain] = None,
-                  unroll: bool = False, kv_chunk: int = 0, microbatch: int = 1):
+                  unroll: bool = False, kv_chunk: int = 0, microbatch: int = 1,
+                  fused_ce: Optional[bool] = None):
     """Returns step(state, batch) -> (state, metrics).  Pure; jit at call site.
 
     ``plan`` carries the distribution decisions (see :func:`forward`).
@@ -711,7 +822,8 @@ def train_step_fn(cfg, optimizer, *, plan=None, constrain: Optional[Constrain] =
     def grad_of(params, batch):
         return jax.value_and_grad(
             lambda p: loss_fn(p, cfg, batch, plan=plan, constrain=constrain,
-                              unroll=unroll, kv_chunk=kv_chunk)
+                              unroll=unroll, kv_chunk=kv_chunk,
+                              fused_ce=fused_ce)
         )(params)
 
     def step(state, batch):
@@ -752,13 +864,17 @@ def train_step_fn(cfg, optimizer, *, plan=None, constrain: Optional[Constrain] =
 
 
 def decode_step_fn(cfg, *, plan=None, constrain: Optional[Constrain] = None,
-                   unroll: bool = False):
-    """Returns serve_step(params, cache, tokens) -> (logits, cache)."""
+                   unroll: bool = False, attn_backend: Optional[str] = None):
+    """Returns serve_step(params, cache, tokens) -> (logits, cache).
+
+    ``attn_backend="flash"`` routes the attention core through the fused
+    ``api.attention`` kernel — the serving chunked-prefill path (forward
+    only, so decode/prefill steps qualify; training does not)."""
 
     def step(params, cache, tokens):
         logits, new_cache, _ = forward(
             params, cfg, tokens=tokens, cache=cache, plan=plan,
-            constrain=constrain, unroll=unroll,
+            constrain=constrain, unroll=unroll, attn_backend=attn_backend,
         )
         return logits, new_cache
 

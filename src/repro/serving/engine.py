@@ -104,7 +104,14 @@ class Engine:
         )
 
         self._decode = jax.jit(tf_model.paged_decode_step_fn(cfg, plan=plan))
-        self._prefill_fwd = jax.jit(tf_model.decode_step_fn(cfg, plan=plan))
+        # chunked prefill routes through the fused flash-attention kernel
+        # (api.attention backend "flash") whenever the logits stay local: the
+        # kernel takes the chunk's cache offset as a *traced* q_offset, so
+        # every chunk of every prompt shares one compiled shape.  Sharded
+        # plans keep the GSPMD online-softmax path (the kernel is per-shard).
+        self._prefill_fwd = jax.jit(tf_model.decode_step_fn(
+            cfg, plan=plan, attn_backend="flash" if plan is None else None,
+        ))
         self._import = jax.jit(kvc.make_import_fn(
             cfg, num_blocks, self.block_size, self.kv_quant
         ))

@@ -23,11 +23,16 @@ import numpy as np
 __all__ = ["sample_tokens", "gumbel_from_uniform"]
 
 _EPS = 1e-20
+# largest double strictly below 1.0: the old `1.0 - 1e-20` upper clip rounds
+# to exactly 1.0 in float64, so a boundary uniform of 1.0 sailed through to
+# -log(-log(1.0)) = +inf — one inf noise lane then hijacks the argmax (and
+# lands on a -inf-masked token as inf + -inf = nan)
+_ONE_BELOW = np.nextafter(1.0, 0.0)
 
 
 def gumbel_from_uniform(u: np.ndarray) -> np.ndarray:
     """Standard Gumbel(0,1) noise from uniforms in [0, 1)."""
-    return -np.log(-np.log(np.clip(u, _EPS, 1.0 - _EPS)))
+    return -np.log(-np.log(np.clip(u, _EPS, _ONE_BELOW)))
 
 
 def sample_tokens(

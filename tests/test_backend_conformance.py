@@ -668,3 +668,154 @@ def test_contraction_validation_matches_float_path():
             jnp.ones((4, 100), jnp.float32),
             api.quant.quantize(jnp.ones((2, 100, 130), jnp.float32), "int8"),
         )
+
+
+# -------------------------------------------------------------- prologues ---
+# the mirror of the epilogue rows for the load-stage fusion: rmsnorm folded
+# into the kernels' x-block load.  int8 activations are excluded for the
+# same reason as epilogues (the normalized block is float arithmetic).
+PROLOGUE_DTYPES = EPILOGUE_DTYPES
+
+
+def test_prologue_capability_flags():
+    """Every tiled builtin fuses the full prologue set at its load stage;
+    xla declares none and relies on decomposition."""
+    for backend in CONFORMANCE:
+        be = api.get_backend(backend)
+        if be.tiled:
+            assert set(api.backend_prologues(backend)) == set(api.PROLOGUES), backend
+        else:
+            assert set(api.backend_prologues(backend)) == {"none"}, backend
+
+
+def test_prologue_registration_rules():
+    """Non-tiled, non-sharded backends cannot declare fused prologues (no
+    load stage to fuse into); unknown prologue names are rejected at
+    dispatch, not silently unfused."""
+    with pytest.raises(ValueError, match="cannot fuse prologues"):
+        api.register_backend("bad_pro", lambda *a, **k: None,
+                             layout="natural", tiled=False,
+                             prologues=("rmsnorm",))
+    x = jnp.ones((4, 64), jnp.float32)
+    w = jnp.ones((64, 64), jnp.float32)
+    with pytest.raises(ValueError, match="unknown prologue"):
+        api.matmul(x, w, prologue="layernorm")
+    with pytest.raises(ValueError, match="operand"):
+        api.matmul(x, w, prologue="rmsnorm")  # missing gain
+
+
+@pytest.mark.parametrize(
+    "backend,dtype",
+    [(b, d) for b, dts in PROLOGUE_DTYPES.items() for d in dts],
+)
+def test_backend_prologue_matches_decomposed(backend, dtype):
+    """Fused rmsnorm prologue == rms_norm(x, g) -> matmul through the SAME
+    backend, on an aligned and a ragged shape.  xla's rows prove the
+    decomposition path; the tiled rows prove the in-kernel load rescale
+    (including the ragged-K case, where the mean's divisor must stay the
+    logical width, not the padded one)."""
+    from repro.kernels import prologue as prologue_lib
+
+    for m, k, n, seed in ((8, 64, 64, 0), (17, 100, 130, 1)):
+        r = np.random.default_rng(seed)
+        x = jnp.asarray(r.normal(0, 1, (m, k)).astype(np.float32)).astype(dtype)
+        w = jnp.asarray(r.normal(0, 1, (k, n)).astype(np.float32)).astype(dtype)
+        g = jnp.asarray(r.normal(1, 0.1, (k,)).astype(np.float32))
+        wobj = _weight_for(backend, w)
+        got = api.matmul(x, wobj, backend=backend,
+                         prologue="rmsnorm", prologue_operands=(g,))
+        xn = prologue_lib.apply("rmsnorm", x, g)
+        want = api.matmul(xn, wobj, backend=backend)
+        assert got.shape == (m, n)
+        if api.get_backend(backend).layout == "dip_q":
+            tol = (dict(atol=2e-3, rtol=2e-3) if dtype == "float32"
+                   else dict(atol=0.1, rtol=0.05))
+        else:
+            tol = TOL[dtype]
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32), **tol,
+            err_msg=f"{backend}/{dtype} {m}x{k}x{n}",
+        )
+
+
+def test_prologue_epilogue_composition_single_launch():
+    """rmsnorm prologue + bias_silu epilogue + the matmul is still exactly
+    ONE pallas launch on the fused backends, and matches the three-step
+    decomposed composition."""
+    m, k, n = 16, 100, 130
+    r = np.random.default_rng(47)
+    x = jnp.asarray(r.normal(0, 1, (m, k)).astype(np.float32))
+    w = jnp.asarray(r.normal(0, 1, (k, n)).astype(np.float32))
+    g = jnp.asarray(r.normal(1, 0.1, (k,)).astype(np.float32))
+    bias = jnp.asarray(r.normal(0, 1, (n,)).astype(np.float32))
+    dw = api.DipWeight.from_natural(w)
+
+    def fused(xx):
+        return api.matmul(xx, dw, backend="pallas_dip",
+                          prologue="rmsnorm", prologue_operands=(g,),
+                          epilogue="bias_silu", epilogue_operands=(bias,))
+
+    def decomposed(xx):
+        return api.matmul(xx, dw, backend="xla",
+                          prologue="rmsnorm", prologue_operands=(g,),
+                          epilogue="bias_silu", epilogue_operands=(bias,))
+
+    np.testing.assert_allclose(np.asarray(fused(x)), np.asarray(decomposed(x)),
+                               atol=2e-3, rtol=2e-3)
+
+    def count_pallas(fn, *args):
+        closed = jax.make_jaxpr(fn)(*args)
+
+        def walk(jx):
+            return sum(
+                (eqn.primitive.name == "pallas_call")
+                + sum(walk(sub) for sub in jax.core.jaxprs_in_params(eqn.params))
+                for eqn in jx.eqns
+            )
+
+        return walk(closed.jaxpr)
+
+    assert count_pallas(fused, x) == 1
+    assert count_pallas(decomposed, x) == 0
+
+
+@pytest.mark.parametrize("backend", sorted(CONFORMANCE))
+def test_prologue_gradients_match_decomposed_xla(backend):
+    """d/dx, d/d(gain), and d/dw (float backends) through the FUSED
+    rmsnorm-prologue kernel must match the natively-differentiated
+    decomposed XLA path — the recompute VJP re-derives the normalized block
+    from the raw activations, and this test keeps that recompute exact."""
+    m, k, n = 16, 100, 130
+    r = np.random.default_rng(53)
+    c = jnp.asarray(r.normal(0, 1, (m, n)).astype(np.float32))
+    x = jnp.asarray(r.normal(0, 1, (m, k)).astype(np.float32))
+    w = jnp.asarray(r.normal(0, 1, (k, n)).astype(np.float32))
+    g = jnp.asarray(r.normal(1, 0.1, (k,)).astype(np.float32))
+    wobj = _weight_for(backend, w)
+    be = api.get_backend(backend)
+    ref_w = api.quant.dequantize(wobj) if be.layout == "dip_q" else wobj
+
+    def loss(backend_name, wgt):
+        def f(xx, gg):
+            out = api.matmul(xx, wgt, backend=backend_name,
+                             prologue="rmsnorm", prologue_operands=(gg,))
+            return jnp.sum(out * c)
+        return f
+
+    got = jax.grad(loss(backend, wobj), argnums=(0, 1))(x, g)
+    want = jax.grad(loss("xla", ref_w), argnums=(0, 1))(x, g)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=1e-3, rtol=1e-3,
+            err_msg=f"{backend} prologue grad",
+        )
+
+    if be.layout in ("natural", "dip") and be.tiled:
+        gw = jax.grad(lambda wgt: loss(backend, wgt)(x, g))(wobj)
+        gw_ref = jax.grad(lambda wgt: loss("xla", wgt)(x, g))(wobj)
+        for a, b in zip(jax.tree_util.tree_leaves(gw),
+                        jax.tree_util.tree_leaves(gw_ref)):
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), atol=1e-3, rtol=1e-3,
+                err_msg=f"{backend} prologue weight grad",
+            )

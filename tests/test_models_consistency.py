@@ -154,3 +154,91 @@ def test_quantized_mla_matches_float_within_quant_error():
     assert err < 0.5, f"quantized MLA diverged from float: max|dlogit|={err}"
     agree = (np.asarray(lq).argmax(-1) == np.asarray(lf).argmax(-1)).mean()
     assert agree > 0.9
+
+
+def test_cross_entropy_masking_contract():
+    """Regression (pre-PR bug): ``layers.cross_entropy_loss`` averaged over
+    every position — padding included.  Now: a fully-valid batch still
+    equals the historical unmasked mean EXACTLY, while ``mask`` and the
+    -100 ``ignore_index`` exclude tokens from both the sum and the divisor."""
+    from repro.models import layers
+
+    r = np.random.default_rng(19)
+    b, s, v = 2, 12, 32
+    logits = jnp.asarray(r.normal(size=(b, s, v)).astype(np.float32))
+    labels = jnp.asarray(r.integers(0, v, (b, s)).astype(np.int32))
+
+    # 1. all-valid == the historical unmasked mean, bit for bit
+    base = layers.cross_entropy_loss(logits, labels)
+    np.testing.assert_array_equal(
+        np.asarray(layers.cross_entropy_loss(
+            logits, labels, mask=jnp.ones((b, s), jnp.int32))),
+        np.asarray(base),
+    )
+
+    # 2. masked positions drop out of sum AND divisor: the masked loss over
+    # the full batch == the unmasked loss over only the kept positions
+    mask = jnp.asarray((r.random((b, s)) > 0.4).astype(np.int32))
+    got = layers.cross_entropy_loss(logits, labels, mask=mask)
+    keep = np.asarray(mask).astype(bool).reshape(-1)
+    want = layers.cross_entropy_loss(
+        logits.reshape(-1, v)[keep], labels.reshape(-1)[keep])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-6, rtol=1e-6)
+
+    # 3. ignore_index behaves exactly like mask==0 (and never gathers OOB)
+    lab_ig = labels.at[0, :3].set(-100)
+    m_eq = jnp.ones((b, s), jnp.int32).at[0, :3].set(0)
+    np.testing.assert_allclose(
+        np.asarray(layers.cross_entropy_loss(logits, lab_ig)),
+        np.asarray(layers.cross_entropy_loss(logits, labels, mask=m_eq)),
+        atol=1e-6, rtol=1e-6,
+    )
+
+    # 4. gradients at excluded positions are exactly zero
+    g = jax.grad(lambda lg: layers.cross_entropy_loss(lg, labels, mask=mask))(logits)
+    np.testing.assert_array_equal(
+        np.asarray(g)[~np.asarray(mask).astype(bool)], 0.0)
+
+    # 5. everything excluded: finite zero, not 0/0
+    assert float(layers.cross_entropy_loss(
+        logits, labels, mask=jnp.zeros((b, s), jnp.int32))) == 0.0
+
+
+def test_loss_fn_fused_matches_unfused():
+    """The fused lm_head+CE path (``fused_ce=True``) must match the unfused
+    logits path in loss AND gradients, with and without a loss_mask —
+    including through DiP weight storage (the natural-head extraction)."""
+    for dip in (False, True):
+        cfg = _dense_cfg(**({"dip_weights": True} if dip else {}))
+        params = tf_model.init_params(KEY, cfg)  # DipWeight storage when dip
+        toks = jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)
+        mask = (jax.random.uniform(KEY, (2, 16)) > 0.3).astype(jnp.int32)
+        for batch in ({"tokens": toks, "labels": toks},
+                      {"tokens": toks, "labels": toks, "loss_mask": mask}):
+            lf, gf = jax.value_and_grad(
+                lambda p: tf_model.loss_fn(p, cfg, batch, fused_ce=True))(params)
+            lu, gu = jax.value_and_grad(
+                lambda p: tf_model.loss_fn(p, cfg, batch, fused_ce=False))(params)
+            np.testing.assert_allclose(float(lf), float(lu), atol=2e-5, rtol=2e-5)
+            for a, b in zip(jax.tree_util.tree_leaves(gf),
+                            jax.tree_util.tree_leaves(gu)):
+                np.testing.assert_allclose(
+                    np.asarray(a), np.asarray(b), atol=2e-3, rtol=2e-3)
+
+
+def test_flash_prefill_matches_full_forward():
+    """decode_step_fn(attn_backend='flash') — the serving chunked-prefill
+    route through the attention registry — must match the dense forward."""
+    cfg = _dense_cfg()
+    params = tf_model.init_params(KEY, cfg)
+    toks = jax.random.randint(KEY, (2, 21), 0, cfg.vocab_size)
+    dstep = tf_model.decode_step_fn(cfg, attn_backend="flash")
+    cache = tf_model.init_cache(cfg, 2, 32)
+    _, cache = dstep(params, cache, toks[:, :13])
+    l1, cache = dstep(params, cache, toks[:, 13:17])
+    l2, cache = dstep(params, cache, toks[:, 17:21])
+    full, _, _ = tf_model.forward(params, cfg, tokens=toks)
+    np.testing.assert_allclose(
+        np.asarray(l2), np.asarray(full[:, 17:21]), atol=3e-3, rtol=1e-3)
+    assert int(cache["pos"]) == 21

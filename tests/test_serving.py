@@ -365,3 +365,22 @@ assert len(got) == len(want) == 4, (got, want)
 assert got == want, f"sharded serving diverged: {got} vs {want}"
 print("SHARDED_SERVE_OK")
 """, devices=2)
+
+
+def test_gumbel_boundary_uniform_stays_finite():
+    """Regression (pre-PR bug): the upper clip was ``1.0 - 1e-20``, which IS
+    1.0 in float64 — a boundary uniform of exactly 1.0 produced +inf Gumbel
+    noise that hijacked the argmax (and turned a top-k-masked lane into
+    inf + -inf = nan).  The clip must land strictly below 1.0."""
+    g = sampling.gumbel_from_uniform(np.array([0.0, 0.5, 1.0, np.nextafter(1.0, 2.0)]))
+    assert np.isfinite(g).all(), g
+
+    # end-to-end: one row fed u==1.0 everywhere must still draw from its
+    # top-k set, never a masked lane, never token 0 by nan-argmax accident
+    logits = np.zeros((1, 16), np.float32)
+    logits[0, :4] = 10.0  # only tokens 0-3 are plausible
+    tok = sampling.sample_tokens(
+        logits, temperature=np.ones(1, np.float32),
+        top_k=np.full(1, 4, np.int64), top_p=np.ones(1, np.float32),
+        uniforms=np.ones((1, 16)))
+    assert int(tok[0]) in range(4)

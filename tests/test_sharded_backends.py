@@ -94,6 +94,23 @@ for epilogue in api.EPILOGUES:
                 **TOL[dtype], err_msg=f"{label}/{epilogue}/{dtype}")
 print("PARITY_OK")
 
+# ---- fused rmsnorm prologue across sharded dispatch ----------------------
+# column/fsdp keep the full K local, so the norm fuses into the per-shard
+# kernel; row-parallel splits K and must DECOMPOSE (a shard cannot see the
+# whole row to reduce it) — both must match the single-device fused result.
+g = jnp.asarray(r.normal(1, 0.1, (k,)).astype(np.float32))
+for dtype in ("float32", "bfloat16"):
+    x, wg, _ = inputs("none", dtype)
+    want = api.matmul(x, wrap(wg, None), backend="pallas_dip",
+                      prologue="rmsnorm", prologue_operands=(g,))
+    for backend, plan, label in cases:
+        got = api.matmul(x, wrap(wg, plan), backend=backend,
+                         prologue="rmsnorm", prologue_operands=(g,))
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            **TOL[dtype], err_msg=f"prologue/{label}/{dtype}")
+print("PROLOGUE_OK")
+
 # ---- jaxpr-asserted collective placement ---------------------------------
 x, wg, _ = inputs("none", "float32")
 _, pair, _ = inputs("swiglu", "float32")
@@ -120,6 +137,7 @@ assert c["all_gather"] == 2 and c["psum"] == 0 and c["pallas_call"] == 1, c
 print("COLLECTIVES_OK")
 """, devices=8, timeout=900)
     assert "PARITY_OK" in out and "COLLECTIVES_OK" in out
+    assert "PROLOGUE_OK" in out
 
 
 def test_sharded_backends_quantized_exact_for_int8():
@@ -357,8 +375,10 @@ def test_plan_free_weight_decomposes_to_gspmd():
 def test_sharded_registration_rules():
     assert api.backend_layout("dip_tp") == "sharded"
     assert api.backend_layout("dip_fsdp") == "sharded"
-    # sharded backends declare the full fused-epilogue set
+    # sharded backends declare the full fused-epilogue AND -prologue sets
     assert set(api.backend_epilogues("dip_tp")) == set(api.EPILOGUES)
+    assert set(api.backend_prologues("dip_tp")) == set(api.PROLOGUES)
+    assert set(api.backend_prologues("dip_fsdp")) == set(api.PROLOGUES)
     with pytest.raises(ValueError, match="tiled=False"):
         api.register_backend("bad_sharded", lambda *a, **k: None,
                              layout="sharded", tiled=True)
