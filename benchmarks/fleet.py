@@ -346,6 +346,47 @@ def _column_probe(cfg, plan) -> Dict[str, Any]:
             "collectives": {k: int(counts.get(k, 0)) for k in COLLECTIVES}}
 
 
+def _verify_probe(cfg) -> Dict[str, Any]:
+    """One verified vs unverified dispatch, counted structurally from the
+    jaxpr.  The ABFT audit (repro.reliability; docs/reliability.md) is jnp
+    reductions over the existing output and weight checksums — the contract
+    the fleet schema enforces is that ``verify=True`` adds ZERO extra
+    pallas launches (the <= 1.15x wall-time bound in BENCH_reliability.json
+    follows from this structure)."""
+    import jax.numpy as jnp
+
+    from repro import api
+    from repro.kernels.dip_matmul_sharded import count_collectives
+    from repro.reliability import attach_checksums
+
+    d_in, d_out = cfg.d_model, 4 * api.PERM_TILE
+    rng = np.random.default_rng(5)
+    wn = jnp.asarray(rng.normal(size=(d_in, d_out)).astype(np.float32))
+    be = api.get_backend(cfg.matmul_backend)
+    if cfg.quant_scheme is not None:
+        w = api.quant.quantize(wn, cfg.quant_scheme)
+    elif be.layout == "dip":
+        w = api.DipWeight.from_natural(wn)
+    else:
+        w = wn
+    w = attach_checksums(w)
+    x = jnp.asarray(rng.normal(size=(8, d_in)).astype(np.float32))
+    plain = count_collectives(
+        lambda x: api.matmul(x, w, backend=cfg.matmul_backend), x)
+    def _verified(x):
+        out, report = api.matmul(x, w, backend=cfg.matmul_backend,
+                                 verify=True)
+        # the report's "mode" is a static string — not a JAX type; keeping
+        # the array scalars stops the audit from being DCE'd out of the jaxpr
+        return out, {k: v for k, v in report.items() if k != "mode"}
+
+    ver = count_collectives(_verified, x)
+    pv = int(ver.get("pallas_call", 0))
+    pu = int(plain.get("pallas_call", 0))
+    return {"pallas_calls_unverified": pu, "pallas_calls_verified": pv,
+            "extra_pallas_calls": pv - pu}
+
+
 # ---------------------------------------------------------------------------
 # cell driver
 def run_cell(arch: str, backend: str, sharding: str, *,
@@ -359,7 +400,7 @@ def run_cell(arch: str, backend: str, sharding: str, *,
     cell: Dict[str, Any] = {
         "arch": arch, "backend": backend, "sharding": sharding,
         "effective_backend": effective, "quantization": quant,
-        "stages": {}, "column_probe": None,
+        "stages": {}, "column_probe": None, "verify_probe": None,
         "workload_shapes": {
             k: len(v) for k, v in stage_matmul_shapes(
                 cfg, train_tokens=DIMS["train_batch"] * DIMS["train_seq"],
@@ -391,6 +432,16 @@ def run_cell(arch: str, backend: str, sharding: str, *,
                 "reason": f"{type(e).__name__}: {e}"[:300]}
     if effective in ("dip_tp", "dip_fsdp"):
         cell["column_probe"] = _column_probe(cfg, plans["decode"])
+    if sharding == "gspmd":
+        # the verified-dispatch subset: single-device cells cover every
+        # backend family without re-exec; sharded verify rides the same
+        # wrapper and is structurally identical per shard
+        try:
+            cell["verify_probe"] = _verify_probe(cfg)
+        except Exception as e:                       # noqa: BLE001 — per-cell
+            cell["verify_probe"] = {
+                "status": "failed",
+                "reason": f"{type(e).__name__}: {e}"[:300]}
     return cell
 
 
@@ -496,6 +547,19 @@ def validate_fleet_json(payload: Dict[str, Any]) -> None:
                 errs.append(f"{where}: dip_tp decode must not all_gather "
                             "(columns stay sharded; rows psum)")
 
+        vp = cell.get("verify_probe")
+        if cell["sharding"] == "gspmd":
+            if not isinstance(vp, dict):
+                errs.append(f"{where}: gspmd cell needs a verify_probe")
+            elif vp.get("status") == "failed":
+                errs.append(f"{where}: verify_probe failed "
+                            f"({vp.get('reason', 'no reason')})")
+            elif vp.get("extra_pallas_calls", 0) != 0:
+                errs.append(
+                    f"{where}: verified dispatch added "
+                    f"{vp['extra_pallas_calls']} pallas launches "
+                    "(contract: the ABFT audit launches zero kernels)")
+
     if payload.get("matrix") in ("tiny", "full"):
         for arch, ok in sorted(full_pass.items()):
             if not ok:
@@ -545,6 +609,17 @@ def diff_fleet_json(payload: Dict[str, Any],
                     errs.append(
                         f"{name}.{st}: {k} count regressed "
                         f"{base['collectives'][k]} -> {cur['collectives'][k]}")
+        bvp = cell.get("verify_probe")
+        if isinstance(bvp, dict) and "extra_pallas_calls" in bvp:
+            cvp = other.get("verify_probe")
+            if not isinstance(cvp, dict) or "extra_pallas_calls" not in cvp:
+                errs.append(f"{name}: verify_probe present in baseline "
+                            "but missing/failed now")
+            elif cvp["extra_pallas_calls"] > bvp["extra_pallas_calls"]:
+                errs.append(
+                    f"{name}: verify_probe extra_pallas_calls regressed "
+                    f"{bvp['extra_pallas_calls']} -> "
+                    f"{cvp['extra_pallas_calls']}")
     if errs:
         raise ValueError("fleet regression vs baseline:\n  "
                          + "\n  ".join(errs))

@@ -632,6 +632,12 @@ def validate_bench_json(path) -> dict:
              "row-parallel must record exactly one psum")
         need(by_case["fsdp"]["all_gathers"] == 1,
              "fsdp must record exactly one all_gather per weight")
+    if "reliability" in payload:
+        # fused payloads may embed the ABFT verify-overhead + chaos-smoke
+        # sections; the contracts live with the reliability bench
+        from benchmarks.reliability_bench import validate_reliability_section
+
+        validate_reliability_section(payload["reliability"], need)
     return payload
 
 

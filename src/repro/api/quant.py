@@ -95,7 +95,8 @@ class QuantizedDipWeight:
     tracers, ``ShapeDtypeStruct``s, and shardings through the same container.
     """
 
-    __slots__ = ("data", "scale", "d_in", "d_out", "perm_tile", "scheme", "plan")
+    __slots__ = ("data", "scale", "d_in", "d_out", "perm_tile", "scheme",
+                 "plan", "checksum")
 
     def __init__(
         self,
@@ -106,6 +107,7 @@ class QuantizedDipWeight:
         perm_tile: int = PERM_TILE,
         scheme: str = "int8",
         plan: Any = None,
+        checksum: Any = None,
     ):
         self.data = data
         self.scale = scale
@@ -114,6 +116,9 @@ class QuantizedDipWeight:
         self.perm_tile = int(perm_tile)
         self.scheme = str(scheme)
         self.plan = plan  # hashable WeightPlan or None (static aux data)
+        # optional ABFT checksum child — rides like the scales do (see
+        # repro.reliability.abft); None flattens to an empty subtree
+        self.checksum = checksum
 
     # ------------------------------------------------------------- pytree --
     def tree_flatten_with_keys(self):
@@ -121,13 +126,14 @@ class QuantizedDipWeight:
             (
                 (jax.tree_util.GetAttrKey("data"), self.data),
                 (jax.tree_util.GetAttrKey("scale"), self.scale),
+                (jax.tree_util.GetAttrKey("checksum"), self.checksum),
             ),
             (self.d_in, self.d_out, self.perm_tile, self.scheme, self.plan),
         )
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(children[0], children[1], *aux)
+        return cls(children[0], children[1], *aux, checksum=children[2])
 
     # ------------------------------------------------------------ queries --
     @property
@@ -168,11 +174,14 @@ class QuantizedDipWeight:
         """Dequantized natural-layout weight (inverse permutation + crop)."""
         return self.dequantize(dtype).to_natural()
 
-    def with_data(self, data: Any, scale: Any) -> "QuantizedDipWeight":
-        """Same metadata, different payloads (shardings, specs)."""
+    def with_data(self, data: Any, scale: Any,
+                  checksum: Any = None) -> "QuantizedDipWeight":
+        """Same metadata, different payloads (shardings, specs).  The
+        checksum child does NOT carry over by default — new payloads
+        invalidate it; pass ``checksum=`` to thread a matching one."""
         return QuantizedDipWeight(
             data, scale, self.d_in, self.d_out, self.perm_tile, self.scheme,
-            self.plan,
+            self.plan, checksum,
         )
 
     def with_plan(self, plan: Any) -> "QuantizedDipWeight":
@@ -182,7 +191,15 @@ class QuantizedDipWeight:
             return self
         return QuantizedDipWeight(
             self.data, self.scale, self.d_in, self.d_out, self.perm_tile,
-            self.scheme, plan,
+            self.scheme, plan, self.checksum,
+        )
+
+    def with_checksum(self, checksum: Any) -> "QuantizedDipWeight":
+        """Same payloads, with an ABFT checksum attached (see
+        ``repro.reliability.abft.attach_checksums``)."""
+        return QuantizedDipWeight(
+            self.data, self.scale, self.d_in, self.d_out, self.perm_tile,
+            self.scheme, self.plan, checksum,
         )
 
     def __repr__(self) -> str:

@@ -343,6 +343,12 @@ class MatmulBackend:
     scheme: Optional[str] = None       # quantization scheme (dip_q layouts)
     epilogues: FrozenSet[str] = frozenset({"none"})  # fused-epilogue support
     prologues: FrozenSet[str] = frozenset({"none"})  # fused-prologue support
+    # ABFT capability: True means the backend computes an exact matmul (to
+    # its dtype's rounding), so the output-row-sum probe is mathematically
+    # valid; approximate/sketching plugins register abft=False and
+    # ``matmul(..., verify=...)`` decomposes to the storage-integrity rung
+    # of the ladder for them (see repro.reliability.abft)
+    abft: bool = True
 
 
 _REGISTRY: Dict[str, MatmulBackend] = {}
@@ -369,6 +375,7 @@ def register_backend(
     scheme: Optional[str] = None,
     epilogues: Sequence[str] = ("none",),
     prologues: Sequence[str] = ("none",),
+    abft: bool = True,
     overwrite: bool = False,
 ):
     """Register a matmul backend (usable as a decorator).
@@ -386,7 +393,7 @@ def register_backend(
         return functools.partial(
             register_backend, name, layout=layout, tiled=tiled,
             description=description, scheme=scheme, epilogues=epilogues,
-            prologues=prologues, overwrite=overwrite,
+            prologues=prologues, abft=abft, overwrite=overwrite,
         )
     if layout not in _LAYOUTS:
         raise ValueError(f"layout must be one of {_LAYOUTS}, got {layout!r}")
@@ -441,7 +448,7 @@ def register_backend(
     _REGISTRY[name] = MatmulBackend(
         name=name, layout=layout, fn=fn, tiled=tiled,
         description=description, caller=caller, scheme=scheme,
-        epilogues=epilogue_set, prologues=prologue_set,
+        epilogues=epilogue_set, prologues=prologue_set, abft=abft,
     )
     return fn
 
@@ -762,6 +769,7 @@ def matmul(
     block_n: Optional[int] = None,
     block_k: Optional[int] = None,
     interpret: Optional[bool] = None,
+    verify: Union[bool, str] = False,
 ) -> jax.Array:
     """``epilogue(prologue(x) @ w)`` through a registered backend.
 
@@ -787,6 +795,17 @@ def matmul(
     each x row with ``prologue_eps`` inside the kernel's x-block load, so
     the normalized activations never round-trip HBM.  Backends that do not
     fuse it decompose to ``rms_norm -> matmul`` with identical semantics.
+
+    ``verify`` (default off) turns on ABFT checksum verification
+    (``repro.reliability.abft``; docs/reliability.md): the dispatch runs
+    unchanged and a post-hoc audit checks the output row sums against the
+    weight's precomputed checksum column under a dtype-aware tolerance
+    (``True``/``"auto"`` picks the strongest applicable mode; ``"probe"``
+    demands the full output audit and raises where it is invalid —
+    nonlinear epilogues, fused prologues, or an ``abft=False`` backend —
+    ``"storage"`` pins the weight-integrity rung).  Returns ``(out,
+    report)`` instead of ``out``; the output is **bit-identical** to the
+    unverified dispatch.
     """
     epilogue = epilogue or "none"
     prologue = prologue or "none"
@@ -818,6 +837,30 @@ def matmul(
     if backend is None and isinstance(weights[0], QuantizedDipWeight):
         backend = weights[0].default_backend
     be = get_backend(backend)
+
+    if verify:
+        # verified dispatch = the ordinary dispatch (bit-identical output)
+        # + a post-hoc ABFT audit at the wrapper level, which makes the
+        # probe backend-agnostic: tiled, quantized, sharded and plain-XLA
+        # paths all flow through here.  Lazy import: reliability sits above
+        # the api layer in the dependency order.
+        from repro.reliability import abft as _abft
+
+        out = matmul(
+            x, w, backend=be.name,
+            epilogue=None if epilogue == "none" else epilogue,
+            epilogue_operands=operands,
+            prologue=None if prologue == "none" else prologue,
+            prologue_operands=pro_operands, prologue_eps=prologue_eps,
+            block_m=block_m, block_n=block_n, block_k=block_k,
+            interpret=interpret,
+        )
+        report = _abft.verify_matmul(
+            x, weights, out, epilogue=epilogue, operands=operands,
+            prologue=prologue, backend_abft=be.abft,
+            mode=verify if isinstance(verify, str) else "auto",
+        )
+        return out, report
 
     if prologue != "none":
         _check_prologue_inputs(x, weights, prologue, pro_operands)

@@ -58,26 +58,35 @@ class DipWeight:
     the same container, so the constructor must accept any payload.
     """
 
-    __slots__ = ("data", "d_in", "d_out", "perm_tile", "plan")
+    __slots__ = ("data", "d_in", "d_out", "perm_tile", "plan", "checksum")
 
     def __init__(self, data: Any, d_in: int, d_out: int,
-                 perm_tile: int = PERM_TILE, plan: Any = None):
+                 perm_tile: int = PERM_TILE, plan: Any = None,
+                 checksum: Any = None):
         self.data = data
         self.d_in = int(d_in)
         self.d_out = int(d_out)
         self.perm_tile = int(perm_tile)
         self.plan = plan  # hashable WeightPlan or None (static aux data)
+        # optional ABFT checksum child (repro.reliability.abft.AbftChecksum):
+        # rides the pytree like quantization scales do; None flattens to an
+        # empty subtree, so checksum-free weights keep their historical leaf
+        # structure
+        self.checksum = checksum
 
     # ------------------------------------------------------------- pytree --
     def tree_flatten_with_keys(self):
         return (
-            ((jax.tree_util.GetAttrKey("data"), self.data),),
+            (
+                (jax.tree_util.GetAttrKey("data"), self.data),
+                (jax.tree_util.GetAttrKey("checksum"), self.checksum),
+            ),
             (self.d_in, self.d_out, self.perm_tile, self.plan),
         )
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(children[0], *aux)
+        return cls(children[0], *aux, checksum=children[1])
 
     # ------------------------------------------------------- construction --
     @staticmethod
@@ -135,19 +144,31 @@ class DipWeight:
                 "without scales; use repro.api.quant.quantize(w, "
                 "scheme=...) to build a QuantizedDipWeight instead"
             )
+        # a cast invalidates any attached checksum (it was computed from the
+        # old storage); the caller re-attaches after the cast
         return DipWeight(self.data.astype(dtype), self.d_in, self.d_out,
                          self.perm_tile, self.plan)
 
-    def with_data(self, data: Any) -> "DipWeight":
-        """Same metadata, different payload (shardings, specs, moments)."""
-        return DipWeight(data, self.d_in, self.d_out, self.perm_tile, self.plan)
+    def with_data(self, data: Any, checksum: Any = None) -> "DipWeight":
+        """Same metadata, different payload (shardings, specs, moments).
+        The checksum child does NOT carry over by default — a new payload
+        invalidates it; pass ``checksum=`` to thread a matching one."""
+        return DipWeight(data, self.d_in, self.d_out, self.perm_tile,
+                         self.plan, checksum)
 
     def with_plan(self, plan: Any) -> "DipWeight":
         """Same payload, different partition decision (see
         ``repro.distributed.plan.ShardingPlan.attach_params``)."""
         if plan == self.plan:
             return self
-        return DipWeight(self.data, self.d_in, self.d_out, self.perm_tile, plan)
+        return DipWeight(self.data, self.d_in, self.d_out, self.perm_tile,
+                         plan, self.checksum)
+
+    def with_checksum(self, checksum: Any) -> "DipWeight":
+        """Same payload, with an ABFT checksum attached (see
+        ``repro.reliability.abft.attach_checksums``)."""
+        return DipWeight(self.data, self.d_in, self.d_out, self.perm_tile,
+                         self.plan, checksum)
 
     def __repr__(self) -> str:
         data = self.data

@@ -30,12 +30,14 @@ import os
 import secrets
 import shutil
 import threading
+import zlib
 from typing import Any, Dict, List, Optional
 
 import jax
 import numpy as np
 
 from repro.api import DipWeight, QuantizedDipWeight
+from repro.reliability.inject import maybe_fail
 
 __all__ = ["CheckpointManager", "save_pytree", "restore_pytree"]
 
@@ -140,21 +142,35 @@ def _restore_dtype(arr: np.ndarray, dtype_name: str) -> np.ndarray:
 
 
 def save_pytree(path: str, tree: Any, *, meta: Optional[Dict] = None) -> None:
-    """Write one complete checkpoint directory atomically (blocking)."""
+    """Write one complete checkpoint directory atomically (blocking).
+
+    Every leaf's manifest entry records a ``crc32`` of the exact bytes on
+    disk; :func:`restore_pytree` re-hashes on load and names the corrupt
+    leaf if storage rotted underneath the manifest.  The
+    ``checkpoint.save.*`` fail-points let tests crash this function
+    mid-write and prove the rename keeps the restore target atomic."""
     paths, leaves, _ = _flatten_with_paths(tree)
     host_leaves = [np.asarray(jax.device_get(l)) for l in leaves]
     tmp = f"{path}.tmp-{secrets.token_hex(4)}"
     os.makedirs(tmp, exist_ok=True)
     index: List[Dict] = []
     for i, (p, arr) in enumerate(zip(paths, host_leaves)):
+        if i > 0:
+            maybe_fail("checkpoint.save.mid_write")
         fname = f"leaf_{i:05d}.npy"
-        np.save(os.path.join(tmp, fname), _npy_safe(arr))
-        index.append({"path": p, "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)})
+        safe = _npy_safe(arr)
+        np.save(os.path.join(tmp, fname), safe)
+        index.append({
+            "path": p, "file": fname, "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+            "crc32": zlib.crc32(np.ascontiguousarray(safe).tobytes()),
+        })
     manifest = {"leaves": index, "meta": meta or {}, "dip_weights": _dip_index(tree)}
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
         f.flush()
         os.fsync(f.fileno())
+    maybe_fail("checkpoint.save.pre_rename")
     os.replace(tmp, path) if not os.path.exists(path) else shutil.rmtree(tmp)
 
 
@@ -182,6 +198,15 @@ def restore_pytree(path: str, like: Any, *, shardings: Any = None) -> Any:
     out = []
     for p, leaf, sh in zip(paths, leaves, shard_leaves):
         arr = np.load(os.path.join(path, by_path[p]["file"]))
+        want = by_path[p].get("crc32")  # absent in pre-reliability manifests
+        if want is not None:
+            got = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+            if got != want:
+                raise ValueError(
+                    f"checkpoint integrity failure at leaf {p!r} "
+                    f"({by_path[p]['file']}): crc32 {got:#010x} != manifest "
+                    f"{want:#010x} — the checkpoint bytes rotted after save"
+                )
         arr = _restore_dtype(arr, by_path[p]["dtype"])
         if sh is not None:
             out.append(jax.device_put(arr, sh))

@@ -424,10 +424,12 @@ class ShardingPlan:
                 # per-output-channel scales follow the storage's N sharding;
                 # the broadcast K dim (width 1) stays unsharded
                 scale_spec = P(*spec[:-2], None, spec[-1])
-                return t.with_data(self.named(spec), self.named(scale_spec))
+                return t.with_data(self.named(spec), self.named(scale_spec),
+                                   checksum=self._checksum_shardings(t))
             if isinstance(t, DipWeight):
                 return t.with_data(
-                    self.named(self.param_pspec(name, tuple(t.data.shape)))
+                    self.named(self.param_pspec(name, tuple(t.data.shape))),
+                    checksum=self._checksum_shardings(t),
                 )
             if isinstance(t, tuple):
                 shape = t[0]
@@ -437,6 +439,15 @@ class ShardingPlan:
             return self.named(self.param_pspec(name, tuple(t.shape)))
 
         return walk(template)
+
+    def _checksum_shardings(self, w):
+        """Replicated shardings matching an attached ABFT checksum child (its
+        vectors are O(K)+O(N) — not worth sharding) so checksum-carrying
+        weights traverse ``tree_map(device_put, params, shardings)`` in
+        lockstep; ``None`` stays ``None``."""
+        if getattr(w, "checksum", None) is None:
+            return None
+        return jax.tree_util.tree_map(lambda _: self.named(P()), w.checksum)
 
     # ------------------------------------------------------------- batch ---
     def batch_pspec(self) -> Dict[str, P]:

@@ -30,6 +30,18 @@ per-row inverse RMS (reduced once in the wrapper, O(M) data) and the norm
 gain rescale each x block right after it lands in VMEM, so the raw
 activations are the only x tensor that ever reaches HBM — still ONE pallas
 launch per dispatch.
+
+ABFT verification (reliability/abft.py) audits this kernel from the outside
+rather than the inside: in the paper's dataflow a Huang–Abraham checksum
+probe is just one more input row streaming diagonally through the array
+(the weights sit still, so ``sum_n out[m, n] == x[m, :] @ row_checksum``
+holds for whatever the array computed), and because the DiP permutation
+rotates elements *within* storage columns, the storage column sums are
+layout-invariant and can audit the permutated bytes directly.  Neither
+check touches this kernel's body — ``api.matmul(..., verify=)`` wraps the
+dispatch with O(M·N) jnp reductions, keeping the verified output
+bit-identical and the launch count at ONE (asserted by the fleet's
+``verify_probe`` column).
 """
 
 from __future__ import annotations

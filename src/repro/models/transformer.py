@@ -809,7 +809,7 @@ def loss_fn(params, cfg, batch, *, plan=None, constrain: Optional[Constrain] = N
 
 def train_step_fn(cfg, optimizer, *, plan=None, constrain: Optional[Constrain] = None,
                   unroll: bool = False, kv_chunk: int = 0, microbatch: int = 1,
-                  fused_ce: Optional[bool] = None):
+                  fused_ce: Optional[bool] = None, guard: bool = False):
     """Returns step(state, batch) -> (state, metrics).  Pure; jit at call site.
 
     ``plan`` carries the distribution decisions (see :func:`forward`).
@@ -817,6 +817,13 @@ def train_step_fn(cfg, optimizer, *, plan=None, constrain: Optional[Constrain] =
     split into ``microbatch`` slices scanned sequentially with the summed
     gradient applied once — live activation memory scales with the slice
     size (the standard fit-the-HBM lever for the biggest train cells).
+
+    ``guard=True`` wraps the step in the reliability guard
+    (``repro.reliability.guard``): nonfinite loss/grad screening plus the
+    parameter-fingerprint integrity check, with poisoned steps skipped
+    (update discarded, counters advanced).  The guarded state carries the
+    fingerprint side-car next to params/opt_state/step — initialize it
+    with ``reliability.init_guard_state``.
     """
 
     def grad_of(params, batch):
@@ -860,6 +867,10 @@ def train_step_fn(cfg, optimizer, *, plan=None, constrain: Optional[Constrain] =
         new_state = {"params": params, "opt_state": opt_state, "step": step_no + 1}
         return new_state, {"loss": loss, "grad_norm": gnorm, "step": step_no + 1}
 
+    if guard:
+        from repro.reliability import guard as guard_lib  # lazy: no cycle
+
+        return guard_lib.guarded_step_fn(step)
     return step
 
 

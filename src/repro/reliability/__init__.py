@@ -1,0 +1,72 @@
+"""Reliability layer: ABFT-verified matmuls, fault injection, fail-safe loops.
+
+At the paper's density (a 64x64 array at 8.192 TOPS with zero FIFO slack)
+and at fleet scale, silent data corruption is a *when*, not an *if*.  This
+package is the system wrapped around the accelerator that notices:
+
+* :mod:`repro.reliability.abft` — Huang–Abraham-style checksums for every
+  weight type (``DipWeight`` / ``QuantizedDipWeight`` / natural arrays),
+  the dtype-aware tolerance model, and the post-hoc verifier behind
+  ``api.matmul(..., verify=...)``.
+* :mod:`repro.reliability.inject` — deterministic fault injection (seeded
+  bit flips, planted NaNs, host fail-points) so chaos tests *prove*
+  detection and recovery instead of asserting their absence.
+* :mod:`repro.reliability.guard` — the fail-safe training step wrapper:
+  nonfinite loss/grad screening plus a parameter-fingerprint check, with
+  skip-and-count semantics consumed by ``repro.runtime.Trainer``.
+
+See ``docs/reliability.md`` for the math, the fault model, and the
+degradation ladder.
+"""
+
+from repro.reliability.abft import (
+    ATOL,
+    RTOL,
+    AbftChecksum,
+    ReliabilityError,
+    attach_checksums,
+    raise_on_fault,
+    verify_matmul,
+    weight_checksum,
+)
+from repro.reliability.guard import (
+    GUARD_KEYS,
+    fingerprint,
+    fingerprint_paths,
+    guarded_step_fn,
+    init_guard_state,
+    locate_fingerprint_fault,
+)
+from repro.reliability.inject import (
+    InjectedFault,
+    bitflip,
+    corrupt_kv_block,
+    corrupt_pytree,
+    failpoint,
+    maybe_fail,
+    plant_nan,
+)
+
+__all__ = [
+    "ATOL",
+    "RTOL",
+    "AbftChecksum",
+    "ReliabilityError",
+    "attach_checksums",
+    "raise_on_fault",
+    "verify_matmul",
+    "weight_checksum",
+    "GUARD_KEYS",
+    "fingerprint",
+    "fingerprint_paths",
+    "guarded_step_fn",
+    "init_guard_state",
+    "locate_fingerprint_fault",
+    "InjectedFault",
+    "bitflip",
+    "corrupt_kv_block",
+    "corrupt_pytree",
+    "failpoint",
+    "maybe_fail",
+    "plant_nan",
+]

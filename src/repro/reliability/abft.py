@@ -1,0 +1,336 @@
+"""ABFT checksum verification for the matmul surface.
+
+Huang & Abraham's algorithm-based fault tolerance encodes a matmul's
+operands with checksum rows/columns so the *result* can be audited in
+O(M·N) instead of recomputed in O(M·K·N).  For ``out = x @ W`` the weight
+side precomputes two natural-domain vectors (once, next to the weight's
+quantization scales):
+
+    row      r[k]  = Σ_n W[k, n]        the row-checksum column, so
+                                        Σ_n out[m, n] == x[m, :] @ r
+    row_abs  a[k]  = Σ_n |W[k, n]|      its magnitude twin — the scale the
+                                        tolerance model is relative to
+
+plus one storage-domain vector:
+
+    col      c[j]  = Σ_k P[k, j]        the column sums of the *permutated*
+                                        storage ``P`` (raw int codes for
+                                        quantized weights, so the reference
+                                        is integer-exact)
+
+``col`` commutes with the DiP permutation for free — the permutation
+rotates rows *within* a column (paper Fig. 3), so every storage column
+holds exactly the elements of one logical output channel and its sum is
+layout-invariant.  Conceptually the probe is just one more row streaming
+through the array diagonally like any other input (docs/architecture.md
+§Reliability maps it onto the paper's dataflow); this implementation
+evaluates it post-hoc in the dispatch wrapper so the verified output is
+**bit-identical** to the unverified one — a property the conformance
+suite pins down across every backend × epilogue × dtype.
+
+Two verification modes (the degradation ladder, docs/reliability.md):
+
+* ``probe``   — full output audit: ``rowsum(out)`` vs ``x @ row`` under the
+  dtype-aware tolerance below.  Valid whenever the epilogue is *linear*
+  (``none`` / ``bias`` / ``residual`` — the probe shifts by ``Σ b`` /
+  ``rowsum(residual)``), no fused prologue rewrites x, and the backend
+  declares ``abft=True`` (its kernel computes an exact matmul).
+* ``storage`` — weight-integrity audit: recompute ``col`` (and the scale
+  column sums for quantized weights) against the stored reference, plus a
+  nonfinite screen of the output.  Catches storage corruption under any
+  epilogue; it is what nonlinear epilogues (``bias_gelu`` / ``bias_silu``
+  / ``swiglu``), fused prologues, and ``abft=False`` backends degrade to.
+
+Tolerance model: backends differ in accumulation order and activation
+handling, so the probe cannot demand equality.  Row ``m`` passes iff
+
+    |rowsum(out)[m] - expected[m]| <= ATOL + rtol(dtypes) * (|x[m]| @ a + s)
+
+where ``s`` collects the epilogue operands' magnitudes and, for the W8A8
+int8 kernel, the dynamic activation-quantization term
+``amax(|x[m]|)/(2·127) * Σ a`` (per-element rounding of x is at most half
+a quantization step; the probe sees its worst-case dot with ``|W|``).
+``rtol`` is keyed on the widest-error dtype in play — see :data:`RTOL`.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.quant import QuantizedDipWeight
+from repro.api.weights import DipWeight
+from repro.kernels import epilogue as epilogue_lib
+
+__all__ = [
+    "ATOL",
+    "RTOL",
+    "AbftChecksum",
+    "ReliabilityError",
+    "attach_checksums",
+    "raise_on_fault",
+    "verify_matmul",
+    "weight_checksum",
+]
+
+
+class ReliabilityError(RuntimeError):
+    """A checksum/finiteness audit failed (or an integrity check at restore)."""
+
+
+class AbftChecksum(NamedTuple):
+    """Precomputed per-weight checksums (rides the pytree like scales do).
+
+    ``col``/``scale_col`` live in the permutated storage domain; ``row`` /
+    ``row_abs`` in the natural domain (length ``d_in``).  All float32.
+    """
+
+    col: Any                  # (..., Np) storage column sums
+    row: Any                  # (..., d_in) natural row-checksum column W @ 1
+    row_abs: Any              # (..., d_in) |W| @ 1
+    scale_col: Any = None     # (..., Np) quantized-scale column sums
+
+
+# Probe tolerances, keyed by the coarsest dtype in play.  Deliberately
+# generous: a false positive poisons a healthy serving/training step, while
+# the faults worth catching (flipped exponent/sign bits, planted NaNs) sit
+# orders of magnitude above any rounding cloud.
+RTOL: Dict[str, float] = {
+    "float32": 1e-4,
+    "bfloat16": 2e-2,
+    "float16": 5e-3,
+    "int8": 5e-2,        # W8A8: weight rounding; activations add an amax term
+    "fp8_e4m3": 8e-2,
+}
+ATOL = 1e-3
+
+
+def _f32(t) -> jax.Array:
+    return jnp.asarray(t, jnp.float32)
+
+
+def _natural32(w: Union[DipWeight, QuantizedDipWeight, jax.Array]) -> jax.Array:
+    if isinstance(w, QuantizedDipWeight):
+        return w.to_natural(jnp.float32)
+    if isinstance(w, DipWeight):
+        return _f32(w.to_natural())
+    return _f32(w)
+
+
+def weight_checksum(
+    w: Union[DipWeight, QuantizedDipWeight, jax.Array]
+) -> AbftChecksum:
+    """Compute the checksum set for any weight type (one O(K·N) pass).
+
+    For quantized weights ``col`` sums the raw integer codes — sums of
+    |q| <= 127 over any realistic K are exact in float32, so the reference
+    admits a zero-tolerance compare — and ``scale_col`` additionally pins
+    the dequantization scales.
+    """
+    wn32 = _natural32(w)
+    row = wn32.sum(axis=-1)
+    row_abs = jnp.abs(wn32).sum(axis=-1)
+    if isinstance(w, (DipWeight, QuantizedDipWeight)):
+        col = _f32(w.data).sum(axis=-2)
+    else:
+        col = wn32.sum(axis=-2)
+    scale_col = None
+    if isinstance(w, QuantizedDipWeight):
+        scale_col = _f32(w.scale).sum(axis=-2)
+    return AbftChecksum(col=col, row=row, row_abs=row_abs, scale_col=scale_col)
+
+
+def attach_checksums(tree: Any) -> Any:
+    """Stamp :class:`AbftChecksum` onto every ``DipWeight`` /
+    ``QuantizedDipWeight`` node of a pytree (idempotent).
+
+    The checksum rides as an optional pytree *child* — exactly like the
+    quantization scales — so it survives jit, device placement, and
+    checkpoint round-trips.  Attach AFTER optimizer-state creation and
+    plan placement: checksums are frozen verification artifacts, not
+    trainable state (the training guard uses the fingerprint side-car in
+    :mod:`repro.reliability.guard` instead, precisely so weight decay can
+    never touch a reference).
+    """
+
+    def stamp(node):
+        if isinstance(node, (DipWeight, QuantizedDipWeight)):
+            if node.checksum is not None:
+                return node
+            return node.with_checksum(weight_checksum(node))
+        return node
+
+    return jax.tree_util.tree_map(
+        stamp, tree,
+        is_leaf=lambda x: isinstance(x, (DipWeight, QuantizedDipWeight)),
+    )
+
+
+# --------------------------------------------------------------------------
+# verification
+def _checksum_of(w) -> AbftChecksum:
+    if isinstance(w, (DipWeight, QuantizedDipWeight)) and w.checksum is not None:
+        return w.checksum
+    return weight_checksum(w)
+
+
+def _rtol_for(x_dtype, weights) -> float:
+    names = [str(jnp.dtype(x_dtype))]
+    for w in weights:
+        if isinstance(w, QuantizedDipWeight):
+            names.append(w.scheme)
+        else:
+            names.append(str(jnp.dtype(w.dtype)))
+    return max(RTOL.get(n, RTOL["float32"]) for n in names)
+
+
+def _storage_ok(w, ref: AbftChecksum) -> jax.Array:
+    """Recomputed column sums vs the stored reference.
+
+    The reference and the recompute run the identical reduction on the
+    identical storage, so agreement is deterministic; the tolerance only
+    absorbs reference checksums that crossed a dtype/device boundary
+    (e.g. a checkpoint round-trip)."""
+    if isinstance(w, (DipWeight, QuantizedDipWeight)):
+        col_now = _f32(w.data).sum(axis=-2)
+    else:
+        col_now = _f32(w).sum(axis=-2)
+    tol = 1e-5 * (1.0 + jnp.abs(ref.col))
+    ok = jnp.all(jnp.abs(col_now - ref.col) <= tol)
+    if isinstance(w, QuantizedDipWeight) and ref.scale_col is not None:
+        s_now = _f32(w.scale).sum(axis=-2)
+        s_tol = 1e-5 * (1.0 + jnp.abs(ref.scale_col))
+        ok = ok & jnp.all(jnp.abs(s_now - ref.scale_col) <= s_tol)
+    return ok
+
+
+_LINEAR_EPILOGUES = frozenset({"none", "bias", "residual"})
+
+
+def probe_applicable(
+    epilogue: str = "none",
+    prologue: str = "none",
+    backend_abft: bool = True,
+    n_weights: int = 1,
+) -> bool:
+    """Whether the full row-sum probe is mathematically valid for this
+    dispatch (the top rung of the degradation ladder)."""
+    return (
+        backend_abft
+        and n_weights == 1
+        and epilogue in _LINEAR_EPILOGUES
+        and prologue == "none"
+    )
+
+
+def verify_matmul(
+    x: jax.Array,
+    weights: Sequence[Any],
+    out: jax.Array,
+    *,
+    epilogue: str = "none",
+    operands: Sequence[jax.Array] = (),
+    prologue: str = "none",
+    backend_abft: bool = True,
+    mode: str = "auto",
+) -> Dict[str, Any]:
+    """Audit ``out`` as the claimed result of ``epilogue(x @ w, ...)``.
+
+    Pure and jit-compatible; returns a report dict of scalars —
+    ``mode`` (static str), ``ok`` / ``finite`` / ``checksum_ok`` (bool),
+    ``rows_flagged`` (int32), ``max_excess`` (float32: worst row's error
+    beyond its tolerance; <= 0 when clean, probe mode only).
+
+    ``mode="auto"`` picks the strongest applicable rung; requesting
+    ``"probe"`` where it is invalid raises (the caller asked for math
+    that does not hold)."""
+    weights = tuple(weights)
+    can_probe = probe_applicable(
+        epilogue, prologue, backend_abft, len(weights)
+    )
+    if mode == "auto":
+        mode = "probe" if can_probe else "storage"
+    elif mode == "probe" and not can_probe:
+        raise ValueError(
+            f"probe verification is invalid here (epilogue={epilogue!r}, "
+            f"prologue={prologue!r}, abft={backend_abft}, "
+            f"{len(weights)} weights): the row-sum identity only holds for "
+            "a single weight under a linear epilogue on an abft-capable "
+            "backend — use mode='storage' or 'auto'"
+        )
+    elif mode not in ("probe", "storage"):
+        raise ValueError(f"mode must be 'auto'|'probe'|'storage', got {mode!r}")
+
+    finite = jnp.all(jnp.isfinite(_f32(out)))
+
+    if mode == "storage":
+        ok = finite
+        for w in weights:
+            ok = ok & _storage_ok(w, _checksum_of(w))
+        return {
+            "mode": "storage",
+            "ok": ok,
+            "finite": finite,
+            "checksum_ok": ok | ~finite,  # isolates the weight-side verdict
+            "rows_flagged": jnp.where(ok, 0, 1).astype(jnp.int32),
+            "max_excess": jnp.where(ok, -jnp.inf, jnp.inf).astype(jnp.float32),
+        }
+
+    ref = _checksum_of(weights[0])
+    # A *stored* reference also enables the integer-exact storage compare —
+    # strictly stronger than the analog probe for small quantized-code flips
+    # that hide inside the W8A8 tolerance.  (Without a stored checksum the
+    # compare is vacuous: the reference would be recomputed from the same
+    # storage it checks.)
+    storage_ok = jnp.asarray(True)
+    for w in weights:
+        if isinstance(w, (DipWeight, QuantizedDipWeight)) and w.checksum is not None:
+            storage_ok = storage_ok & _storage_ok(w, w.checksum)
+    x32 = _f32(x)
+    out32 = _f32(out)
+    rowsum = out32.sum(axis=-1)                       # (...,)
+    expected = x32 @ ref.row
+    magnitude = jnp.abs(x32) @ ref.row_abs
+    spec = epilogue_lib.spec(epilogue)
+    if spec.bias:
+        b32 = _f32(operands[0]).reshape(-1)
+        expected = expected + b32.sum()
+        magnitude = magnitude + jnp.abs(b32).sum()
+    if spec.residual:
+        r32 = _f32(operands[0])
+        expected = expected + r32.sum(axis=-1)
+        magnitude = magnitude + jnp.abs(r32).sum(axis=-1)
+    rtol = _rtol_for(x.dtype, weights)
+    tol = ATOL + rtol * magnitude
+    if isinstance(weights[0], QuantizedDipWeight) and weights[0].scheme == "int8":
+        # W8A8: the kernel quantizes x per-row on the fly; worst-case probe
+        # drift is half an activation step dotted against |W| summed over N
+        amax = jnp.max(jnp.abs(x32), axis=-1)
+        tol = tol + amax / 254.0 * ref.row_abs.sum()
+    err = jnp.abs(rowsum - expected)
+    # NaN/Inf rows never satisfy err <= tol, so the probe subsumes the screen
+    row_ok = err <= tol
+    ok = jnp.all(row_ok) & finite & storage_ok
+    return {
+        "mode": "probe",
+        "ok": ok,
+        "finite": finite,
+        "checksum_ok": jnp.all(row_ok) & storage_ok,
+        "rows_flagged": jnp.sum(~row_ok).astype(jnp.int32),
+        "max_excess": jnp.max(err - tol).astype(jnp.float32),
+    }
+
+
+def raise_on_fault(report: Dict[str, Any], context: str = "matmul") -> None:
+    """Host-side convenience: raise :class:`ReliabilityError` on a failed
+    audit (call outside jit, after the report's scalars are concrete)."""
+    if bool(report["ok"]):
+        return
+    raise ReliabilityError(
+        f"ABFT verification failed in {context}: mode={report['mode']} "
+        f"finite={bool(report['finite'])} "
+        f"rows_flagged={int(report['rows_flagged'])} "
+        f"max_excess={float(report['max_excess']):.3e}"
+    )

@@ -1,0 +1,150 @@
+"""Fail-safe training: screen every step, skip the poisoned ones.
+
+Two fault classes, two detectors, one jitted wrapper:
+
+* **Transient numerics** (a NaN/Inf loss or gradient from a poisoned
+  batch or a compute fault): screened by finiteness checks on the loss
+  and global grad norm.  The update is discarded, the step counter still
+  advances (so the loop cannot wedge on one batch), ``skipped`` counts it.
+* **Weight-storage corruption** (a flipped bit in a parameter between
+  steps): detected by the **fingerprint side-car** — one float32
+  ``Σ|leaf|`` per parameter leaf, recomputed at the top of every step and
+  compared against the reference carried in ``state["fingerprint"]``.
+  The reference is refreshed from the *applied* update when a step
+  commits and frozen when one is skipped, so persistent corruption keeps
+  tripping ``weight_faults`` every step until the host recovers (the
+  ``Trainer`` restores the latest checkpoint — docs/reliability.md
+  §Degradation ladder).
+
+The fingerprint is deliberately a side-car, NOT the per-weight
+:class:`~repro.reliability.abft.AbftChecksum` child: an attached checksum
+would be an optimizer leaf, and weight decay would corrupt the reference
+itself.  Side-car state never meets the optimizer.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "fingerprint",
+    "fingerprint_paths",
+    "guarded_step_fn",
+    "locate_fingerprint_fault",
+    "GUARD_KEYS",
+]
+
+# state keys the guard adds next to params/opt_state/step
+GUARD_KEYS = ("fingerprint", "skipped", "weight_faults")
+
+# |Σ|leaf|| drift tolerated between the stored reference and a recompute
+# (different jit programs may reduce in different orders); loud faults —
+# exponent/sign flips, NaNs — move the sum by ~the element magnitude
+_FP_RTOL = 1e-5
+_FP_ATOL = 1e-6
+
+
+def fingerprint(params: Any) -> jax.Array:
+    """(n_leaves,) float32 vector of per-leaf ``Σ|leaf|`` checksums, in
+    deterministic ``tree_flatten`` order.  NaN anywhere in a leaf makes
+    its entry NaN — which never compares equal, so planted NaNs trip the
+    guard too."""
+    leaves = jax.tree_util.tree_leaves(params)
+    return jnp.stack(
+        [jnp.sum(jnp.abs(l.astype(jnp.float32))) for l in leaves]
+    )
+
+
+def fingerprint_paths(params: Any) -> List[str]:
+    """Leaf path strings aligned with :func:`fingerprint`'s entries."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    return ["/".join(str(k) for k in path) for path, _ in flat]
+
+
+def locate_fingerprint_fault(params: Any, reference) -> List[str]:
+    """Host-side diagnosis: names the param leaves whose recomputed
+    fingerprint disagrees with ``reference`` (the corrupt-leaf diagnostic
+    the Trainer prints before recovering)."""
+    import numpy as np
+
+    now = np.asarray(jax.device_get(fingerprint(params)), np.float64)
+    ref = np.asarray(jax.device_get(reference), np.float64)
+    tol = _FP_ATOL + _FP_RTOL * np.abs(ref)
+    bad = ~(np.abs(now - ref) <= tol)  # NaN compares unequal -> flagged
+    paths = fingerprint_paths(params)
+    return [p for p, b in zip(paths, bad) if b]
+
+
+def _fp_ok(now: jax.Array, ref: jax.Array) -> jax.Array:
+    return jnp.all(jnp.abs(now - ref) <= _FP_ATOL + _FP_RTOL * jnp.abs(ref))
+
+
+def guarded_step_fn(step_fn: Callable) -> Callable:
+    """Wrap a ``step(state, batch) -> (state, metrics)`` with the guard.
+
+    The guarded state carries :data:`GUARD_KEYS` next to the inner keys;
+    metrics gain ``skipped`` / ``weight_fault`` (0/1 for this step) and
+    ``skipped_total`` / ``weight_faults_total`` counters.  Pure and
+    jit-compatible: the skip is a ``jnp.where`` select between the
+    applied and the incoming state (the gradients were already computed
+    to be screened — discarding them costs nothing extra)."""
+
+    def gstep(state: Dict[str, Any], batch) -> Tuple[Dict[str, Any], Dict]:
+        inner = {k: v for k, v in state.items() if k not in GUARD_KEYS}
+        fp_ref = state["fingerprint"]
+
+        # weight integrity first: were the params tampered with since the
+        # last committed step?
+        fp_now = fingerprint(inner["params"])
+        weights_ok = _fp_ok(fp_now, fp_ref)
+
+        new_inner, metrics = step_fn(inner, batch)
+        loss_ok = jnp.isfinite(metrics["loss"]) & jnp.isfinite(
+            metrics["grad_norm"]
+        )
+        ok = weights_ok & loss_ok
+
+        committed = {
+            k: jax.tree_util.tree_map(
+                lambda n, o: jnp.where(ok, n, o), new_inner[k], inner[k]
+            )
+            for k in ("params", "opt_state")
+        }
+        # the step counter always advances — a skipped batch must not
+        # wedge the loop — and the fingerprint reference only moves when
+        # the update actually committed (a frozen reference keeps
+        # persistent corruption visible every step until recovery)
+        committed["step"] = new_inner["step"]
+        fp_next = jnp.where(ok, fingerprint(committed["params"]), fp_ref)
+
+        skipped = jnp.where(ok, 0, 1).astype(jnp.int32)
+        wfault = jnp.where(weights_ok, 0, 1).astype(jnp.int32)
+        new_state = dict(
+            committed,
+            fingerprint=fp_next,
+            skipped=state["skipped"] + skipped,
+            weight_faults=state["weight_faults"] + wfault,
+        )
+        metrics = dict(
+            metrics,
+            skipped=skipped,
+            weight_fault=wfault,
+            skipped_total=new_state["skipped"],
+            weight_faults_total=new_state["weight_faults"],
+        )
+        return new_state, metrics
+
+    return gstep
+
+
+def init_guard_state(state: Dict[str, Any]) -> Dict[str, Any]:
+    """Add the guard side-car keys to a fresh train state."""
+    return dict(
+        state,
+        fingerprint=fingerprint(state["params"]),
+        skipped=jnp.zeros((), jnp.int32),
+        weight_faults=jnp.zeros((), jnp.int32),
+    )

@@ -1,0 +1,224 @@
+"""Deterministic fault injection for chaos tests.
+
+Every primitive here is a pure function of ``(value, seed, target)`` —
+same seed + same target ⇒ **bit-identical corruption** (a property the
+test suite pins down), so a chaos test that detects-and-recovers today
+reproduces byte-for-byte in CI tomorrow.
+
+Device-data faults:
+
+* :func:`bitflip` — XOR seeded bit positions into an array's raw storage
+  (any dtype, ml_dtypes included, via a same-width unsigned view).  The
+  hardware-faithful model for SDC in weights/activations/collective
+  buffers.
+* :func:`plant_nan` — overwrite seeded elements with NaN (float arrays
+  only); the model for a poisoned accumulator.
+* :func:`corrupt_pytree` — address a leaf of a params/state pytree by
+  key-path substring and apply either of the above.
+* :func:`corrupt_kv_block` — poison one physical block of a serving
+  ``PagedKVCache`` (bf16 pools directly; int8 pools through their float32
+  scale rows, since integer storage cannot hold a NaN).
+
+Host-code faults (crash injection):
+
+* :func:`failpoint` — a context manager arming a named fail-point;
+  :func:`maybe_fail` raises at matching sites.  ``checkpoint.manager``
+  and ``serving.kv_cache`` expose sites so tests can prove atomic saves
+  and allocator invariants under mid-operation crashes.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Callable, Dict, Iterator, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = [
+    "bitflip",
+    "plant_nan",
+    "corrupt_pytree",
+    "corrupt_kv_block",
+    "failpoint",
+    "maybe_fail",
+    "InjectedFault",
+]
+
+
+class InjectedFault(RuntimeError):
+    """Raised by an armed fail-point (distinguishable from real bugs)."""
+
+
+# --------------------------------------------------------------------------
+# device-data corruption
+def _host(arr) -> np.ndarray:
+    return np.array(jax.device_get(arr), copy=True)
+
+
+def bitflip(
+    arr: Any,
+    *,
+    seed: int,
+    n_flips: int = 1,
+    bit: Optional[int] = None,
+) -> np.ndarray:
+    """Flip ``n_flips`` seeded bits in ``arr``'s raw storage.
+
+    ``bit`` pins the bit position within each element (e.g. 30 for a
+    float32 exponent MSB, 14 for bfloat16, 6 for int8/fp8-e4m3 — the
+    guaranteed-loud flips the chaos tests use); ``None`` draws it from the
+    same seeded stream.  Returns a host array of the original dtype.
+    """
+    host = _host(arr)
+    if host.size == 0:
+        return host
+    width = host.dtype.itemsize
+    raw = host.view(np.dtype(f"u{width}")).reshape(-1)
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, raw.size, size=n_flips)
+    bits = (
+        np.full(n_flips, bit, np.uint64) if bit is not None
+        else rng.integers(0, 8 * width, size=n_flips).astype(np.uint64)
+    )
+    for i, b in zip(idx, bits):
+        raw[i] ^= raw.dtype.type(1) << raw.dtype.type(b)
+    return raw.view(host.dtype).reshape(host.shape)
+
+
+def plant_nan(arr: Any, *, seed: int, n: int = 1) -> np.ndarray:
+    """Overwrite ``n`` seeded elements of a float array with NaN."""
+    host = _host(arr)
+    flat = host.reshape(-1)
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, flat.size, size=n)
+    flat[idx] = np.nan
+    return host
+
+
+def corrupt_pytree(
+    tree: Any,
+    target: str,
+    *,
+    seed: int,
+    mode: str = "bitflip",
+    bit: Optional[int] = None,
+    n: int = 1,
+) -> Tuple[Any, str]:
+    """Corrupt the first array leaf whose key-path contains ``target``.
+
+    Returns ``(new_tree, hit_path)``; raises ``KeyError`` if no leaf
+    matches.  Leaf order (and therefore which leaf a substring hits) is
+    the deterministic ``tree_flatten_with_path`` order.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    hit = None
+    leaves = []
+    for path, leaf in flat:
+        path_s = "/".join(str(k) for k in path)
+        if hit is None and target in path_s and hasattr(leaf, "dtype"):
+            hit = path_s
+            if mode == "bitflip":
+                leaf = bitflip(leaf, seed=seed, n_flips=n, bit=bit)
+            elif mode == "nan":
+                leaf = plant_nan(leaf, seed=seed, n=n)
+            else:
+                raise ValueError(f"mode must be 'bitflip'|'nan', got {mode!r}")
+        leaves.append(leaf)
+    if hit is None:
+        raise KeyError(f"no array leaf path contains {target!r}")
+    return jax.tree_util.tree_unflatten(treedef, leaves), hit
+
+
+def corrupt_kv_block(kv, block: int, *, seed: int = 0, mode: str = "nan") -> str:
+    """Poison physical block ``block`` of a ``PagedKVCache`` in place.
+
+    Pools are block-indexed ``(layers, num_blocks, block_size, ...)``; every
+    layer's rows of the target block are corrupted in the first float pool
+    found (for quantized KV the int8 payload cannot hold a NaN, so its
+    float32 scale rows take the hit — the dequantized read is poisoned all
+    the same).  Returns the name of the pool that was corrupted.
+    """
+    layers = kv.pools["layers"]
+
+    def try_corrupt(pool_dict) -> Optional[str]:
+        for name in sorted(pool_dict):
+            leaf = pool_dict[name]
+            if not hasattr(leaf, "dtype"):
+                continue
+            import jax.numpy as jnp
+
+            if not jnp.issubdtype(jnp.dtype(leaf.dtype), jnp.floating):
+                continue
+            host = _host(leaf)
+            if host.ndim < 3 or host.shape[1] <= block:
+                continue
+            if mode == "nan":
+                host[:, block] = np.nan
+            else:
+                host[:, block] = bitflip(
+                    host[:, block], seed=seed,
+                    n_flips=max(1, host[:, block].size // 2), bit=None,
+                ).reshape(host[:, block].shape)
+            pool_dict[name] = jax.device_put(host).astype(leaf.dtype)
+            return name
+        return None
+
+    target = layers["attn"] if isinstance(layers.get("attn"), dict) else layers
+    name = try_corrupt(target)
+    if name is None:
+        raise ValueError(
+            f"no corruptible float pool for block {block} "
+            f"(block_size={kv.block_size})"
+        )
+    return name
+
+
+# --------------------------------------------------------------------------
+# host fail-points (crash injection)
+_ARMED: Dict[str, Callable[[], None]] = {}
+
+
+@contextlib.contextmanager
+def failpoint(
+    name: str,
+    *,
+    exc: Any = InjectedFault,
+    count: int = 1,
+) -> Iterator[None]:
+    """Arm fail-point ``name`` for the duration of the ``with`` block.
+
+    The first ``count`` calls to ``maybe_fail(name)`` raise; later calls
+    pass.  ``exc`` may be an exception *instance* (raised as-is), an
+    exception *class*, or a zero-arg factory.  Fail-points nest per-name;
+    re-arming an armed name raises (ambiguous intent).
+    """
+    if name in _ARMED:
+        raise ValueError(f"fail-point {name!r} is already armed")
+    remaining = [count]
+
+    def trip() -> None:
+        if remaining[0] <= 0:
+            return
+        remaining[0] -= 1
+        if isinstance(exc, BaseException):
+            raise exc
+        if isinstance(exc, type) and issubclass(exc, BaseException):
+            raise exc(f"injected fault at {name!r}")
+        e = exc()
+        raise e if isinstance(e, BaseException) else e(
+            f"injected fault at {name!r}"
+        )
+
+    _ARMED[name] = trip
+    try:
+        yield
+    finally:
+        _ARMED.pop(name, None)
+
+
+def maybe_fail(name: str) -> None:
+    """Call at an injection site; no-op unless ``name`` is armed."""
+    trip = _ARMED.get(name)
+    if trip is not None:
+        trip()

@@ -50,6 +50,13 @@ class TrainerConfig:
     fail_at_step: Optional[int] = None     # failure injection (tests)
     straggler_factor: float = 3.0
     metrics_path: Optional[str] = None     # JSONL
+    # reliability guard (repro.reliability.guard; docs/reliability.md):
+    # screen every step for nonfinite loss/grads and parameter-fingerprint
+    # mismatches, skip poisoned updates, and surface counters in metrics
+    guard: bool = False
+    # on a detected weight fault: restore the latest checkpoint and keep
+    # training (True) or raise ReliabilityError naming the corrupt leaf
+    recover_on_fault: bool = True
 
 
 class Trainer:
@@ -65,6 +72,7 @@ class Trainer:
         policy=None,                        # deprecated alias for plan
         seq_len: int = 512,
         global_batch: int = 8,
+        step_hook: Optional[Callable[[int, Dict[str, Any]], Dict[str, Any]]] = None,
     ):
         self.cfg = cfg
         self.tcfg = tcfg
@@ -96,9 +104,16 @@ class Trainer:
             emit_embeddings=cfg.d_model if cfg.frontend != "none" else None,
         )
         self.ckpt = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.keep)
-        self._step_fn = tf_model.train_step_fn(cfg, self.opt, plan=plan)
+        self._step_fn = tf_model.train_step_fn(
+            cfg, self.opt, plan=plan, guard=tcfg.guard
+        )
         self._jit_step = None
         self.metrics_log: list = []
+        # chaos-testing injection point: called as state = step_hook(step_no,
+        # state) before each step — how tests corrupt a live DipWeight
+        # between steps without reaching into the loop
+        self._step_hook = step_hook
+        self.recoveries = 0
 
     # ----------------------------------------------------------- state -----
     def init_state(self, seed: int = 0) -> Dict[str, Any]:
@@ -110,11 +125,16 @@ class Trainer:
             params = self.plan.attach_params(params)
             shardings = self.plan.param_shardings(params)
             params = jax.tree_util.tree_map(jax.device_put, params, shardings)
-        return {
+        state = {
             "params": params,
             "opt_state": self.opt.init(params),
             "step": jnp.zeros((), jnp.int32),
         }
+        if self.tcfg.guard:
+            from repro import reliability
+
+            state = reliability.init_guard_state(state)
+        return state
 
     def _compile(self, state):
         donate = (0,)
@@ -148,9 +168,13 @@ class Trainer:
                     and step_no == self.tcfg.fail_at_step
                 ):
                     raise RuntimeError(f"injected failure at step {step_no}")
+                if self._step_hook is not None:
+                    state = self._step_hook(step_no, state)
                 t0 = time.monotonic()
                 state, metrics = self._jit_step(state, batch)
                 metrics = {k: float(v) for k, v in metrics.items()}
+                if self.tcfg.guard and metrics.get("weight_fault"):
+                    state = self._recover(state)
                 dt = time.monotonic() - t0
                 ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt
                 if dt > self.tcfg.straggler_factor * ewma and step_no > 3:
@@ -176,4 +200,43 @@ class Trainer:
             self.data.stop()
             self.ckpt.wait()
         total = time.monotonic() - t_loop
-        return {"state": state, "wall_s": total, "metrics": self.metrics_log}
+        out = {"state": state, "wall_s": total, "metrics": self.metrics_log}
+        if self.tcfg.guard:
+            # summed host-side from per-step flags: the in-state counters
+            # rewind with every checkpoint restore, the record must not
+            out.update(
+                skipped=sum(int(m.get("skipped", 0)) for m in self.metrics_log),
+                weight_faults=sum(
+                    int(m.get("weight_fault", 0)) for m in self.metrics_log
+                ),
+                recoveries=self.recoveries,
+            )
+        return out
+
+    # ------------------------------------------------------------ faults ----
+    def _recover(self, state: Dict[str, Any]) -> Dict[str, Any]:
+        """Weight corruption detected mid-run: name the corrupt leaf, then
+        restore the latest checkpoint (or raise if there is none / recovery
+        is disabled).  The data stream keeps advancing — replaying exact
+        batches is the auto-resume path's job; this one's is survival."""
+        from repro import reliability
+
+        bad = reliability.locate_fingerprint_fault(
+            state["params"], state["fingerprint"]
+        )
+        leaves = ", ".join(bad) if bad else "<fingerprint mismatch>"
+        restored, meta = (
+            self.ckpt.restore(jax.eval_shape(lambda: state))
+            if self.tcfg.recover_on_fault else (None, None)
+        )
+        if restored is None:
+            raise reliability.ReliabilityError(
+                f"weight corruption detected in [{leaves}] and no recovery "
+                "path (recover_on_fault=False or no checkpoint yet)"
+            )
+        self.recoveries += 1
+        print(
+            f"[trainer] weight fault in [{leaves}]; "
+            f"restored checkpoint step {meta['step']}"
+        )
+        return jax.tree_util.tree_map(jnp.asarray, restored)

@@ -22,6 +22,16 @@ runs alone or packed with arbitrary batch-mates — the property
 Under memory pressure (``ensure`` fails mid-decode) the scheduler's LIFO
 victim is evicted: blocks freed, request re-queued at the front carrying its
 generated tokens (re-prefilled on re-admission).
+
+**Fail-safe serving** (``EngineConfig.verify``; docs/reliability.md): each
+tick screens every request's logits row for nonfinite values — the signature
+of corrupted KV blocks or a tripped verified matmul.  A faulted request is
+retried (evicted so re-prefill rebuilds clean KV, with tick backoff), then
+degraded to an ``xla``-compiled decode step, then failed — while its
+batch-mates keep streaming untouched.  Requests may carry deadlines
+(``ttl_s``); expired ones are swept each tick.  Counters
+(``faults_detected`` / ``retries`` / ``deadline_evictions`` /
+``degraded_requests``) surface in ``last_stats``.
 """
 
 from __future__ import annotations
@@ -54,6 +64,11 @@ class EngineConfig:
     num_blocks: Optional[int] = None     # None -> full occupancy, no preemption
     prefill_chunk: int = 64
     eos_id: int = 1
+    # --- reliability (docs/reliability.md §serving) ---
+    verify: bool = False                 # screen decode logits for nonfinite
+    max_retries: int = 1                 # fault-triggered re-prefills/request
+    retry_backoff_ticks: int = 2         # admission backoff after a fault
+    ttl_s: Optional[float] = None        # default per-request deadline
 
 
 class Engine:
@@ -135,11 +150,19 @@ class Engine:
         self._preempt_count = 0
         self._generated_total = 0
         self.last_stats: Dict[str, Any] = {}
+        # reliability bookkeeping (docs/reliability.md §serving)
+        self._tick = 0
+        self._faults_detected = 0
+        self._retries_total = 0
+        self._deadline_evictions = 0
+        self._degraded_requests = 0
+        self._decode_xla = None             # degraded-path step (built lazily)
 
     # ------------------------------------------------------------ intake ---
     def add_request(self, prompt, sampling_params: Optional[SamplingParams] = None,
                     *, rid: Optional[int] = None,
-                    on_token: Optional[Callable] = None) -> int:
+                    on_token: Optional[Callable] = None,
+                    ttl_s: Optional[float] = None) -> int:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size < 1:
             raise ValueError("empty prompt")
@@ -148,6 +171,18 @@ class Engine:
                 f"prompt of {prompt.size} tokens leaves no room to generate "
                 f"under max_seq={self.ecfg.max_seq}"
             )
+        if self._paged:
+            # admission-time capacity check: a prompt needing more blocks
+            # than the whole pool owns would sit at the queue head forever
+            # (can_allocate never true) and spin the engine — fail fast
+            need = self.kv.blocks_needed(prompt.size)
+            usable = self.kv.num_blocks - 1     # block 0 is the null block
+            if need > usable:
+                raise ValueError(
+                    f"prompt of {prompt.size} tokens needs {need} KV blocks "
+                    f"but the entire pool has {usable} usable blocks of "
+                    f"{self.block_size} — it can never be admitted"
+                )
         if rid is None:
             rid = self._next_rid
         self._next_rid = max(self._next_rid, rid) + 1
@@ -155,6 +190,9 @@ class Engine:
         req = ServeRequest(rid=rid, prompt=prompt, sampling=sp, on_token=on_token)
         req.rng = np.random.default_rng(sp.seed)
         req.arrival_s = time.monotonic()
+        ttl = ttl_s if ttl_s is not None else self.ecfg.ttl_s
+        if ttl is not None:
+            req.deadline_s = req.arrival_s + ttl
         self.scheduler.add(req)
         return rid
 
@@ -185,12 +223,14 @@ class Engine:
         self._preempt_count += 1
         self.scheduler.preempt(req)
 
-    def _finish(self, req: ServeRequest) -> None:
+    def _finish(self, req: ServeRequest, *, deadline_expired: bool = False,
+                fault_failed: bool = False) -> None:
         slot = req.slot
-        if self._paged:
-            self.kv.release(slot)
-        self._slots[slot] = None
-        self._ctx[slot] = 0
+        if slot >= 0:
+            if self._paged:
+                self.kv.release(slot)
+            self._slots[slot] = None
+            self._ctx[slot] = 0
         req.state = DONE
         req.finish_s = time.monotonic()
         self.results[req.rid] = list(req.generated)
@@ -201,6 +241,10 @@ class Engine:
                        if req.first_token_s is not None else None),
             "latency_s": req.finish_s - req.arrival_s,
             "preemptions": req.preemptions,
+            "retries": req.retries,
+            "degraded": req.degraded,
+            "deadline_expired": deadline_expired,
+            "fault_failed": fault_failed,
         }
 
     def _emit(self, req: ServeRequest, token: int, done: bool) -> None:
@@ -247,11 +291,63 @@ class Engine:
             uniforms=uniforms,
         )
 
+    # ------------------------------------------------------------- faults --
+    def _handle_fault(self, req: ServeRequest) -> None:
+        """A verified step tripped for ``req``: bounded retry (evict —
+        re-prefill rebuilds clean KV — with tick backoff), then degrade the
+        request to the ``xla`` decode path, then give up.  Peers are never
+        touched: rows are independent, so one poisoned row costs one row."""
+        self._faults_detected += 1
+        if req is self._prefilling:
+            self._prefilling = None
+            self._prefill_cache = None
+            self._prefill_tokens = None
+        if req.degraded:
+            # the fallback path faulted too — persistent corruption; stop
+            # burning ticks on this request and surface the failure
+            self._finish(req, fault_failed=True)
+            return
+        req.not_before_tick = self._tick + self.ecfg.retry_backoff_ticks
+        if req.retries < self.ecfg.max_retries:
+            req.retries += 1
+            self._retries_total += 1
+        else:
+            req.degraded = True
+            self._degraded_requests += 1
+        self._evict(req)
+
+    def _get_decode_xla(self):
+        """Decode step compiled against the plain ``xla`` matmul backend —
+        the bottom rung of the degradation ladder.  Built on first fault."""
+        if self._decode_xla is None:
+            cfg_xla = dataclasses.replace(self.cfg, matmul_backend="xla")
+            self._decode_xla = jax.jit(
+                tf_model.paged_decode_step_fn(cfg_xla, plan=self.plan)
+            )
+        return self._decode_xla
+
+    def _expire(self, req: ServeRequest) -> None:
+        self._deadline_evictions += 1
+        if req is self._prefilling:
+            self._prefilling = None
+            self._prefill_cache = None
+            self._prefill_tokens = None
+        self._finish(req, deadline_expired=True)
+
+    def _sweep_deadlines(self) -> None:
+        now = time.monotonic()
+        for req in self.scheduler.drop_expired(now):
+            self._expire(req)
+        for req in list(self._slots):
+            if (req is not None and req.deadline_s is not None
+                    and now >= req.deadline_s):
+                self._expire(req)
+
     # ---------------------------------------------------------- admission --
     def _try_admit(self) -> None:
         if self._prefilling is not None:
             return
-        req = self.scheduler.next_waiting()
+        req = self.scheduler.next_waiting(self._tick)
         if req is None:
             return
         slot = self._free_slot()
@@ -260,7 +356,7 @@ class Engine:
         plen = int(req.serve_prompt.size)
         if self._paged and not self.kv.can_allocate(plen):
             return
-        req = self.scheduler.pop()
+        req = self.scheduler.pop(self._tick)
         req.state = PREFILL
         req.slot = slot
         self._slots[slot] = req
@@ -329,6 +425,9 @@ class Engine:
         # final prefill call (padded chunk: plen-1 relative to chunk start;
         # SSM single-token tail: the only row)
         row = np.asarray(last_logits[0, (plen - 1) - (self._prefill_done - last_logits.shape[1])])
+        if self.ecfg.verify and not np.isfinite(row).all():
+            self._handle_fault(req)
+            return
         tok = int(self._sample_rows(row[None], [req])[0])
         self._prefilling = None
         self._prefill_cache = None
@@ -361,23 +460,39 @@ class Engine:
                 for r in self._slots]
         if not any(r is not None for r in reqs):
             return
-        logits, self.kv.pools = self._decode(
+        # a tick with any degraded request runs the WHOLE pool through the
+        # xla-compiled step (one compiled step per tick is the engine
+        # invariant; healthy rows are row-independent either way)
+        decode = (
+            self._get_decode_xla()
+            if any(r is not None and r.degraded for r in reqs)
+            else self._decode
+        )
+        logits, self.kv.pools = decode(
             self.params, self.kv.pools,
             jnp.asarray(self._cur), jnp.asarray(self._ctx),
             jnp.asarray(self.kv.block_tables),
         )
         self._decode_steps += 1
-        next_tokens = self._sample_rows(np.asarray(logits[:, -1]), reqs)
+        rows = np.asarray(logits[:, -1])
+        next_tokens = self._sample_rows(rows, reqs)
         for i, req in enumerate(reqs):
             if req is None:
+                continue
+            if self.ecfg.verify and not np.isfinite(rows[i]).all():
+                # corrupted KV / a tripped verified matmul surfaces here as a
+                # nonfinite logits row; only this row's request pays
+                self._handle_fault(req)
                 continue
             self._ctx[i] += 1   # the fed token is now in the cache
             self._append_token(req, int(next_tokens[i]))
 
     # -------------------------------------------------------------- drive --
     def step(self) -> bool:
-        """One engine tick (admit -> prefill chunk -> decode step).
-        Returns True while there is work left."""
+        """One engine tick (deadline sweep -> admit -> prefill chunk ->
+        decode step).  Returns True while there is work left."""
+        self._tick += 1
+        self._sweep_deadlines()
         self._try_admit()
         self._advance_prefill()
         self._try_admit()    # a finished prefill may free the pipeline
@@ -399,5 +514,9 @@ class Engine:
             "prefill_chunks": self._prefill_chunks,
             "preemptions": self._preempt_count,
             "requests": len(self.results),
+            "faults_detected": self._faults_detected,
+            "retries": self._retries_total,
+            "deadline_evictions": self._deadline_evictions,
+            "degraded_requests": self._degraded_requests,
         }
         return dict(self.results)

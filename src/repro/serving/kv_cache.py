@@ -31,6 +31,7 @@ import numpy as np
 
 from repro.models import attention
 from repro.models import transformer as tf_model
+from repro.reliability.inject import maybe_fail
 
 __all__ = [
     "BlockAllocator",
@@ -68,7 +69,12 @@ class BlockAllocator:
             raise ValueError(f"alloc({n})")
         if n > len(self._free):
             return None
-        got = [self._free.pop() for _ in range(n)]
+        maybe_fail("kv.alloc")
+        # slice-atomically: popping one block at a time would leak the
+        # already-popped prefix if anything raised mid-loop (the invariant
+        # the fail-point property tests exercise)
+        got = self._free[-n:][::-1] if n else []
+        del self._free[len(self._free) - n:]
         self._allocated.update(got)
         return got
 
@@ -76,6 +82,8 @@ class BlockAllocator:
         for b in blocks:
             if b not in self._allocated:
                 raise ValueError(f"freeing block {b} not currently allocated")
+        maybe_fail("kv.free")
+        for b in blocks:
             self._allocated.discard(b)
             self._free.append(b)
 

@@ -8,6 +8,16 @@ latest-admitted running request is the victim — it has the least sunk decode
 work and frees its blocks fastest).  A preempted request re-queues at the
 *front* carrying its generated tokens, so its next admission re-prefills
 prompt+generated and generation continues where it stopped.
+
+Reliability additions (docs/reliability.md):
+
+  * **Deadlines** — a request may carry ``deadline_s`` (monotonic-clock
+    absolute); ``drop_expired`` sweeps the waiting queue each tick so a
+    request that can never be served in time stops occupying the head.
+  * **Retry backoff** — a request the engine faulted carries
+    ``not_before_tick``; admission skips it (without blocking the requests
+    behind it — a faulted head must not become head-of-line blocking) until
+    the engine's tick counter catches up.
 """
 
 from __future__ import annotations
@@ -56,6 +66,12 @@ class ServeRequest:
     first_token_s: Optional[float] = None
     finish_s: Optional[float] = None
 
+    # reliability state (engine-managed; docs/reliability.md)
+    deadline_s: Optional[float] = None       # absolute monotonic deadline
+    retries: int = 0                         # fault-triggered re-prefills
+    degraded: bool = False                   # decodes via the xla fallback
+    not_before_tick: int = 0                 # admission backoff after a fault
+
     @property
     def serve_prompt(self) -> np.ndarray:
         """Tokens to prefill at (re-)admission: prompt + already-generated."""
@@ -89,14 +105,34 @@ class FCFSScheduler:
     def add(self, req: ServeRequest) -> None:
         self.waiting.append(req)
 
-    def next_waiting(self) -> Optional[ServeRequest]:
-        return self.waiting[0] if self.waiting else None
+    def next_waiting(self, tick: Optional[int] = None) -> Optional[ServeRequest]:
+        """First admissible request.  With a ``tick``, requests still in
+        retry backoff are skipped *without* blocking those behind them."""
+        for req in self.waiting:
+            if tick is None or req.not_before_tick <= tick:
+                return req
+        return None
 
-    def pop(self) -> ServeRequest:
-        req = self.waiting.popleft()
-        req.admit_index = self._admitted
-        self._admitted += 1
-        return req
+    def pop(self, tick: Optional[int] = None) -> ServeRequest:
+        """Remove and stamp the request :meth:`next_waiting` chose."""
+        for i, req in enumerate(self.waiting):
+            if tick is None or req.not_before_tick <= tick:
+                del self.waiting[i]
+                req.admit_index = self._admitted
+                self._admitted += 1
+                return req
+        raise IndexError("no admissible request (all in retry backoff)")
+
+    def drop_expired(self, now: float) -> List[ServeRequest]:
+        """Sweep waiting requests whose deadline has passed (engine calls
+        once per tick; returns them so it can record the eviction)."""
+        expired = [
+            r for r in self.waiting
+            if r.deadline_s is not None and now >= r.deadline_s
+        ]
+        for r in expired:
+            self.waiting.remove(r)
+        return expired
 
     def pick_victim(self, running: List[ServeRequest]) -> ServeRequest:
         """Latest-admitted running request (least sunk decode work)."""

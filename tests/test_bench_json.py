@@ -142,6 +142,66 @@ def test_validate_serving_json_rejects_violations(tmp_path):
         "wave": p["wave"]})
 
 
+# ------------------------------------------------- reliability bench JSON ---
+reliability_bench = pytest.importorskip("benchmarks.reliability_bench")
+
+
+def test_reliability_bench_writes_schema_valid_json(tmp_path):
+    """The CI ``reliability`` job's invocation: tiny shape, the verify
+    overhead contract (<= 1.15x) and every chaos-smoke detection hold."""
+    out = tmp_path / "BENCH_reliability.json"
+    rc = reliability_bench.main(["--tiny", "--out", str(out)])
+    assert rc == 0 and out.exists()
+    payload = reliability_bench.validate_reliability_json(out)
+    vo = payload["verify_overhead"]
+    assert vo["ratio"] <= vo["max_ratio"]
+    assert all(payload["chaos_smoke"].values())
+
+
+def test_committed_reliability_baseline_validates():
+    """The committed BENCH_reliability.json must stay schema-valid."""
+    import pathlib
+    baseline = pathlib.Path(__file__).parent.parent / "BENCH_reliability.json"
+    payload = reliability_bench.validate_reliability_json(baseline)
+    assert payload["chaos_smoke"]["weight_flip_detected"] is True
+
+
+def test_validate_reliability_json_rejects_violations(tmp_path):
+    bad = tmp_path / "bad.json"
+
+    def payload(**over):
+        base = {
+            "schema_version": reliability_bench.RELIABILITY_SCHEMA_VERSION,
+            "jax_backend": "cpu",
+            "verify_overhead": {
+                "backend": "xla", "shape": [128, 256, 256], "iters": 3,
+                "unverified_us": 100.0, "verified_us": 105.0,
+                "ratio": 1.05, "max_ratio": reliability_bench.MAX_VERIFY_RATIO,
+            },
+            "chaos_smoke": {"weight_flip_detected": True,
+                            "quant_flip_detected": True,
+                            "nan_detected": True},
+        }
+        base.update(over)
+        return base
+
+    bad.write_text(json.dumps(payload()))
+    reliability_bench.validate_reliability_json(bad)   # the fixture passes
+
+    def check(match, **over):
+        bad.write_text(json.dumps(payload(**over)))
+        with pytest.raises(ValueError, match=match):
+            reliability_bench.validate_reliability_json(bad)
+
+    check("schema_version", schema_version=999)
+    vo = payload()["verify_overhead"]
+    # blowing the wall-time contract is a SCHEMA violation
+    check("wall time", verify_overhead=dict(vo, ratio=1.5))
+    # an escaped injected fault is a SCHEMA violation
+    cs = payload()["chaos_smoke"]
+    check("escaped detection", chaos_smoke=dict(cs, nan_detected=False))
+
+
 # ------------------------------------------------------- fleet bench JSON ---
 fleet = pytest.importorskip("benchmarks.fleet")
 

@@ -9,7 +9,8 @@ ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 
 def test_required_docs_exist():
-    for rel in ("README.md", "docs/api.md", "docs/tuning.md", "docs/architecture.md"):
+    for rel in ("README.md", "docs/api.md", "docs/tuning.md",
+                "docs/architecture.md", "docs/reliability.md"):
         assert (ROOT / rel).exists(), rel
 
 

@@ -47,10 +47,15 @@ def _cell(arch="llama3_8b", backend="pallas_dip", sharding="gspmd",
     elif effective == "dip_fsdp":
         probe = {"pallas_calls": 1, "collectives": {
             "psum": 0, "all_gather": 1, "all_to_all": 0, "ppermute": 0}}
+    vprobe = None
+    if sharding == "gspmd":
+        vprobe = {"pallas_calls_unverified": pallas,
+                  "pallas_calls_verified": pallas,
+                  "extra_pallas_calls": 0}
     return {
         "arch": arch, "backend": backend, "sharding": sharding,
         "effective_backend": effective, "quantization": quant,
-        "column_probe": probe,
+        "column_probe": probe, "verify_probe": vprobe,
         "stages": {
             "train": _stage(pallas, psum, ag,
                             status="skipped" if quant != "none" else "ok"),
@@ -142,6 +147,16 @@ def test_validator_rejects_structural_violations():
     bad["cells"][0]["stages"]["prefill"]["wall_us"] = 0
     with pytest.raises(ValueError, match="wall_us"):
         fleet.validate_fleet_json(bad)
+    # the ABFT verify contract is schema, not just a test: a gspmd cell
+    # must carry a probe, and the audit must add ZERO pallas launches
+    noprobe = _doc([_cell()])
+    noprobe["cells"][0]["verify_probe"] = None
+    with pytest.raises(ValueError, match="needs a verify_probe"):
+        fleet.validate_fleet_json(noprobe)
+    leaky = _doc([_cell()])
+    leaky["cells"][0]["verify_probe"]["extra_pallas_calls"] = 1
+    with pytest.raises(ValueError, match="zero kernels"):
+        fleet.validate_fleet_json(leaky)
 
 
 def test_validator_enforces_placement_contracts():
