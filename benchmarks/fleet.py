@@ -13,12 +13,17 @@ it runs the three serving-stack stages at reduced dims:
 
 and records, per stage, structural evidence straight from the jaxpr —
 ``pallas_call`` launch count, collective counts (psum / all_gather /
-all_to_all / ppermute via ``kernels.dip_matmul_sharded.count_collectives``),
-a peak-live-bytes estimate from a top-level liveness walk — plus wall time
-and pass/fail.  Explicitly sharded cells additionally run a **column probe**:
-one column-parallel projection dispatch whose collective counts pin the
-paper's placement contract (``dip_tp`` columns: ZERO collectives; ``dip_fsdp``:
-exactly one all_gather, no psum).
+all_to_all / ppermute / reduce_scatter via
+``kernels.dip_matmul_sharded.count_collectives``), a peak-live-bytes
+estimate from a top-level liveness walk — plus wall time and pass/fail.
+Explicitly sharded cells additionally run a **column probe**: one
+column-parallel projection dispatch whose collective counts pin the paper's
+placement contract (``dip_tp`` columns: ZERO collectives; ``dip_fsdp``:
+exactly one all_gather, no psum; ``dip_sp``: the gather moved INSIDE the
+kernel's load stage — ppermutes only; ``dip_ep``: collective-free, the MoE
+all_to_alls live in ``models.moe`` and are counted per stage).  ``pp``
+cells run the pipelined train step (prefill/decode record skipped — the
+stage axis is a training schedule).
 
 The output is schema-validated ``BENCH_fleet.json``.  The committed copy is
 the baseline: :func:`validate_fleet_json` enforces the intra-document
@@ -31,8 +36,9 @@ tiny matrix and diffs; refresh the baseline with::
 
 Quantized backends (``dip_int8w`` / ``dip_fp8``) are inference-only (the
 trainer rejects them); their train stage records as skipped, never failed.
-Sharded cells (``tp`` / ``fsdp``) re-exec onto forced host devices when the
-current topology is single-device, mirroring ``kernels_bench --sharded``.
+Sharded cells (``tp`` / ``fsdp`` / ``sp`` / ``ep`` / ``pp``) re-exec onto
+forced host devices when the current topology is single-device, mirroring
+``kernels_bench --sharded``.
 """
 
 from __future__ import annotations
@@ -53,17 +59,20 @@ FLEET_SCHEMA_VERSION = 1
 DEFAULT_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_fleet.json"
 
 BACKENDS = ("xla", "pallas_dip", "dip_int8w", "dip_fp8")
-SHARDINGS = ("gspmd", "tp", "fsdp")
+SHARDINGS = ("gspmd", "tp", "fsdp", "sp", "ep", "pp")
 STAGES = ("train", "prefill", "decode")
-COLLECTIVES = ("psum", "all_gather", "all_to_all", "ppermute")
+COLLECTIVES = ("psum", "all_gather", "all_to_all", "ppermute",
+               "reduce_scatter")
 
 # Quantization scheme each backend-axis value implies ("none" = float).
 QUANT_FOR_BACKEND = {"xla": "none", "pallas_dip": "none",
                      "dip_int8w": "int8", "dip_fp8": "fp8_e4m3"}
-# DiP-layout backends swap to the explicit sharded kernels under tp/fsdp
-# (the registry dispatches off the weight's attached plan); xla stays xla
-# and lets GSPMD place the collectives.
-SHARDED_EFFECTIVE = {"tp": "dip_tp", "fsdp": "dip_fsdp"}
+# DiP-layout backends swap to the explicit sharded kernels under tp/fsdp/
+# sp/ep (the registry dispatches off the weight's attached plan); xla stays
+# xla and lets GSPMD place the collectives; pp keeps the config's backend
+# inside each stage (the stage axis is orthogonal to the matmul dispatch).
+SHARDED_EFFECTIVE = {"tp": "dip_tp", "fsdp": "dip_fsdp",
+                     "sp": "dip_sp", "ep": "dip_ep"}
 
 # Reduced stage dims — one compiled shape per stage across the whole fleet.
 DIMS = {
@@ -96,6 +105,18 @@ def tiny_cells(archs: Sequence[str]) -> List[Tuple[str, str, str]]:
     for a in ("llama3_8b", "zamba2_2_7b"):
         if a in archs:
             cells.append((a, "pallas_dip", "fsdp"))
+    # sequence-parallel: the dense family plus the hybrid-SSM layout (same
+    # pair as fsdp — the schedules differ, the coverage question does not)
+    for a in ("llama3_8b", "zamba2_2_7b"):
+        if a in archs:
+            cells.append((a, "pallas_dip", "sp"))
+    # expert-parallel: both MoE families (with and without shared experts)
+    for a in ("qwen3_moe_235b_a22b", "deepseek_v2_lite_16b"):
+        if a in archs:
+            cells.append((a, "pallas_dip", "ep"))
+    # pipeline stages: the dense scan family (see pipeline_train_step_fn)
+    if "llama3_8b" in archs:
+        cells.append(("llama3_8b", "pallas_dip", "pp"))
     if "llama3_8b" in archs:
         cells.append(("llama3_8b", "xla", "tp"))
     return cells
@@ -172,11 +193,20 @@ def cell_config(arch: str, backend: str, sharding: str):
         overrides["matmul_backend"] = backend
     else:
         if backend != "xla":
-            effective = SHARDED_EFFECTIVE[sharding]
+            effective = SHARDED_EFFECTIVE.get(sharding, backend)
         overrides["matmul_backend"] = effective
         overrides["compute_dtype"] = "float32"
-        mesh_axes = {"data": 2, "model": 1} if sharding == "fsdp" \
-            else {"data": 1, "model": 2}
+        if sharding in ("sp", "ep", "pp"):
+            # the plan's strategy drives expert_plan / stage selection; the
+            # legacy tp/fsdp cells predate cfg.sharding threading and keep
+            # their arch default (the registry dispatches off the backend)
+            overrides["sharding"] = sharding
+        if sharding == "fsdp":
+            mesh_axes = {"data": 2, "model": 1}
+        elif sharding == "pp":
+            mesh_axes = {"stage": 2, "data": 1, "model": 1}
+        else:
+            mesh_axes = {"data": 1, "model": 2}
     cfg = get_config(arch).reduced(**overrides)
     return cfg, effective, quant, mesh_axes
 
@@ -186,7 +216,8 @@ def _make_mesh(mesh_axes: Optional[Dict[str, int]]):
         return None
     from repro.distributed.plan import make_local_mesh
 
-    return make_local_mesh(data=mesh_axes["data"], model=mesh_axes["model"])
+    return make_local_mesh(data=mesh_axes["data"], model=mesh_axes["model"],
+                           stage=mesh_axes.get("stage", 1))
 
 
 def _make_params(cfg, plan):
@@ -236,7 +267,15 @@ def _run_train(cfg, params, plan, iters: int) -> Dict[str, Any]:
     from repro.optim import AdamW
 
     opt = AdamW(lr=1e-3)
-    step = jax.jit(tf_model.train_step_fn(cfg, opt, plan=plan))
+    if plan is not None and getattr(plan, "stages", 1) > 1:
+        # stage axis in the plan: the trainer's pipelined step (GPipe
+        # microbatching, boundary ppermutes overlapped with stage compute)
+        from repro.distributed import pipeline as pp_lib
+
+        step = jax.jit(pp_lib.pipeline_train_step_fn(
+            cfg, opt, plan, n_micro=DIMS["train_batch"]))
+    else:
+        step = jax.jit(tf_model.train_step_fn(cfg, opt, plan=plan))
     state = {"params": params, "opt_state": opt.init(params),
              "step": jnp.zeros((), jnp.int32)}
     rng = np.random.default_rng(0)
@@ -422,6 +461,13 @@ def run_cell(arch: str, backend: str, sharding: str, *,
                 "reason": f"{quant} weights are inference-only "
                           "(trainer rejects quantized configs)"}
             continue
+        if sharding == "pp" and stage != "train":
+            cell["stages"][stage] = {
+                "status": "skipped",
+                "reason": "pipeline stages are a training schedule (GPipe "
+                          "microbatching amortizes the bubble over a batch; "
+                          "serving runs tp/sp — see docs/distributed.md)"}
+            continue
         try:
             params = _make_params(cfg, plans[stage])
             cell["stages"][stage] = _STAGE_RUNNERS[stage](
@@ -430,7 +476,7 @@ def run_cell(arch: str, backend: str, sharding: str, *,
             cell["stages"][stage] = {
                 "status": "failed",
                 "reason": f"{type(e).__name__}: {e}"[:300]}
-    if effective in ("dip_tp", "dip_fsdp"):
+    if effective in ("dip_tp", "dip_fsdp", "dip_sp", "dip_ep"):
         cell["column_probe"] = _column_probe(cfg, plans["decode"])
     if sharding == "gspmd":
         # the verified-dispatch subset: single-device cells cover every
@@ -460,6 +506,20 @@ def validate_fleet_json(payload: Dict[str, Any]) -> None:
       stage issues no all_gather (columns stay sharded, rows psum);
     * ``dip_fsdp`` cells: column probe shows exactly one all_gather and no
       psum;
+    * ``dip_sp`` cells: the column probe gathers INSIDE the kernel's load
+      stage — at least one ppermute, and zero psum / all_gather /
+      all_to_all / reduce_scatter; the forward stages (prefill/decode) may
+      not all_gather at all (the sequence-parallel overlap contract: the
+      pre-kernel gather never reappears; train's backward carries
+      all_gathers as the AD duals of the forward reduce_scatters);
+    * ``dip_ep`` cells: the column probe is collective-free (dense
+      projections place like ``dip_tp``); the prefill stage shows EXACTLY
+      two all_to_alls per MoE forward body (dispatch + combine — the
+      2-a2a contract of ``models.moe``), decode likewise, and train at
+      least two (forward + transposed backward scan bodies);
+    * ``pp`` cells: prefill/decode are recorded skipped (pipeline stages
+      are a training schedule), and the train stage's jaxpr carries the
+      boundary ppermute;
     * for ``tiny``/``full`` matrices: every arch in the document has at
       least one cell where train, prefill AND decode all passed.
     """
@@ -527,25 +587,74 @@ def validate_fleet_json(payload: Dict[str, Any]) -> None:
 
         probe = cell.get("column_probe")
         eff = cell["effective_backend"]
-        if eff in ("dip_tp", "dip_fsdp"):
+        if eff in ("dip_tp", "dip_fsdp", "dip_sp", "dip_ep"):
             if not isinstance(probe, dict):
                 errs.append(f"{where}: {eff} cell needs a column_probe")
             else:
                 pc = probe.get("collectives", {})
-                if eff == "dip_tp" and any(pc.get(k, 0) for k in COLLECTIVES):
+                if eff in ("dip_tp", "dip_ep") and any(
+                        pc.get(k, 0) for k in COLLECTIVES):
                     errs.append(
-                        f"{where}: dip_tp column probe must show zero "
+                        f"{where}: {eff} column probe must show zero "
                         f"collectives, got {pc}")
                 if eff == "dip_fsdp" and (
                         pc.get("all_gather") != 1 or pc.get("psum", 0) != 0):
                     errs.append(
                         f"{where}: dip_fsdp column probe must show exactly "
                         f"one all_gather and zero psum, got {pc}")
+                if eff == "dip_sp" and (
+                        pc.get("ppermute", 0) < 1
+                        or any(pc.get(k, 0) for k in COLLECTIVES
+                               if k != "ppermute")):
+                    errs.append(
+                        f"{where}: dip_sp column probe must gather inside "
+                        f"the kernel (ppermute >= 1, nothing else), got {pc}")
             dec = stages.get("decode", {})
             if (eff == "dip_tp" and dec.get("status") == "ok"
                     and dec.get("collectives", {}).get("all_gather", 0) > 0):
                 errs.append(f"{where}: dip_tp decode must not all_gather "
                             "(columns stay sharded; rows psum)")
+            if eff == "dip_sp":
+                # forward stages only: the train backward contains
+                # all_gathers as the AD duals of the forward
+                # reduce_scatters (fwd RS <-> bwd AG is the standard
+                # sequence-parallel transpose pair)
+                for st in ("prefill", "decode"):
+                    rec = stages.get(st, {})
+                    if (rec.get("status") == "ok"
+                            and rec.get("collectives", {}).get(
+                                "all_gather", 0) > 0):
+                        errs.append(
+                            f"{where}.{st}: dip_sp forward must never "
+                            "all_gather — x blocks ring through the "
+                            "kernel's load stage")
+            if eff == "dip_ep":
+                for st, want in (("prefill", 2), ("decode", 2)):
+                    rec = stages.get(st, {})
+                    if rec.get("status") != "ok":
+                        continue
+                    a2a = rec.get("collectives", {}).get("all_to_all", 0)
+                    if a2a != want:
+                        errs.append(
+                            f"{where}.{st}: dip_ep must show exactly {want} "
+                            f"all_to_alls per MoE forward body (dispatch + "
+                            f"combine), got {a2a}")
+                tr = stages.get("train", {})
+                if (tr.get("status") == "ok"
+                        and tr.get("collectives", {}).get("all_to_all", 0) < 2):
+                    errs.append(f"{where}.train: dip_ep train must carry the "
+                                "dispatch/combine all_to_all pair")
+
+        if cell["sharding"] == "pp":
+            for st in ("prefill", "decode"):
+                if stages.get(st, {}).get("status") != "skipped":
+                    errs.append(f"{where}.{st}: pp cells record serving "
+                                "stages as skipped (training schedule)")
+            tr = stages.get("train", {})
+            if (tr.get("status") == "ok"
+                    and tr.get("collectives", {}).get("ppermute", 0) < 1):
+                errs.append(f"{where}.train: pp train must carry the stage-"
+                            "boundary ppermute")
 
         vp = cell.get("verify_probe")
         if cell["sharding"] == "gspmd":

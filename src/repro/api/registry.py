@@ -887,11 +887,15 @@ def matmul(
         # (quantized weights route to their scheme's kernel, DipWeight to
         # the de-shear-as-gather xla path).
         plan = getattr(weights[0], "plan", None)
+        # dip_tp/dip_sp/dip_ep split on the TP axis via the plan's kind;
+        # dip_fsdp splits K on the plan's fsdp axis — each decomposes when
+        # its split is absent
+        needs_fsdp = be.name == "dip_fsdp"
         if (
             plan is None
             or getattr(plan, "mesh", None) is None
-            or (be.name == "dip_tp" and plan.kind == "replicated")
-            or (be.name == "dip_fsdp" and plan.fsdp is None)
+            or (not needs_fsdp and plan.kind == "replicated")
+            or (needs_fsdp and plan.fsdp is None)
         ):
             return matmul(
                 x, w, backend=None, epilogue=epilogue if epilogue != "none" else None,
@@ -980,7 +984,9 @@ def matmul(
 def _register_builtins() -> None:
     from repro.kernels.dip_matmul import dip_matmul_pallas
     from repro.kernels.dip_matmul_q import dip_matmul_q_pallas
-    from repro.kernels.dip_matmul_sharded import dip_fsdp_matmul, dip_tp_matmul
+    from repro.kernels.dip_matmul_sharded import (
+        dip_fsdp_matmul, dip_sp_matmul, dip_tp_matmul,
+    )
     from repro.kernels.dip_systolic import dip_systolic_pallas
     from repro.kernels.ws_matmul import ws_matmul_pallas
 
@@ -1080,4 +1086,22 @@ def _register_builtins() -> None:
         epilogues=EPILOGUES, prologues=PROLOGUES,
         description="explicit ZeRO-3 shard_map backend: K-sharded storage, "
                     "all-gather-on-load, batch(M)-sharded compute",
+    )
+    register_backend(
+        "dip_sp", dip_sp_matmul, layout="sharded", tiled=False,
+        epilogues=EPILOGUES, prologues=PROLOGUES,
+        description="sequence-parallel shard_map backend: column streams "
+                    "the M-sharded x around a ppermute ring inside the "
+                    "dispatch (transfer overlaps the launch), row combines "
+                    "with psum_scatter back to sequence-sharded",
+    )
+    register_backend(
+        # dense projections under expert parallelism place collectives
+        # exactly like dip_tp; the MoE-specific all-to-all dispatch lives in
+        # models.moe.moe_ffn, keyed off ShardingPlan.expert_plan
+        "dip_ep", dip_tp_matmul, layout="sharded", tiled=False,
+        epilogues=EPILOGUES, prologues=PROLOGUES,
+        description="expert-parallel strategy backend: dip_tp placement for "
+                    "dense projections; MoE expert banks dispatch tokens "
+                    "over the model axis with paired all-to-alls (moe_ffn)",
     )

@@ -82,6 +82,16 @@ class ArchConfig:
                                      #          kernels (dip_tp backend)
                                      #   fsdp   explicit K-sharded
                                      #          all-gather-on-load (dip_fsdp)
+                                     #   sp     sequence-parallel: activations
+                                     #          stay M-sharded, x blocks ring
+                                     #          through the kernel's load
+                                     #          stage (dip_sp backend)
+                                     #   ep     expert-parallel MoE: expert
+                                     #          banks sharded, all-to-all
+                                     #          token dispatch (dip_ep)
+                                     #   pp     pipeline stages over a "stage"
+                                     #          mesh axis (GPipe microbatching
+                                     #          via distributed.pipeline)
                                      # (see docs/distributed.md)
     remat: str = "block"             # none | block  (remat each scanned block)
     # notes for DESIGN.md §Arch-applicability

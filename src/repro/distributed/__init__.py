@@ -8,7 +8,7 @@ explicit ``dip_tp`` / ``dip_fsdp`` matmul backends dispatch on it.
 """
 
 from repro.distributed.compression import compressed_psum, compression_transform
-from repro.distributed.pipeline import pipeline_apply
+from repro.distributed.pipeline import pipeline_apply, pipeline_train_step_fn
 from repro.distributed.plan import (
     LAYER_RULES,
     ShardingPlan,
@@ -26,6 +26,7 @@ __all__ = [
     "make_production_mesh",
     "make_local_mesh",
     "pipeline_apply",
+    "pipeline_train_step_fn",
     "compression_transform",
     "compressed_psum",
 ]

@@ -17,9 +17,9 @@ unifies them:
   :class:`WeightPlan` (static pytree aux data), so the decision survives
   ``jit`` / ``scan`` / checkpoint round-trips and ``api.matmul`` can dispatch
   on ``(weight.plan, backend, epilogue)``: the explicit ``shard_map``
-  backends (``dip_tp`` / ``dip_fsdp``, see ``kernels/dip_matmul_sharded.py``)
-  consume it, and a weight with no plan decomposes to the implicit
-  GSPMD-on-xla path unchanged.
+  backends (``dip_tp`` / ``dip_sp`` / ``dip_fsdp`` / ``dip_ep``, see
+  ``kernels/dip_matmul_sharded.py``) consume it, and a weight with no plan
+  decomposes to the implicit GSPMD-on-xla path unchanged.
 
 Mesh convention (unchanged):
     single-pod : (16, 16)      axes ("data", "model")
@@ -64,7 +64,7 @@ __all__ = [
 ]
 
 # plan strategies an ArchConfig.sharding field can declare
-STRATEGIES = ("gspmd", "tp", "fsdp")
+STRATEGIES = ("gspmd", "tp", "fsdp", "sp", "ep", "pp")
 
 
 # --------------------------------------------------------------------------
@@ -82,8 +82,14 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     return jax.make_mesh(shape, axes)
 
 
-def make_local_mesh(data: int = 1, model: int = 1) -> Mesh:
-    """Small mesh over whatever devices exist (tests / CPU examples)."""
+def make_local_mesh(data: int = 1, model: int = 1, stage: int = 1) -> Mesh:
+    """Small mesh over whatever devices exist (tests / CPU examples).
+
+    ``stage > 1`` prepends a pipeline "stage" axis (GPipe microbatching via
+    ``distributed.pipeline``); the 2-axis shape is kept when absent so
+    existing checkpoint manifests round-trip unchanged."""
+    if stage > 1:
+        return jax.make_mesh((stage, data, model), ("stage", "data", "model"))
     return jax.make_mesh((data, model), ("data", "model"))
 
 
@@ -99,6 +105,9 @@ class WeightPlan:
         column      d_out sharded over ``axis``  (wq/wk/wv/w_gate/w_up/...)
         row         d_in  sharded over ``axis``  (wo/w_down/out_proj/...)
         replicated  no TP sharding
+        expert      MoE expert banks: the EXPERT dim sharded over ``axis``;
+                    ``models.moe.moe_ffn`` keys its all-to-all token
+                    dispatch/combine off this kind (expert parallelism)
 
     ``fsdp`` names the ZeRO-3 axis the complementary dim (and the ``dip_fsdp``
     backend's K split) shards over.  ``mesh`` is the mesh the decision was
@@ -114,10 +123,10 @@ class WeightPlan:
     mesh: Optional[Mesh] = None
 
     def __post_init__(self):
-        if self.kind not in ("column", "row", "replicated"):
+        if self.kind not in ("column", "row", "replicated", "expert"):
             raise ValueError(
-                f"WeightPlan.kind must be column | row | replicated, "
-                f"got {self.kind!r}"
+                f"WeightPlan.kind must be column | row | replicated | "
+                f"expert, got {self.kind!r}"
             )
 
     def axis_size(self, name: Optional[str]) -> int:
@@ -225,7 +234,14 @@ class ShardingPlan:
     execute: ``"gspmd"`` (implicit — XLA partitions the plain dot),
     ``"tp"`` (explicit column/row shard_map kernels via the ``dip_tp``
     backend), ``"fsdp"`` (explicit K-sharded all-gather-on-load via
-    ``dip_fsdp``).  ``strict=True`` turns divisibility fallbacks into errors.
+    ``dip_fsdp``), ``"sp"`` (sequence parallel: ``dip_sp`` ring-streamed
+    column loads + reduce_scatter rows), ``"ep"`` (expert parallel: dense
+    projections via ``dip_ep`` — same placement as ``dip_tp`` — and MoE
+    expert banks dispatched over the model axis with paired all-to-alls,
+    keyed off :attr:`expert_plan`), ``"pp"`` (pipeline stages over a
+    "stage" mesh axis — GPipe microbatching through
+    ``distributed.pipeline``).  ``strict=True`` turns divisibility
+    fallbacks into errors.
     """
 
     mesh: Mesh
@@ -237,17 +253,26 @@ class ShardingPlan:
     dp: Tuple[str, ...] = ()      # batch axes
     fsdp: Optional[str] = None    # parameter shard axis
     tp: Optional[str] = None      # tensor/expert axis
+    stage: Optional[str] = None   # pipeline stage axis
+    stages: int = 1               # pipeline depth (1 = no pipelining)
 
     def __post_init__(self):
         names = self.mesh.axis_names
         self.dp = tuple(a for a in ("pod", "data") if a in names)
         self.fsdp = "data" if "data" in names else None
         self.tp = "model" if "model" in names else None
+        self.stage = "stage" if "stage" in names else None
+        self.stages = int(self.mesh.shape[self.stage]) if self.stage else 1
         strategy = self.strategy
         if strategy not in STRATEGIES:
             raise ValueError(
                 f"unknown sharding strategy {strategy!r} "
                 f"(cfg.sharding); supported: {STRATEGIES}"
+            )
+        if strategy == "pp" and self.stages < 2:
+            raise ValueError(
+                "sharding='pp' needs a mesh with a 'stage' axis of size "
+                ">= 2 (make_local_mesh(stage=...))"
             )
 
     # ---------------------------------------------------------- strategy ---
@@ -258,8 +283,20 @@ class ShardingPlan:
     @property
     def explicit_backend(self) -> Optional[str]:
         """Registered sharded backend this strategy routes DiP projections
-        through (None for the implicit GSPMD path)."""
-        return {"tp": "dip_tp", "fsdp": "dip_fsdp", "gspmd": None}[self.strategy]
+        through (None for the implicit GSPMD path; pp stages run whatever
+        backend the config names inside each stage)."""
+        return {"tp": "dip_tp", "fsdp": "dip_fsdp", "sp": "dip_sp",
+                "ep": "dip_ep", "pp": None, "gspmd": None}[self.strategy]
+
+    @property
+    def expert_plan(self) -> Optional[WeightPlan]:
+        """The ``WeightPlan(kind="expert")`` MoE expert banks dispatch on
+        under the ep strategy (expert dim over the model axis); None
+        otherwise, which keeps ``moe_ffn`` on its dense-style path."""
+        if self.strategy != "ep" or not self.tp:
+            return None
+        return WeightPlan(kind="expert", axis=self.tp, fsdp=None,
+                          mesh=self.mesh)
 
     # ---------------------------------------------------------- helpers ----
     def _tp_if(self, n: int, leaf: Optional[str] = None) -> Optional[str]:

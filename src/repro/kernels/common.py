@@ -16,8 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["VMEM", "SMEM", "CompilerParams", "deshear_block", "shear_block",
-           "rotate_left_dynamic"]
+__all__ = ["VMEM", "SMEM", "CompilerParams", "shard_map", "deshear_block",
+           "shear_block", "rotate_left_dynamic"]
 
 # jax renamed these between releases (MemorySpace.VMEM <-> VMEM,
 # CompilerParams <-> TPUCompilerParams); resolve whichever spelling exists so
@@ -25,6 +25,12 @@ __all__ = ["VMEM", "SMEM", "CompilerParams", "deshear_block", "shear_block",
 VMEM = getattr(pltpu, "VMEM", None) or pltpu.MemorySpace.VMEM
 SMEM = getattr(pltpu, "SMEM", None) or pltpu.MemorySpace.SMEM
 CompilerParams = getattr(pltpu, "TPUCompilerParams", None) or pltpu.CompilerParams
+
+# shard_map graduated from jax.experimental to the top level; every sharded
+# module imports THIS alias so the repo tracks the move in one place.
+shard_map = getattr(jax, "shard_map", None)
+if shard_map is None:  # pre-graduation toolchains
+    from jax.experimental.shard_map import shard_map  # noqa: F811
 
 
 def _barrel_shear(block: jax.Array, tile: int, *, inverse: bool) -> jax.Array:

@@ -35,8 +35,15 @@ def main():
     ap.add_argument("--mesh", default="none", choices=["none", "local", "single", "multi"])
     ap.add_argument("--sharding", default=None, choices=list(STRATEGIES),
                     help="override cfg.sharding: gspmd (implicit XLA "
-                         "partitioning) | tp | fsdp (explicit shard_map "
-                         "backends — see docs/distributed.md)")
+                         "partitioning) | tp | fsdp | sp | ep (explicit "
+                         "shard_map backends) | pp (pipeline stage axis; "
+                         "pair with --stages — see docs/distributed.md)")
+    ap.add_argument("--stages", type=int, default=1,
+                    help="pipeline stages for --sharding pp: the local mesh "
+                         "gets a leading 'stage' axis of this size")
+    ap.add_argument("--microbatches", type=int, default=0,
+                    help="GPipe microbatches per step for --sharding pp "
+                         "(0 = auto: 2x stages)")
     ap.add_argument("--strict-sharding", action="store_true",
                     help="raise (instead of warn-once + replicate) when a "
                          "param dim does not divide its mesh axis")
@@ -52,12 +59,13 @@ def main():
     if args.sharding:
         import dataclasses
         cfg = dataclasses.replace(cfg, sharding=args.sharding)
-        if args.sharding != "gspmd":
+        explicit = {"tp": "dip_tp", "fsdp": "dip_fsdp", "sp": "dip_sp", "ep": "dip_ep"}
+        if args.sharding in explicit:
             # the explicit strategies dispatch through their sharded backend;
-            # without this the flag would silently keep the implicit path
-            cfg = dataclasses.replace(
-                cfg, matmul_backend={"tp": "dip_tp", "fsdp": "dip_fsdp"}[args.sharding]
-            )
+            # without this the flag would silently keep the implicit path.
+            # pp is a stage axis, not a backend — the per-stage matmuls keep
+            # the config's backend.
+            cfg = dataclasses.replace(cfg, matmul_backend=explicit[args.sharding])
     if args.autotune:
         # registers measured tuning entries before train_step traces, so the
         # jitted step dispatches with them
@@ -66,7 +74,17 @@ def main():
 
     mesh = plan = None
     if args.mesh == "local":
-        mesh = make_local_mesh(data=jax.device_count())
+        if args.stages > 1:
+            if jax.device_count() % args.stages:
+                raise SystemExit(
+                    f"--stages {args.stages} does not divide "
+                    f"{jax.device_count()} devices"
+                )
+            mesh = make_local_mesh(
+                data=jax.device_count() // args.stages, model=1, stage=args.stages
+            )
+        else:
+            mesh = make_local_mesh(data=jax.device_count())
         plan = make_plan(mesh, cfg, "train", strict=args.strict_sharding)
     elif args.mesh in ("single", "multi"):
         mesh = make_production_mesh(multi_pod=args.mesh == "multi")
@@ -80,7 +98,9 @@ def main():
 
     trainer = Trainer(
         cfg,
-        TrainerConfig(steps=args.steps, ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir),
+        TrainerConfig(steps=args.steps, ckpt_every=args.ckpt_every,
+                      ckpt_dir=args.ckpt_dir,
+                      pipeline_microbatches=args.microbatches),
         optimizer=opt,
         mesh=mesh,
         plan=plan,

@@ -267,7 +267,7 @@ def _fuses_rmsnorm(cfg) -> bool:
 
 
 def _transformer_block(x, lp, cfg, *, positions, rope, cache, kv_chunk,
-                       constrain, unroll=False, attn_backend=None):
+                       constrain, plan=None, unroll=False, attn_backend=None):
     fuse_norm = _fuses_rmsnorm(cfg)
     attn_in, attn_g = (
         (x, lp["attn_norm"]) if fuse_norm
@@ -288,7 +288,8 @@ def _transformer_block(x, lp, cfg, *, positions, rope, cache, kv_chunk,
         # the explicit norm (fusing it into each expert dispatch would
         # recompute it per projection)
         ffn_in = layers.rms_norm(x, lp["ffn_norm"], cfg.norm_eps)
-        f, aux = moe.moe_ffn(ffn_in, lp, cfg, constrain=constrain)
+        f, aux, _ = moe.moe_ffn(ffn_in, lp, cfg, plan=plan,
+                                constrain=constrain)
         x = x + f
     else:
         ffn_in, ffn_g = (
@@ -341,7 +342,8 @@ def forward(
     Distribution enters through ``plan``: its activation constraints replace
     the old bare ``constrain`` callback, and DiP weights that carry the
     plan's per-weight metadata dispatch the explicit sharded backends when
-    ``cfg.matmul_backend`` names one (``dip_tp`` / ``dip_fsdp``)."""
+    ``cfg.matmul_backend`` names one (``dip_tp`` / ``dip_sp`` /
+    ``dip_fsdp`` / ``dip_ep``)."""
     constrain = layers.resolve_constrain(plan, constrain)
     cd = jnp.dtype(cfg.compute_dtype)
     if embeddings is not None:
@@ -376,8 +378,8 @@ def forward(
                 lcache = dict(lcache, pos=start)  # all layers share the position
             x, new_cache, aux_i = _transformer_block(
                 x, lp, cfg, positions=positions, rope=rope, cache=lcache,
-                kv_chunk=kv_chunk, constrain=constrain, unroll=unroll,
-                attn_backend=attn_backend,
+                kv_chunk=kv_chunk, constrain=constrain, plan=plan,
+                unroll=unroll, attn_backend=attn_backend,
             )
             if new_cache is not None:
                 new_cache = _strip_pos(new_cache)
@@ -646,7 +648,8 @@ def paged_decode_step_fn(cfg, *, plan=None, constrain: Optional[Constrain] = Non
                 )
                 if cfg.is_moe:
                     ffn_in = layers.rms_norm(x, lp["ffn_norm"], cfg.norm_eps)
-                    f, _ = moe.moe_ffn(ffn_in, lp, cfg, constrain=constrain)
+                    f, _, _ = moe.moe_ffn(ffn_in, lp, cfg, plan=plan,
+                                          constrain=constrain)
                     x = x + f
                 else:
                     ffn_in, ffn_g = (

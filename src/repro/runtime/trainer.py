@@ -57,6 +57,10 @@ class TrainerConfig:
     # on a detected weight fault: restore the latest checkpoint and keep
     # training (True) or raise ReliabilityError naming the corrupt leaf
     recover_on_fault: bool = True
+    # GPipe microbatch count when the plan carries a stage axis
+    # (plan.stages > 1); 0 = auto (2x the stage count keeps the overlapped
+    # schedule's bubble fraction at 50% — see distributed/pipeline.py)
+    pipeline_microbatches: int = 0
 
 
 class Trainer:
@@ -104,9 +108,20 @@ class Trainer:
             emit_embeddings=cfg.d_model if cfg.frontend != "none" else None,
         )
         self.ckpt = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.keep)
-        self._step_fn = tf_model.train_step_fn(
-            cfg, self.opt, plan=plan, guard=tcfg.guard
-        )
+        if plan is not None and getattr(plan, "stages", 1) > 1:
+            # plan carries a stage axis: run the layer stack through the
+            # overlapped GPipe schedule instead of the flat scan
+            from repro.distributed import pipeline as pp_lib
+
+            self._step_fn = pp_lib.pipeline_train_step_fn(
+                cfg, self.opt, plan,
+                n_micro=tcfg.pipeline_microbatches or 2 * plan.stages,
+                guard=tcfg.guard,
+            )
+        else:
+            self._step_fn = tf_model.train_step_fn(
+                cfg, self.opt, plan=plan, guard=tcfg.guard
+            )
         self._jit_step = None
         self.metrics_log: list = []
         # chaos-testing injection point: called as state = step_hook(step_no,

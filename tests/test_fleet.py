@@ -23,13 +23,15 @@ ARCHS = ["llama3_8b", "deepseek_v2_lite_16b", "zamba2_2_7b"]
 
 
 # ---------------------------------------------------------- doc synthesis ----
-def _stage(pallas=4, psum=0, ag=0, wall=123.4, status="ok"):
+def _stage(pallas=4, psum=0, ag=0, wall=123.4, status="ok", ppermute=0,
+           a2a=0, rs=0):
     if status != "ok":
         return {"status": status, "reason": "synthetic"}
     return {
         "status": "ok", "wall_us": wall, "pallas_calls": pallas,
         "collectives": {"psum": psum, "all_gather": ag,
-                        "all_to_all": 0, "ppermute": 0},
+                        "all_to_all": a2a, "ppermute": ppermute,
+                        "reduce_scatter": rs},
         "peak_live_bytes": 1 << 20,
     }
 
@@ -37,33 +39,47 @@ def _stage(pallas=4, psum=0, ag=0, wall=123.4, status="ok"):
 def _cell(arch="llama3_8b", backend="pallas_dip", sharding="gspmd",
           pallas=4, psum=0, ag=0):
     effective = backend
-    if sharding != "gspmd" and backend != "xla":
-        effective = {"tp": "dip_tp", "fsdp": "dip_fsdp"}[sharding]
+    if sharding not in ("gspmd", "pp") and backend != "xla":
+        effective = fleet.SHARDED_EFFECTIVE[sharding]
     quant = fleet.QUANT_FOR_BACKEND[backend]
     probe = None
-    if effective == "dip_tp":
+    if effective in ("dip_tp", "dip_ep"):
         probe = {"pallas_calls": 1, "collectives": dict.fromkeys(
             fleet.COLLECTIVES, 0)}
     elif effective == "dip_fsdp":
-        probe = {"pallas_calls": 1, "collectives": {
-            "psum": 0, "all_gather": 1, "all_to_all": 0, "ppermute": 0}}
+        probe = {"pallas_calls": 1, "collectives": dict(
+            dict.fromkeys(fleet.COLLECTIVES, 0), all_gather=1)}
+    elif effective == "dip_sp":
+        probe = {"pallas_calls": 2, "collectives": dict(
+            dict.fromkeys(fleet.COLLECTIVES, 0), ppermute=1)}
     vprobe = None
     if sharding == "gspmd":
         vprobe = {"pallas_calls_unverified": pallas,
                   "pallas_calls_verified": pallas,
                   "extra_pallas_calls": 0}
+    # keep the synthetic cell legal under the per-strategy contracts:
+    # dip_sp never all_gathers, dip_ep carries the 2-a2a pair, pp records
+    # serving stages skipped and ppermutes in train
+    a2a = 2 if effective == "dip_ep" else 0
+    if effective == "dip_sp":
+        ag = 0
+    stages = {
+        "train": _stage(pallas, psum, ag, a2a=a2a,
+                        ppermute=1 if sharding == "pp" else 0,
+                        status="skipped" if quant != "none" else "ok"),
+        "prefill": _stage(pallas, psum, ag, a2a=a2a),
+        # dip_tp decode must not all_gather — keep the synthetic legal
+        "decode": _stage(pallas, psum,
+                         0 if effective == "dip_tp" else ag, a2a=a2a),
+    }
+    if sharding == "pp":
+        stages["prefill"] = _stage(status="skipped")
+        stages["decode"] = _stage(status="skipped")
     return {
         "arch": arch, "backend": backend, "sharding": sharding,
         "effective_backend": effective, "quantization": quant,
         "column_probe": probe, "verify_probe": vprobe,
-        "stages": {
-            "train": _stage(pallas, psum, ag,
-                            status="skipped" if quant != "none" else "ok"),
-            "prefill": _stage(pallas, psum, ag),
-            # dip_tp decode must not all_gather — keep the synthetic legal
-            "decode": _stage(pallas, psum,
-                             0 if effective == "dip_tp" else ag),
-        },
+        "stages": stages,
     }
 
 
@@ -184,6 +200,47 @@ def test_validator_enforces_placement_contracts():
         fleet.validate_fleet_json(leak)
 
 
+def test_validator_enforces_overlap_contracts():
+    """The PR-10 communication-hiding wins as schema rules: dip_sp gathers
+    inside the kernel (ppermute-only probe, no all_gather anywhere), dip_ep
+    carries exactly the dispatch/combine all_to_all pair, pp trains with the
+    boundary ppermute and records serving stages skipped."""
+    sp = _doc([_cell(sharding="sp")])
+    sp["cells"][0]["column_probe"]["collectives"]["all_gather"] = 1
+    with pytest.raises(ValueError, match="inside"):
+        fleet.validate_fleet_json(sp)
+    sp = _doc([_cell(sharding="sp")])
+    sp["cells"][0]["column_probe"]["collectives"]["ppermute"] = 0
+    with pytest.raises(ValueError, match="ppermute >= 1"):
+        fleet.validate_fleet_json(sp)
+    sp = _doc([_cell(sharding="sp")])
+    sp["cells"][0]["stages"]["prefill"]["collectives"]["all_gather"] = 1
+    with pytest.raises(ValueError, match="never all_gather"):
+        fleet.validate_fleet_json(sp)
+
+    ep = _doc([_cell(sharding="ep")])
+    ep["cells"][0]["stages"]["prefill"]["collectives"]["all_to_all"] = 3
+    with pytest.raises(ValueError, match="exactly 2 all_to_alls"):
+        fleet.validate_fleet_json(ep)
+    ep = _doc([_cell(sharding="ep")])
+    ep["cells"][0]["column_probe"]["collectives"]["psum"] = 1
+    with pytest.raises(ValueError, match="zero"):
+        fleet.validate_fleet_json(ep)
+    ep = _doc([_cell(sharding="ep")])
+    ep["cells"][0]["stages"]["train"]["collectives"]["all_to_all"] = 0
+    with pytest.raises(ValueError, match="dispatch/combine"):
+        fleet.validate_fleet_json(ep)
+
+    pp = _doc([_cell(sharding="pp")])
+    pp["cells"][0]["stages"]["decode"] = _stage()
+    with pytest.raises(ValueError, match="skipped"):
+        fleet.validate_fleet_json(pp)
+    pp = _doc([_cell(sharding="pp")])
+    pp["cells"][0]["stages"]["train"]["collectives"]["ppermute"] = 0
+    with pytest.raises(ValueError, match="boundary ppermute"):
+        fleet.validate_fleet_json(pp)
+
+
 def test_validator_tiny_matrix_requires_full_arch_coverage():
     """In a tiny/full document every arch must pass all three stages in at
     least one cell — the acceptance headline of the fleet baseline."""
@@ -218,6 +275,19 @@ def test_cell_config_effective_backend_and_quant_mapping():
     cfg, eff, quant, _ = fleet.cell_config("musicgen_medium", "dip_fp8", "gspmd")
     assert quant == "fp8_e4m3" and cfg.quantization == "fp8_e4m3"
 
+    cfg, eff, quant, mesh = fleet.cell_config("llama3_8b", "pallas_dip", "sp")
+    assert eff == "dip_sp" and cfg.matmul_backend == "dip_sp"
+    assert cfg.sharding == "sp" and mesh == {"data": 1, "model": 2}
+
+    cfg, eff, quant, mesh = fleet.cell_config(
+        "qwen3_moe_235b_a22b", "pallas_dip", "ep")
+    assert eff == "dip_ep" and cfg.sharding == "ep"
+    assert mesh == {"data": 1, "model": 2}
+
+    cfg, eff, quant, mesh = fleet.cell_config("llama3_8b", "pallas_dip", "pp")
+    assert eff == "pallas_dip"        # stages run the config's own backend
+    assert cfg.sharding == "pp" and mesh == {"stage": 2, "data": 1, "model": 1}
+
 
 def test_tiny_matrix_covers_every_arch_with_full_stage_cells():
     from repro.configs import ALL_ARCHS
@@ -231,6 +301,11 @@ def test_tiny_matrix_covers_every_arch_with_full_stage_cells():
         assert any(c == (arch, "dip_int8w", "gspmd") for c in cells)
     assert ("llama3_8b", "pallas_dip", "tp") in cells
     assert ("llama3_8b", "pallas_dip", "fsdp") in cells
+    assert ("llama3_8b", "pallas_dip", "sp") in cells
+    assert ("zamba2_2_7b", "pallas_dip", "sp") in cells
+    assert ("qwen3_moe_235b_a22b", "pallas_dip", "ep") in cells
+    assert ("deepseek_v2_lite_16b", "pallas_dip", "ep") in cells
+    assert ("llama3_8b", "pallas_dip", "pp") in cells
     # arch filters subset consistently
     sub = fleet.tiny_cells(["llama3_8b"])
     assert set(sub) <= set(cells) and all(a == "llama3_8b" for a, _, _ in sub)

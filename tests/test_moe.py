@@ -33,18 +33,22 @@ def test_moe_output_shape_and_finite():
     cfg = _cfg()
     lp = _layer_slice(_params(cfg))
     x = jax.random.normal(KEY, (2, 8, cfg.d_model))
-    out, aux = moe.moe_ffn(x, lp, cfg)
+    out, aux, dropped = moe.moe_ffn(x, lp, cfg)
     assert out.shape == x.shape
     assert bool(jnp.isfinite(out).all()) and np.isfinite(float(aux))
+    assert int(dropped) == 0  # cf=1.25 leaves headroom at these shapes
 
 
 def test_capacity_overflow_drops_tokens_but_stays_finite():
-    """cf -> tiny forces drops; output must stay finite (dropped = zero)."""
+    """cf -> tiny forces drops; output must stay finite AND the drop
+    count must surface them (the old API dropped silently)."""
     cfg = _cfg(cf=0.05)
     lp = _layer_slice(_params(cfg))
     x = jax.random.normal(KEY, (2, 32, cfg.d_model))
-    out, _ = moe.moe_ffn(x, lp, cfg)
+    out, _, dropped = moe.moe_ffn(x, lp, cfg)
     assert bool(jnp.isfinite(out).all())
+    # 2 groups x 32 tokens x k=2 slots = 128 demanded, capacity 8/expert
+    assert int(dropped) > 0
 
 
 def test_huge_capacity_equals_explicit_dense_routing():
@@ -53,7 +57,8 @@ def test_huge_capacity_equals_explicit_dense_routing():
     cfg = _cfg(e=4, k=2, cf=64.0)
     lp = _layer_slice(_params(cfg))
     x = jax.random.normal(KEY, (1, 6, cfg.d_model))
-    got, _ = moe.moe_ffn(x, lp, cfg)
+    got, _, dropped = moe.moe_ffn(x, lp, cfg)
+    assert int(dropped) == 0  # cf=64 is ample: parity claim requires no drops
 
     # reference: dense routing
     xf = np.asarray(x.reshape(6, -1), np.float64)
@@ -78,13 +83,33 @@ def test_huge_capacity_equals_explicit_dense_routing():
     np.testing.assert_allclose(np.asarray(got[0]), want, atol=2e-3, rtol=1e-2)
 
 
+def test_single_expert_equals_dense_ffn_with_zero_drops():
+    """num_experts=1, top_k=1: routing is the identity (one expert takes
+    every token at gate 1.0), so moe_ffn must equal dense_ffn over the same
+    weights — and the surfaced drop count must be ZERO, which is what makes
+    the equality claim sound (a silent drop would fail it confusingly)."""
+    cfg = _cfg(e=1, k=1)
+    lp = _layer_slice(_params(cfg))
+    x = jax.random.normal(KEY, (2, 16, cfg.d_model))
+    got, _, dropped = moe.moe_ffn(x, lp, cfg)
+    assert int(dropped) == 0
+    want = moe.dense_ffn(
+        x,
+        {"w_gate": lp["w_gate"][0], "w_up": lp["w_up"][0],
+         "w_down": lp["w_down"][0]},
+        cfg,
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-4, rtol=1e-3)
+
+
 def test_shared_experts_added():
     cfg_ns = _cfg(shared=0)
     cfg_sh = _cfg(shared=1)
     lp = _layer_slice(_params(cfg_sh))
     x = jax.random.normal(KEY, (1, 4, cfg_sh.d_model))
-    out_sh, _ = moe.moe_ffn(x, lp, cfg_sh)
-    out_ns, _ = moe.moe_ffn(x, {k: v for k, v in lp.items() if not k.startswith("shared")}, cfg_ns)
+    out_sh, _, _ = moe.moe_ffn(x, lp, cfg_sh)
+    out_ns, _, _ = moe.moe_ffn(x, {k: v for k, v in lp.items() if not k.startswith("shared")}, cfg_ns)
     shared_only = moe.dense_ffn(
         x,
         {"w_gate": lp["shared_w_gate"], "w_up": lp["shared_w_up"],
@@ -111,7 +136,7 @@ def test_aux_loss_decreases_under_balanced_routing():
     lp = dict(_layer_slice(_params(cfg)))
     lp["router"] = jnp.zeros_like(lp["router"])  # perfectly uniform
     x = jax.random.normal(KEY, (1, 64, cfg.d_model))
-    _, aux_uniform = moe.moe_ffn(x, lp, cfg)
+    _, aux_uniform, _ = moe.moe_ffn(x, lp, cfg)
     lp["router"] = lp["router"].at[:, 0].set(10.0)  # collapse to expert 0
-    _, aux_collapsed = moe.moe_ffn(x, lp, cfg)
+    _, aux_collapsed, _ = moe.moe_ffn(x, lp, cfg)
     assert float(aux_collapsed) > float(aux_uniform)

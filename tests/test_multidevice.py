@@ -2,7 +2,8 @@
 (the shared helper lives in conftest — the pytest process must NOT set
 XLA_FLAGS so smoke tests see the real topology).
 
-Covers: pipeline-parallel equivalence, compressed psum, sharded train step on
+Covers: pipeline-parallel equivalence (bit-match + overlap schedule),
+pipelined train step vs flat, compressed psum, sharded train step on
 a small (2,2) mesh, plan PartitionSpec validity for every arch, divisibility
 fallback surfacing (warn-once / strict), and a reduced-config
 production-mesh dry-run (the CI-sized version of deliverable e).
@@ -14,8 +15,14 @@ from conftest import run_forced_devices as _run
 
 
 def test_pipeline_parallel_equals_sequential():
+    """Bit-match, not allclose: every stage applies stage_fn exactly once
+    per microbatch to exactly the upstream activation, so the overlapped
+    schedule must be numerically invisible.  The tick body's jaxpr must
+    open with the ppermute (transfer issued BEFORE the stage compute —
+    the overlap contract)."""
     out = _run("""
 from repro.distributed.pipeline import pipeline_apply
+from repro.kernels.dip_matmul_sharded import collective_schedule, count_collectives
 mesh = jax.make_mesh((4,), ("stage",))
 n_stages, n_micro, mb, d = 4, 8, 2, 16
 key = jax.random.PRNGKey(0)
@@ -24,14 +31,63 @@ params = {"w": jax.random.normal(key, (n_stages, d, d)) * 0.3,
 def stage_fn(p, x):
     return jnp.tanh(x @ p["w"] + p["b"])
 x = jax.random.normal(key, (n_micro, mb, d))
-got = pipeline_apply(mesh, stage_fn, params, x)
+got = jax.jit(lambda p, xs: pipeline_apply(mesh, stage_fn, p, xs))(params, x)
 ref = x
 for s in range(n_stages):
     ref = stage_fn({"w": params["w"][s], "b": params["b"][s]}, ref)
-np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-5)
+assert np.array_equal(np.asarray(got), np.asarray(ref)), (
+    float(np.abs(np.asarray(got) - np.asarray(ref)).max()))
+apply = lambda p, xs: pipeline_apply(mesh, stage_fn, p, xs)
+sched = collective_schedule(apply, params, x)
+assert sched[0] == "ppermute", sched      # transfer leads the tick body
+cnt = count_collectives(apply, params, x)
+assert cnt["ppermute"] == 1 and cnt["psum"] == 1, cnt  # scan body + broadcast
+assert cnt["all_gather"] == 0 and cnt["all_to_all"] == 0, cnt
 print("PIPELINE_OK")
 """)
     assert "PIPELINE_OK" in out
+
+
+def test_pipelined_train_step_matches_flat():
+    """plan.stages > 1 swaps the trainer's step for the pipelined one; its
+    loss must equal the flat train step exactly and its updated params must
+    match to accumulation tolerance (scan-of-scan vs flat scan)."""
+    out = _run("""
+from repro.configs.base import ArchConfig
+from repro.distributed import make_local_mesh, make_plan, pipeline_train_step_fn
+from repro.models import transformer as tf_model
+from repro.optim import AdamW
+
+mesh = make_local_mesh(1, 1, stage=4)
+cfg = ArchConfig(name="pp_t", family="dense", n_layers=4, d_model=32,
+                 n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=64, head_dim=16,
+                 remat="none", compute_dtype="float32",
+                 matmul_backend="pallas_dip", sharding="pp")
+plan = make_plan(mesh, cfg, "train")
+assert plan.stages == 4 and plan.stage == "stage"
+assert plan.explicit_backend is None  # stages run the config's backend
+
+opt = AdamW(lr=1e-3)
+params = tf_model.init_params(jax.random.PRNGKey(2), cfg)
+state = {"params": params, "opt_state": opt.init(params),
+         "step": jnp.zeros((), jnp.int32)}
+tok = jax.random.randint(jax.random.PRNGKey(3), (4, 16), 0, cfg.vocab_size)
+batch = {"tokens": tok, "labels": tok}
+
+pstep = jax.jit(pipeline_train_step_fn(cfg, opt, plan, n_micro=4))
+fstep = jax.jit(tf_model.train_step_fn(cfg, opt, fused_ce=False))
+s1, m1 = pstep(state, batch)
+s2, m2 = fstep(state, batch)
+np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]), rtol=1e-5)
+np.testing.assert_allclose(float(m1["grad_norm"]), float(m2["grad_norm"]), rtol=1e-4)
+for a, b in zip(jax.tree_util.tree_leaves(s1["params"]),
+                jax.tree_util.tree_leaves(s2["params"])):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5, rtol=1e-4)
+s1b, m1b = pstep(s1, batch)   # state threads through a second step
+assert np.isfinite(float(m1b["loss"]))
+print("PP_TRAIN_OK")
+""")
+    assert "PP_TRAIN_OK" in out
 
 
 def test_compressed_psum_shard_map():

@@ -1,5 +1,5 @@
-"""Conformance for the explicit multi-chip backends (`dip_tp` / `dip_fsdp`)
-and the ShardingPlan metadata they dispatch on.
+"""Conformance for the explicit multi-chip backends (`dip_tp` / `dip_fsdp` /
+`dip_sp` / `dip_ep`) and the ShardingPlan metadata they dispatch on.
 
 Two layers of coverage:
 
@@ -10,7 +10,13 @@ Two layers of coverage:
   ONE psum for row — including the dual-weight swiglu pair — one all_gather
   per weight for fsdp), quantized weights included (bit-exact for int8 on
   the full-K paths, per the documented tolerance on the K-split path), and a
-  reduced end-to-end model forward through ``dip_tp``.
+  reduced end-to-end model forward through ``dip_tp``.  ``dip_sp`` adds the
+  sequence-parallel contract: NO pre-kernel all_gather — the x blocks ring
+  through the kernel's load stage via ppermute issued before each fused
+  launch (column) or a single reduce_scatter (row).  ``dip_ep`` adds the
+  MoE expert-parallel contract: exactly TWO all_to_alls per ``moe_ffn``
+  call (dispatch + combine), with the dispatch issued before the
+  shared-expert compute it hides behind.
 * **Plan metadata invariants** (in-process, device-count independent): the
   ``WeightPlan`` carried on a weight survives jit / scan / grad /
   checkpoint-save/restore; restore validates plans against the live mesh;
@@ -191,6 +197,144 @@ print("QUANT_OK")
     assert "QUANT_OK" in out
 
 
+def test_dip_sp_parity_counts_and_schedule():
+    """Sequence-parallel dispatch: parity vs the single-device kernel for a
+    representative epilogue/prologue slice, then the overlap contract in the
+    jaxpr — the column path issues NO all_gather (each shard's x block is
+    gathered inside the kernel's load stage: tp-1 ppermutes, each issued
+    BEFORE the fused launch it overlaps), the row path ends in ONE
+    reduce_scatter, and int8 stays bit-exact on the full-K column path."""
+    out = _run("""
+from repro import api
+from repro.distributed.plan import WeightPlan, make_local_mesh
+from repro.kernels import ref
+from repro.kernels.dip_matmul_sharded import collective_schedule, count_collectives
+
+mesh = make_local_mesh(data=2, model=4)
+col = WeightPlan("column", axis="model", fsdp="data", mesh=mesh)
+row = WeightPlan("row", axis="model", fsdp="data", mesh=mesh)
+m, k, n = 8, 256, 256
+r = np.random.default_rng(0)
+x = jnp.asarray(r.normal(0, 1, (m, k)).astype(np.float32))
+wg = jnp.asarray(r.normal(0, 1, (k, n)).astype(np.float32))
+wu = jnp.asarray(r.normal(0, 1, (k, n)).astype(np.float32))
+b = jnp.asarray(r.normal(0, 1, (n,)).astype(np.float32))
+resid = jnp.asarray(r.normal(0, 1, (m, n)).astype(np.float32))
+
+def wrap(w, plan):
+    if isinstance(w, tuple):
+        return tuple(api.DipWeight.from_natural(wi, plan=plan) for wi in w)
+    return api.DipWeight.from_natural(w, plan=plan)
+
+for epi, w, ops in [("none", wg, ()), ("bias_gelu", wg, (b,)),
+                    ("residual", wg, (resid,)), ("swiglu", (wg, wu), ())]:
+    want = api.matmul(x, wrap(w, None), backend="pallas_dip",
+                      epilogue=epi, epilogue_operands=ops)
+    for plan, lbl in [(col, "col"), (row, "row")]:
+        got = api.matmul(x, wrap(w, plan), backend="dip_sp",
+                         epilogue=epi, epilogue_operands=ops)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-3, rtol=2e-3, err_msg=f"{lbl}/{epi}")
+g = jnp.asarray(r.normal(1, 0.1, (k,)).astype(np.float32))
+want = api.matmul(x, wrap(wg, None), backend="pallas_dip",
+                  prologue="rmsnorm", prologue_operands=(g,))
+for plan, lbl in [(col, "col"), (row, "row")]:
+    got = api.matmul(x, wrap(wg, plan), backend="dip_sp",
+                     prologue="rmsnorm", prologue_operands=(g,))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-3, rtol=2e-3, err_msg=lbl)
+print("SP_PARITY_OK")
+
+# ---- the overlap contract, jaxpr-asserted --------------------------------
+def sp(w, **kw):
+    return lambda xx: api.matmul(xx, w, backend="dip_sp", **kw)
+
+c = count_collectives(sp(wrap(wg, col)), x)
+assert c["all_gather"] == 0 and c["psum"] == 0, c      # NO pre-kernel gather
+assert c["ppermute"] == 3 and c["pallas_call"] == 4, c # tp-1 hops, tp launches
+sched = collective_schedule(sp(wrap(wg, col)), x)
+assert sched[0] == "ppermute", sched  # hop issued BEFORE the launch it hides
+assert sched[:4] == ["ppermute", "pallas_call"] * 2, sched
+c = count_collectives(sp(wrap((wg, wu), col), epilogue="swiglu"), x)
+assert c["pallas_call"] == 4 and c["psum"] == 0, c     # ONE fused launch/step
+c = count_collectives(sp(wrap(wg, row)), x)
+assert c["reduce_scatter"] == 1 and c["psum"] == 0, c  # row: scatter, not psum
+assert c["pallas_call"] == 1 and c["all_gather"] == 0, c
+print("SP_COLLECTIVES_OK")
+
+# ---- quantized -----------------------------------------------------------
+qw = api.quant.quantize(wg, "int8")
+got = api.matmul(x, qw.with_plan(col), backend="dip_sp")
+np.testing.assert_array_equal(np.asarray(got), np.asarray(api.matmul(x, qw)))
+got_row = api.matmul(x, qw.with_plan(row), backend="dip_sp")
+want_f = np.asarray(ref.ws_matmul_ref(x, wg))
+dev = np.abs(np.asarray(got_row) - want_f).max() / np.abs(want_f).max()
+assert dev < 0.02, dev
+xb, wb = x.astype(jnp.bfloat16), wg.astype(jnp.bfloat16)
+want = api.matmul(xb, wrap(wb, None), backend="pallas_dip")
+got = api.matmul(xb, wrap(wb, row), backend="dip_sp")
+np.testing.assert_allclose(np.asarray(got, np.float32),
+                           np.asarray(want, np.float32), atol=0.5, rtol=0.05)
+print("SP_QUANT_OK")
+""", devices=8, timeout=900)
+    assert "SP_PARITY_OK" in out and "SP_COLLECTIVES_OK" in out
+    assert "SP_QUANT_OK" in out
+
+
+def test_dip_ep_moe_collective_contract():
+    """Expert-parallel MoE: moe_ffn under an 'ep' plan must equal the
+    global-dispatch path under zero drops, and its jaxpr must show exactly
+    TWO all_to_alls (dispatch + combine) with the dispatch issued BEFORE the
+    shared-expert launches it overlaps, plus ONE psum (aux/drop stats)."""
+    out = _run("""
+from repro.configs.base import ArchConfig
+from repro.distributed.plan import make_local_mesh, make_plan
+from repro.models import moe, transformer as tf_model
+from repro.kernels.dip_matmul_sharded import collective_schedule, count_collectives
+
+cfg = ArchConfig(name="m", family="moe", n_layers=1, d_model=64, n_heads=2,
+                 n_kv_heads=2, d_ff=0, vocab_size=64, head_dim=32, n_experts=8,
+                 moe_top_k=2, n_shared_experts=1, d_ff_expert=32,
+                 capacity_factor=2.0, remat="none", compute_dtype="float32",
+                 matmul_backend="dip_ep", sharding="ep")
+key = jax.random.PRNGKey(0)
+lp = jax.tree_util.tree_map(lambda t: t[0], tf_model.init_params(key, cfg)["layers"])
+mesh = make_local_mesh(data=2, model=4)
+plan = make_plan(mesh, cfg, "train")
+assert plan.expert_plan is not None and plan.explicit_backend == "dip_ep"
+lp = plan.attach_params(lp)
+x = jax.random.normal(key, (4, 16, cfg.d_model))
+
+ref_out, ref_aux, ref_drop = moe.moe_ffn(x, lp, cfg)        # global dispatch
+with mesh:
+    out, aux, drop = moe.moe_ffn(x, lp, cfg, plan=plan)     # expert-parallel
+assert int(drop) == 0 and int(ref_drop) == 0
+np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                           atol=2e-3, rtol=2e-3)
+assert abs(float(ref_aux) - float(aux)) < 1e-3  # per-shard stats, averaged
+print("EP_PARITY_OK")
+
+c = count_collectives(lambda xx: moe.moe_ffn(xx, lp, cfg, plan=plan)[0], x)
+assert c["all_to_all"] == 2 and c["psum"] == 1 and c["all_gather"] == 0, c
+sched = collective_schedule(lambda xx: moe.moe_ffn(xx, lp, cfg, plan=plan)[0], x)
+# dispatch a2a BEFORE the shared-expert launches it hides behind
+assert sched.index("all_to_all") < sched.index("pallas_call"), sched
+print("EP_COLLECTIVES_OK")
+
+# seq-split fallback (batch not divisible by the axis) keeps parity
+x2 = jax.random.normal(key, (2, 16, cfg.d_model))
+ref2, _, _ = moe.moe_ffn(x2, lp, cfg)
+with mesh:
+    out2, _, d2 = moe.moe_ffn(x2, lp, cfg, plan=plan)
+assert int(d2) == 0
+np.testing.assert_allclose(np.asarray(out2), np.asarray(ref2),
+                           atol=2e-3, rtol=2e-3)
+print("EP_SEQ_SPLIT_OK")
+""", devices=8, timeout=900)
+    assert "EP_PARITY_OK" in out and "EP_COLLECTIVES_OK" in out
+    assert "EP_SEQ_SPLIT_OK" in out
+
+
 def test_model_forward_through_dip_tp_matches_gspmd():
     """End to end: a reduced transformer with cfg.sharding='tp' and
     matmul_backend='dip_tp', plans attached by the ShardingPlan, forward
@@ -357,7 +501,7 @@ def test_plan_free_weight_decomposes_to_gspmd():
     x = jnp.asarray(r.normal(0, 1, (4, 100)).astype(np.float32))
     w = jnp.asarray(r.normal(0, 1, (100, 130)).astype(np.float32))
     dw = api.DipWeight.from_natural(w)  # no plan
-    for backend in ("dip_tp", "dip_fsdp"):
+    for backend in ("dip_tp", "dip_fsdp", "dip_sp", "dip_ep"):
         got = api.matmul(x, dw, backend=backend)
         np.testing.assert_allclose(np.asarray(got), np.asarray(x @ w),
                                    atol=2e-3, rtol=2e-3, err_msg=backend)
@@ -373,12 +517,11 @@ def test_plan_free_weight_decomposes_to_gspmd():
 
 
 def test_sharded_registration_rules():
-    assert api.backend_layout("dip_tp") == "sharded"
-    assert api.backend_layout("dip_fsdp") == "sharded"
-    # sharded backends declare the full fused-epilogue AND -prologue sets
-    assert set(api.backend_epilogues("dip_tp")) == set(api.EPILOGUES)
-    assert set(api.backend_prologues("dip_tp")) == set(api.PROLOGUES)
-    assert set(api.backend_prologues("dip_fsdp")) == set(api.PROLOGUES)
+    for name in ("dip_tp", "dip_fsdp", "dip_sp", "dip_ep"):
+        assert api.backend_layout(name) == "sharded", name
+        # sharded backends declare the full fused-epilogue AND -prologue sets
+        assert set(api.backend_epilogues(name)) == set(api.EPILOGUES), name
+        assert set(api.backend_prologues(name)) == set(api.PROLOGUES), name
     with pytest.raises(ValueError, match="tiled=False"):
         api.register_backend("bad_sharded", lambda *a, **k: None,
                              layout="sharded", tiled=True)
